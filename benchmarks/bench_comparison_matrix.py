@@ -1,0 +1,70 @@
+"""Paper Table 3: head-to-head matrix — ppl / setup time / calibration data /
+memory per method.  The paper's claim: LLMEasyQuant needs the least setup
+time and calibration data at competitive accuracy.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import QuantPolicy, quantize_tree, tree_nbytes
+from repro.core.apply import extract_modules
+from repro.core.methods.smoothquant import apply_fold_to_model
+
+from .bench_perplexity import collect_taps
+from .common import emit, eval_loss, get_trained_model
+
+
+def run():
+    params, cfg = get_trained_model()
+    base_nll = eval_loss(params, cfg)
+    rows = []
+
+    def measure(name, calib_tokens, setup_fn):
+        t0 = time.time()
+        qt = setup_fn()
+        for leaf in jax.tree_util.tree_leaves(qt):
+            if hasattr(leaf, "block_until_ready"):
+                leaf.block_until_ready()
+        setup_s = time.time() - t0
+        nll = eval_loss(qt, cfg)
+        import numpy as np
+        rows.append(dict(method=name,
+                         ppl=round(float(np.exp(nll)), 3),
+                         delta_ppl_pct=round(100 * (np.exp(nll - base_nll) - 1), 2),
+                         setup_s=round(setup_s, 2),
+                         calib_tokens=calib_tokens,
+                         model_mb=round(tree_nbytes(qt) / 2**20, 2)))
+
+    pol = lambda m: QuantPolicy(method=m, min_size=4096)
+
+    # calibration-free methods (paper: LLMEasyQuant's fast path)
+    measure("symmetric_w8a8", 0, lambda: quantize_tree(params, pol("symmetric")))
+    measure("zeroquant_w8a8", 0, lambda: quantize_tree(params, pol("zeroquant")))
+
+    # SmoothQuant: small calibration budget (paper: 16-64 samples)
+    taps = collect_taps(params, cfg)
+    measure("smoothquant_w8a8", 16 * 128,
+            lambda: quantize_tree(apply_fold_to_model(params, taps), pol("symmetric")))
+
+    # GPTQ/AWQ: larger calibration budgets (paper: 128+ samples)
+    calib = {}
+    stats = {}
+    for name, w in extract_modules(params, pol("gptq")):
+        d_in = w.shape[-2] if w.ndim >= 2 else w.shape[0]
+        calib[name] = jax.random.normal(jax.random.PRNGKey(1), (256, d_in))
+        stats[name] = jnp.ones((d_in,))
+    measure("gptq_w4a16", 256 * 128,
+            lambda: quantize_tree(params, pol("gptq"), calib_x=calib))
+    measure("awq_w4a16", 128 * 128,
+            lambda: quantize_tree(params, pol("awq"), stats=stats, calib_x=calib))
+
+    emit(rows, "experiments/bench/comparison_matrix.csv")
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

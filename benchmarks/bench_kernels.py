@@ -1,0 +1,72 @@
+"""Kernel microbench: oracle-path timings + structural kernel facts.
+
+Pallas interpret mode is a correctness tool, not a perf tool, on CPU — so
+wall times here are the jnp oracle paths (what the CPU actually runs), and
+for each Pallas kernel we additionally report its STRUCTURAL numbers:
+VMEM working set per grid step and bytes touched, which are the quantities
+the TPU roofline cares about (DESIGN.md §2).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.methods.simquant import quantize_kv
+from repro.core.qtensor import quantize_symmetric
+from repro.kernels import ref
+
+from .common import emit, timeit
+
+
+def run():
+    rows = []
+    key = jax.random.PRNGKey(0)
+
+    # fused dynamic quantization at serving shapes
+    for m, k in ((256, 1024), (1024, 4096)):
+        x = jax.random.normal(key, (m, k))
+        t = timeit(jax.jit(ref.fused_quant_ref), x)
+        rows.append(dict(kernel="fused_quant", shape=f"{m}x{k}",
+                         us_per_call=round(t * 1e6, 1),
+                         vmem_block_kb=round((256 * k * 4) / 1024, 1),
+                         bytes_touched=m * k * 5))        # read f32? no: bf16+int8+scale
+
+    # W8A8 GEMM vs fp32 GEMM
+    for m, k, n in ((256, 1024, 1024), (512, 2048, 2048)):
+        x = jax.random.normal(key, (m, k))
+        w = jax.random.normal(jax.random.PRNGKey(1), (k, n))
+        qw = quantize_symmetric(w, 8, axis=(0,))
+        q_x, s_x = ref.fused_quant_ref(x)
+        t_q = timeit(jax.jit(ref.w8a8_matmul_ref), q_x, s_x, qw.values,
+                     qw.scale.reshape(1, -1))
+        t_f = timeit(jax.jit(lambda a, b: a @ b), x, w)
+        rows.append(dict(kernel="w8a8_matmul", shape=f"{m}x{k}x{n}",
+                         us_per_call=round(t_q * 1e6, 1),
+                         vmem_block_kb=round((256 * 256 * (1 + 1 + 4)) / 1024, 1),
+                         bytes_touched=int(m * k + k * n + m * n * 4)))
+        rows.append(dict(kernel="fp32_matmul(ref)", shape=f"{m}x{k}x{n}",
+                         us_per_call=round(t_f * 1e6, 1),
+                         vmem_block_kb="-",
+                         bytes_touched=int(4 * (m * k + k * n + m * n))))
+
+    # quantized-cache decode attention (the SimQuant hot path)
+    for b, s, h, kh, d in ((8, 2048, 8, 8, 64), (4, 8192, 8, 2, 64)):
+        q = jax.random.normal(key, (b, h, d))
+        kk = jax.random.normal(jax.random.PRNGKey(1), (b, s, kh, d))
+        vv = jax.random.normal(jax.random.PRNGKey(2), (b, s, kh, d))
+        qk, qv = quantize_kv(kk, vv)
+        length = jnp.full((b,), s, jnp.int32)
+        t = timeit(jax.jit(ref.kv_decode_attention_ref), q, qk.values, qk.scale,
+                   qk.zero, qv.values, qv.scale, qv.zero, length, iters=3)
+        rows.append(dict(kernel="kv_decode_attention", shape=f"b{b}s{s}h{h}kh{kh}",
+                         us_per_call=round(t * 1e6, 1),
+                         vmem_block_kb=round((512 * d * 2 + h // kh * d * 4) / 1024, 1),
+                         bytes_touched=int(2 * b * s * kh * d)))
+    emit(rows, "experiments/bench/kernels.csv")
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

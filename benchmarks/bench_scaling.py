@@ -1,0 +1,71 @@
+"""Paper Fig 8: scaling curves — quantization effect vs model size & context.
+
+Checks the paper's three scaling claims at bench scale:
+  * quantization overhead stays ~constant relative to model size
+  * memory reduction is near-linear in model size
+  * the quantized KV cache wins grow with context length
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import QuantPolicy, quantize_tree, tree_nbytes
+from repro.models import ModelConfig, forward_prefill, init_params
+from repro.models.config import LayerSpec
+from repro.serving.kv_cache import cache_nbytes
+
+from .common import emit, timeit
+
+
+def run():
+    rows = []
+    key = jax.random.PRNGKey(0)
+    pol = QuantPolicy(method="symmetric", min_size=4096)
+
+    # --- model-size sweep -------------------------------------------------
+    for d, layers in ((128, 2), (256, 4), (512, 6)):
+        cfg = ModelConfig(name=f"s{d}", vocab_size=512, d_model=d,
+                          n_layers=layers, n_heads=4, n_kv_heads=4,
+                          d_ff=4 * d, layer_pattern=(LayerSpec("attn", "dense"),),
+                          attn_chunk=64)
+        params = init_params(cfg, key)
+        qt = quantize_tree(params, pol)
+        fp_b, q_b = tree_nbytes(params), tree_nbytes(qt)
+        toks = jnp.zeros((2, 64), jnp.int32)
+        t_fp = timeit(jax.jit(lambda p, t: forward_prefill(p, t, cfg, smax=96)[0]),
+                      params, toks, iters=3)
+        t_q = timeit(jax.jit(lambda p, t: forward_prefill(p, t, cfg, smax=96)[0]),
+                     qt, toks, iters=3)
+        rows.append(dict(axis="model_size", point=f"d{d}xL{layers}",
+                         fp_mb=round(fp_b / 2**20, 2), q_mb=round(q_b / 2**20, 2),
+                         mem_ratio=round(fp_b / q_b, 2),
+                         quant_overhead=round(t_q / t_fp, 3)))
+
+    # --- context-length sweep (KV cache bytes: the SimQuant claim) ---------
+    cfg = ModelConfig(name="ctx", vocab_size=512, d_model=256, n_layers=2,
+                      n_heads=4, n_kv_heads=4, d_ff=1024,
+                      layer_pattern=(LayerSpec("attn", "dense"),), attn_chunk=64)
+    params = init_params(cfg, key)
+    for s in (128, 512, 2048):
+        toks = jnp.zeros((1, s), jnp.int32)
+        _, cache = jax.jit(lambda p, t: forward_prefill(p, t, cfg, smax=s),
+                           static_argnums=())(params, toks)
+        q_bytes = cache_nbytes(cache["entries"])
+        bf16_bytes = 2 * cfg.n_layers * s * cfg.kv_heads * cfg.hd * 2
+        rows.append(dict(axis="context", point=f"S{s}",
+                         fp_mb=round(bf16_bytes / 2**20, 3),
+                         q_mb=round(q_bytes / 2**20, 3),
+                         mem_ratio=round(bf16_bytes / q_bytes, 2),
+                         quant_overhead="-"))
+    emit(rows, "experiments/bench/scaling.csv")
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

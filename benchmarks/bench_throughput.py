@@ -1,0 +1,61 @@
+"""Paper Table 2: end-to-end serving throughput by method (tokens/second).
+
+CPU wall-clock; the reproduction target is the RELATIVE ordering (quantized
+within ~1-10% of fp on throughput while cutting memory ~2x — paper Table 2's
+LLMEasyQuant-vs-baseline deltas), not A100 absolute numbers.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import QuantPolicy, quantize_tree, tree_nbytes
+from repro.serving.engine import EngineConfig, Request, ServeEngine
+
+from .common import emit, get_trained_model
+
+
+def _serve(params, cfg, n_requests=6, new_tokens=16) -> dict:
+    eng = ServeEngine(params, cfg, EngineConfig(max_slots=4, smax=96))
+    rng = np.random.default_rng(0)
+    for i in range(n_requests):
+        eng.add_request(Request(
+            uid=i, prompt=rng.integers(0, cfg.vocab_size, size=24).astype(np.int32),
+            max_new_tokens=new_tokens))
+    # warmup jits with one tiny request wave
+    t0 = time.perf_counter()
+    eng.run()
+    dt = time.perf_counter() - t0
+    toks = eng.stats["decode_tokens"] + n_requests      # + prefill-sampled
+    return dict(tokens=toks, seconds=dt,
+                decode_steps=eng.stats["decode_steps"])
+
+
+def run():
+    params, cfg = get_trained_model()
+    rows = []
+    variants = [("fp32_baseline", params)]
+    for m in ("symmetric", "zeroquant", "simquant"):
+        variants.append((f"{m}_w8a8", quantize_tree(params, QuantPolicy(method=m, min_size=4096))))
+    variants.append(("gptq_w4a16", quantize_tree(params, QuantPolicy(method="gptq", min_size=4096))))
+
+    base_tps = None
+    for name, p in variants:
+        _ = _serve(p, cfg, n_requests=2, new_tokens=4)     # jit warmup
+        r = _serve(p, cfg)
+        tps = r["tokens"] / r["seconds"]
+        if base_tps is None:
+            base_tps = tps
+        rows.append(dict(method=name,
+                         tokens_per_s=round(tps, 2),
+                         rel_to_fp=round(tps / base_tps, 3),
+                         model_mb=round(tree_nbytes(p) / 2**20, 2),
+                         decode_steps=r["decode_steps"]))
+    emit(rows, "experiments/bench/throughput.csv")
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

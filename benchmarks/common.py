@@ -1,0 +1,138 @@
+"""Shared benchmark substrate: one small trained model + timing helpers.
+
+The perplexity-class benches (paper Tables 1/3/4, Fig 8) need a model whose
+loss is meaningfully above-chance so quantization deltas are signal, not
+noise.  We train the paper's own GPT-2-small *family* at reduced width on
+the deterministic synthetic corpus (offline container: no WikiText-2 — the
+reproduction target is the method ORDERING and relative degradation,
+DESIGN.md §10) and cache the weights under experiments/.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+from functools import partial
+from typing import Callable, Dict, Iterable, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import CheckpointManager
+from repro.data import DataConfig, SyntheticLM
+from repro.launch.steps import make_train_step
+from repro.models import ModelConfig, forward_train, init_params, lm_loss
+from repro.models.config import LayerSpec
+from repro.optim import AdamWConfig, init_state
+
+CACHE_DIR = "experiments/bench_model"
+
+BENCH_CFG = ModelConfig(
+    name="gpt2-bench",                 # paper's GPT-2 family, reduced width
+    vocab_size=512,
+    d_model=256,
+    n_layers=4,
+    n_heads=4,
+    n_kv_heads=4,
+    d_ff=1024,
+    act_fn="gelu",
+    tie_embeddings=False,              # lm_head quantizable separately
+    layer_pattern=(LayerSpec("attn", "dense"),),
+    attn_chunk=64,
+)
+
+# order-1 (bigram) chain: 512 learnable transition rows — a small model
+# trains well below the 6.24-nat uniform floor, so quantization deltas are
+# signal (order-2 hashing = 262K contexts, unlearnable at this scale)
+DATA_CFG = DataConfig(vocab_size=BENCH_CFG.vocab_size, seq_len=128,
+                      global_batch=16, seed=7, order=1)
+
+
+def get_trained_model(steps: int = 300) -> Tuple[dict, ModelConfig]:
+    """Train (or load cached) the bench model; returns (params, cfg)."""
+    mgr = CheckpointManager(CACHE_DIR, keep=1)
+    params = init_params(BENCH_CFG, jax.random.PRNGKey(0))
+    latest = mgr.latest_step()
+    if latest is not None and latest >= steps:
+        return mgr.restore(latest, params), BENCH_CFG
+
+    ocfg = AdamWConfig(lr=1e-3, warmup_steps=20, total_steps=steps,
+                       weight_decay=0.01)
+    opt = init_state(params, ocfg)
+    step_fn = jax.jit(make_train_step(BENCH_CFG, ocfg))
+    ds = SyntheticLM(DATA_CFG)
+    t0 = time.time()
+    for i in range(steps):
+        batch = jax.tree_util.tree_map(jnp.asarray, ds.batch_at(i))
+        params, opt, metrics = step_fn(params, opt, batch)
+        if i % 50 == 0:
+            print(f"  [bench-train] step {i} loss {float(metrics['loss']):.3f}",
+                  flush=True)
+    print(f"  [bench-train] done in {time.time()-t0:.0f}s "
+          f"final loss {float(metrics['loss']):.3f}")
+    mgr.save(steps, params)
+    return params, BENCH_CFG
+
+
+def eval_loss(params, cfg: ModelConfig, n_batches: int = 4) -> float:
+    """Held-out mean NLL (ppl = exp(nll))."""
+    ds = SyntheticLM(DATA_CFG)
+    losses = []
+    fwd = jax.jit(lambda p, t: forward_train(p, t, cfg)[0])
+    for i in range(n_batches):
+        batch = ds.batch_at(100_000 + i)               # unseen offsets
+        logits = fwd(params, jnp.asarray(batch["tokens"]))
+        nll = lm_loss(logits, jnp.asarray(batch["labels"]), z_coef=0.0)
+        losses.append(float(nll))
+    return float(np.mean(losses))
+
+
+def calibration_data(params, cfg: ModelConfig, n_tokens: int = 2048):
+    """Per-layer activation stats + inputs for calibrated methods."""
+    from repro.core.calibration import CalibrationCollector
+    ds = SyntheticLM(DATA_CFG)
+    fwd = jax.jit(partial(forward_train, cfg=cfg, capture=True))
+    coll = CalibrationCollector()
+    n = 0
+    i = 0
+    while n < n_tokens:
+        batch = ds.batch_at(50_000 + i)
+        _, _, taps = fwd(params, jnp.asarray(batch["tokens"][:4]))
+        # taps are stacked over scan repeats: reduce to per-tag stats
+        flat = {}
+        for tag, entry in taps.items():
+            flat[tag] = {
+                "ch_absmax": jnp.max(entry["ch_absmax"], axis=0),
+                "absmax": jnp.max(entry["absmax"]),
+                "mean": jnp.mean(entry["mean"]),
+            }
+        coll.update(flat)
+        n += 4 * DATA_CFG.seq_len
+        i += 1
+    return coll
+
+
+def timeit(fn: Callable, *args, warmup: int = 2, iters: int = 5) -> float:
+    """Median wall time (s) with block_until_ready."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        times.append(time.perf_counter() - t0)
+    return float(np.median(times))
+
+
+def emit(rows: Iterable[dict], path: str):
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    rows = list(rows)
+    if not rows:
+        return
+    keys = list(rows[0].keys())
+    with open(path, "w") as f:
+        f.write(",".join(keys) + "\n")
+        for r in rows:
+            f.write(",".join(str(r[k]) for k in keys) + "\n")
+    print(f"  -> {path}")

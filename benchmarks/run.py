@@ -1,0 +1,53 @@
+"""Benchmark harness entry point: one function per paper table/figure.
+
+``python -m benchmarks.run [--only NAME]`` prints ``name,us_per_call,derived``
+CSV rows per the repo contract, and each bench also writes its full CSV
+under experiments/bench/.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+BENCHES = [
+    ("perplexity_table1_4", "benchmarks.bench_perplexity"),
+    ("throughput_table2", "benchmarks.bench_throughput"),
+    ("comparison_table3", "benchmarks.bench_comparison_matrix"),
+    ("latency_table5", "benchmarks.bench_latency_breakdown"),
+    ("weight_dists_fig1", "benchmarks.bench_weight_dists"),
+    ("scaling_fig8", "benchmarks.bench_scaling"),
+    ("kernels", "benchmarks.bench_kernels"),
+]
+
+
+def main() -> None:
+    p = argparse.ArgumentParser()
+    p.add_argument("--only", default=None)
+    args = p.parse_args()
+
+    print("name,us_per_call,derived")
+    failures = 0
+    for name, module in BENCHES:
+        if args.only and args.only not in name:
+            continue
+        t0 = time.time()
+        try:
+            mod = __import__(module, fromlist=["run"])
+            rows = mod.run()
+            dt = (time.time() - t0) * 1e6
+            derived = ";".join(
+                f"{r.get('method', r.get('kernel', r.get('point', '?')))}="
+                f"{r.get('ppl', r.get('tokens_per_s', r.get('total_ms', r.get('us_per_call', r.get('mem_ratio', '')))))}"
+                for r in rows[:6])
+            print(f"{name},{dt:.0f},{derived}")
+        except Exception:
+            failures += 1
+            traceback.print_exc()
+            print(f"{name},-1,FAILED")
+    sys.exit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

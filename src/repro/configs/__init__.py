@@ -1,0 +1,41 @@
+"""Architecture registry: the 10 assigned configs + the paper's GPT-2.
+
+``get_config(name)`` -> full (assignment-exact) ModelConfig;
+``get_smoke_config(name)`` -> reduced same-family config for CPU tests.
+"""
+from typing import Dict
+
+from repro.models.config import ModelConfig
+
+from . import (gpt2_small, jamba_v01, llama4_maverick, mamba2_370m,
+               minicpm3_4b, musicgen_large, paligemma_3b, phi35_moe,
+               qwen2_0_5b, qwen3_1_7b, qwen3_32b)
+
+_MODULES = {
+    "minicpm3-4b": minicpm3_4b,
+    "qwen3-1.7b": qwen3_1_7b,
+    "qwen2-0.5b": qwen2_0_5b,
+    "qwen3-32b": qwen3_32b,
+    "musicgen-large": musicgen_large,
+    "llama4-maverick-400b-a17b": llama4_maverick,
+    "phi3.5-moe-42b-a6.6b": phi35_moe,
+    "jamba-v0.1-52b": jamba_v01,
+    "mamba2-370m": mamba2_370m,
+    "paligemma-3b": paligemma_3b,
+    "gpt2-small": gpt2_small,
+}
+
+ASSIGNED = [n for n in _MODULES if n != "gpt2-small"]
+ALL = list(_MODULES)
+
+
+def get_config(name: str) -> ModelConfig:
+    return _MODULES[name].FULL
+
+
+def get_smoke_config(name: str) -> ModelConfig:
+    return _MODULES[name].SMOKE
+
+
+def all_configs() -> Dict[str, ModelConfig]:
+    return {n: m.FULL for n, m in _MODULES.items()}

@@ -1,0 +1,36 @@
+"""gpt2-small (117M) — the paper's own evaluation model (Tables 1/4).
+
+12L d_model=768 12H d_ff=3072 vocab=50257.  Adaptation note: our stack is
+pre-RMSNorm / RoPE (the framework's unified block) rather than GPT-2's
+learned-positional LayerNorm — the quantization comparisons (which methods
+degrade how much) are architecture-relative, which is what the paper-repro
+benches reproduce.
+"""
+from repro.models.config import LayerSpec, ModelConfig
+
+FULL = ModelConfig(
+    name="gpt2-small",
+    vocab_size=50257,
+    d_model=768,
+    n_layers=12,
+    n_heads=12,
+    n_kv_heads=12,
+    d_ff=3072,
+    act_fn="gelu",
+    tie_embeddings=True,
+    layer_pattern=(LayerSpec("attn", "dense"),),
+)
+
+SMOKE = ModelConfig(
+    name="gpt2-smoke",
+    vocab_size=512,
+    d_model=128,
+    n_layers=2,
+    n_heads=4,
+    n_kv_heads=4,
+    d_ff=256,
+    act_fn="gelu",
+    tie_embeddings=True,
+    layer_pattern=(LayerSpec("attn", "dense"),),
+    attn_chunk=32,
+)

@@ -1,0 +1,64 @@
+"""jamba-v0.1-52b [hybrid] — 32L d_model=4096 32H(GQA kv=8) d_ff=14336
+vocab=65536, MoE 16e top-2, Mamba:attention 7:1 interleave [arXiv:2403.19887].
+
+Jamba block = 8 layers: attention at position 4, Mamba elsewhere; MoE every
+other layer (odd positions).  The Mamba mixer here is the Mamba-2/SSD dual
+(DESIGN.md §10 records the Mamba-1 -> SSD substitution as the TPU
+adaptation); d_state=16, d_inner=2*d_model per the Jamba paper.
+"""
+from repro.models.config import LayerSpec, ModelConfig
+
+
+def _jamba_pattern():
+    specs = []
+    for i in range(8):
+        mixer = "attn" if i == 4 else "ssm"
+        ffn = "moe" if i % 2 == 1 else "dense"
+        specs.append(LayerSpec(mixer, ffn))
+    return tuple(specs)
+
+
+FULL = ModelConfig(
+    name="jamba-v0.1-52b",
+    vocab_size=65536,
+    d_model=4096,
+    n_layers=32,
+    n_heads=32,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=14336,
+    n_experts=16,
+    n_experts_active=2,
+    moe_d_ff=14336,
+    ssm_state=16,
+    ssm_conv=4,
+    ssm_expand=2,
+    ssm_head_dim=64,
+    ssm_chunk=256,
+    layer_pattern=_jamba_pattern(),
+)
+
+
+def _jamba_smoke_pattern():
+    return (LayerSpec("ssm", "dense"), LayerSpec("ssm", "moe"),
+            LayerSpec("attn", "dense"), LayerSpec("ssm", "moe"))
+
+
+SMOKE = ModelConfig(
+    name="jamba-smoke",
+    vocab_size=256,
+    d_model=128,
+    n_layers=4,
+    n_heads=4,
+    n_kv_heads=2,
+    head_dim=32,
+    d_ff=256,
+    n_experts=4,
+    n_experts_active=2,
+    moe_d_ff=256,
+    ssm_state=16,
+    ssm_head_dim=32,
+    ssm_chunk=32,
+    layer_pattern=_jamba_smoke_pattern(),
+    attn_chunk=32,
+)

@@ -1,0 +1,46 @@
+"""llama4-maverick-400b-a17b [moe] — 48L d_model=5120 40H(GQA kv=8) d_ff=8192
+vocab=202048, MoE 128 experts top-1, interleaved (every other layer MoE) +
+one shared expert [hf:meta-llama/Llama-4 family; unverified tier].
+
+~397B total / ~17B active with this layout (ModelConfig.param_count checks).
+Routed experts shard EP over `data`, TP over `model`; router stays fp32.
+"""
+from repro.models.config import LayerSpec, ModelConfig
+
+FULL = ModelConfig(
+    name="llama4-maverick-400b-a17b",
+    vocab_size=202048,
+    d_model=5120,
+    n_layers=48,
+    n_heads=40,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=8192,
+    n_experts=128,
+    n_experts_active=1,
+    moe_d_ff=8192,
+    n_shared_experts=1,
+    capacity_factor=1.25,
+    layer_pattern=(LayerSpec("attn", "dense"), LayerSpec("attn", "moe")),
+    rope_theta=500000.0,
+    # 400B params: bf16 master weights + INT8-blockwise Adam moments is what
+    # fits one v5e pod (DESIGN.md §6); grads flow bf16 into fp32 moment math.
+    param_dtype="bfloat16",
+)
+
+SMOKE = ModelConfig(
+    name="llama4-maverick-smoke",
+    vocab_size=256,
+    d_model=128,
+    n_layers=2,
+    n_heads=4,
+    n_kv_heads=2,
+    head_dim=32,
+    d_ff=256,
+    n_experts=8,
+    n_experts_active=1,
+    moe_d_ff=256,
+    n_shared_experts=1,
+    layer_pattern=(LayerSpec("attn", "dense"), LayerSpec("attn", "moe")),
+    attn_chunk=32,
+)

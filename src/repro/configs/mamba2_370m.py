@@ -1,0 +1,38 @@
+"""mamba2-370m [ssm] — 48L d_model=1024 (attention-free) vocab=50280,
+ssm_state=128, SSD (state-space duality) [arXiv:2405.21060].
+
+d_inner = 2*1024 = 2048, head_dim P=64 -> 32 heads.  No KV cache exists:
+SimQuant is inapplicable by construction (DESIGN.md §5 — the paper-technique
+inapplicability case); weight quantization still applies.
+"""
+from repro.models.config import LayerSpec, ModelConfig
+
+FULL = ModelConfig(
+    name="mamba2-370m",
+    vocab_size=50280,
+    d_model=1024,
+    n_layers=48,
+    n_heads=1,                      # unused (attention-free)
+    d_ff=0,
+    ssm_state=128,
+    ssm_conv=4,
+    ssm_expand=2,
+    ssm_head_dim=64,
+    ssm_chunk=256,
+    tie_embeddings=True,
+    layer_pattern=(LayerSpec("ssm", "none"),),
+)
+
+SMOKE = ModelConfig(
+    name="mamba2-370m-smoke",
+    vocab_size=256,
+    d_model=128,
+    n_layers=2,
+    n_heads=1,
+    d_ff=0,
+    ssm_state=32,
+    ssm_head_dim=32,
+    ssm_chunk=32,
+    tie_embeddings=True,
+    layer_pattern=(LayerSpec("ssm", "none"),),
+)

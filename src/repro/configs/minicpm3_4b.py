@@ -1,0 +1,41 @@
+"""minicpm3-4b [dense/MLA] — 62L d_model=2560 40H(kv=40) d_ff=6400 vocab=73448.
+
+MLA (Multi-head Latent Attention) per MiniCPM3 [hf:openbmb/MiniCPM3-4B]:
+q_lora_rank=768, kv_lora_rank=256, qk_nope=64, qk_rope=32, v_head=64.
+SimQuant applies to the *latent* KV cache (DESIGN.md §5).
+"""
+from repro.models.config import LayerSpec, ModelConfig
+
+FULL = ModelConfig(
+    name="minicpm3-4b",
+    vocab_size=73448,
+    d_model=2560,
+    n_layers=62,
+    n_heads=40,
+    n_kv_heads=40,
+    d_ff=6400,
+    q_lora_rank=768,
+    kv_lora_rank=256,
+    qk_nope_head_dim=64,
+    qk_rope_head_dim=32,
+    v_head_dim=64,
+    layer_pattern=(LayerSpec("mla", "dense"),),
+    rope_theta=10000.0,
+)
+
+SMOKE = ModelConfig(
+    name="minicpm3-4b-smoke",
+    vocab_size=256,
+    d_model=128,
+    n_layers=2,
+    n_heads=4,
+    n_kv_heads=4,
+    d_ff=256,
+    q_lora_rank=64,
+    kv_lora_rank=32,
+    qk_nope_head_dim=16,
+    qk_rope_head_dim=8,
+    v_head_dim=16,
+    layer_pattern=(LayerSpec("mla", "dense"),),
+    attn_chunk=32,
+)

@@ -1,0 +1,35 @@
+"""musicgen-large [audio] — 48L d_model=2048 32H(kv=32) d_ff=8192 vocab=2048.
+
+Decoder-only over EnCodec tokens, 4 codebooks [arXiv:2306.05284].  The
+EnCodec frontend is a STUB: input_specs() provides per-codebook token ids;
+embeddings are summed, one LM head per codebook (delay-pattern handling is a
+data-pipeline concern, stubbed).
+"""
+from repro.models.config import LayerSpec, ModelConfig
+
+FULL = ModelConfig(
+    name="musicgen-large",
+    vocab_size=2048,
+    d_model=2048,
+    n_layers=48,
+    n_heads=32,
+    n_kv_heads=32,
+    d_ff=8192,
+    n_codebooks=4,
+    act_fn="gelu",
+    layer_pattern=(LayerSpec("attn", "dense"),),
+)
+
+SMOKE = ModelConfig(
+    name="musicgen-large-smoke",
+    vocab_size=128,
+    d_model=128,
+    n_layers=2,
+    n_heads=4,
+    n_kv_heads=4,
+    d_ff=256,
+    n_codebooks=4,
+    act_fn="gelu",
+    layer_pattern=(LayerSpec("attn", "dense"),),
+    attn_chunk=32,
+)

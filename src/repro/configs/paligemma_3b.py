@@ -1,0 +1,41 @@
+"""paligemma-3b [vlm] — 18L d_model=2048 8H(MQA kv=1) d_ff=16384 vocab=257216
+[arXiv:2407.07726].
+
+SigLIP frontend is a STUB: input_specs() provides 256 precomputed patch
+embeddings at d_model; the Gemma-style decoder attends bidirectionally over
+the image prefix (prefix_lm).  head_dim=256, GeGLU, tied embeddings.
+"""
+from repro.models.config import LayerSpec, ModelConfig
+
+FULL = ModelConfig(
+    name="paligemma-3b",
+    vocab_size=257216,
+    d_model=2048,
+    n_layers=18,
+    n_heads=8,
+    n_kv_heads=1,
+    head_dim=256,
+    d_ff=16384,
+    n_img_patches=256,
+    prefix_lm=True,
+    tie_embeddings=True,
+    act_fn="gelu",
+    layer_pattern=(LayerSpec("attn", "dense"),),
+)
+
+SMOKE = ModelConfig(
+    name="paligemma-smoke",
+    vocab_size=256,
+    d_model=128,
+    n_layers=2,
+    n_heads=4,
+    n_kv_heads=1,
+    head_dim=32,
+    d_ff=256,
+    n_img_patches=16,
+    prefix_lm=True,
+    tie_embeddings=True,
+    act_fn="gelu",
+    layer_pattern=(LayerSpec("attn", "dense"),),
+    attn_chunk=32,
+)

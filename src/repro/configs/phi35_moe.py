@@ -1,0 +1,36 @@
+"""phi3.5-moe-42b-a6.6b [moe] — 32L d_model=4096 32H(GQA kv=8) d_ff=6400
+vocab=32064, 16 experts top-2 every layer [hf:microsoft/Phi-3.5-MoE-instruct].
+"""
+from repro.models.config import LayerSpec, ModelConfig
+
+FULL = ModelConfig(
+    name="phi3.5-moe-42b-a6.6b",
+    vocab_size=32064,
+    d_model=4096,
+    n_layers=32,
+    n_heads=32,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=6400,
+    n_experts=16,
+    n_experts_active=2,
+    moe_d_ff=6400,
+    capacity_factor=1.25,
+    layer_pattern=(LayerSpec("attn", "moe"),),
+)
+
+SMOKE = ModelConfig(
+    name="phi3.5-moe-smoke",
+    vocab_size=256,
+    d_model=128,
+    n_layers=2,
+    n_heads=4,
+    n_kv_heads=2,
+    head_dim=32,
+    d_ff=256,
+    n_experts=4,
+    n_experts_active=2,
+    moe_d_ff=256,
+    layer_pattern=(LayerSpec("attn", "moe"),),
+    attn_chunk=32,
+)

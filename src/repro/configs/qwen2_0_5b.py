@@ -1,0 +1,35 @@
+"""qwen2-0.5b [dense] — 24L d_model=896 14H(GQA kv=2) d_ff=4864 vocab=151936.
+
+GQA + QKV bias + tied embeddings [arXiv:2407.10671].
+"""
+from repro.models.config import LayerSpec, ModelConfig
+
+FULL = ModelConfig(
+    name="qwen2-0.5b",
+    vocab_size=151936,
+    d_model=896,
+    n_layers=24,
+    n_heads=14,
+    n_kv_heads=2,
+    head_dim=64,
+    d_ff=4864,
+    qkv_bias=True,
+    tie_embeddings=True,
+    layer_pattern=(LayerSpec("attn", "dense"),),
+    rope_theta=1000000.0,
+)
+
+SMOKE = ModelConfig(
+    name="qwen2-0.5b-smoke",
+    vocab_size=256,
+    d_model=112,
+    n_layers=2,
+    n_heads=7,
+    n_kv_heads=1,
+    head_dim=16,
+    d_ff=224,
+    qkv_bias=True,
+    tie_embeddings=True,
+    layer_pattern=(LayerSpec("attn", "dense"),),
+    attn_chunk=32,
+)

@@ -1,0 +1,36 @@
+"""qwen3-1.7b [dense] — 28L d_model=2048 16H(GQA kv=8) d_ff=6144 vocab=151936.
+
+qk_norm (per-head RMSNorm on q,k), GQA [hf:Qwen/Qwen3-8B family].
+head_dim=128 (Qwen3 fixed head width).
+"""
+from repro.models.config import LayerSpec, ModelConfig
+
+FULL = ModelConfig(
+    name="qwen3-1.7b",
+    vocab_size=151936,
+    d_model=2048,
+    n_layers=28,
+    n_heads=16,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=6144,
+    qk_norm=True,
+    layer_pattern=(LayerSpec("attn", "dense"),),
+    rope_theta=1000000.0,
+    tie_embeddings=True,
+)
+
+SMOKE = ModelConfig(
+    name="qwen3-1.7b-smoke",
+    vocab_size=256,
+    d_model=128,
+    n_layers=2,
+    n_heads=4,
+    n_kv_heads=2,
+    head_dim=32,
+    d_ff=256,
+    qk_norm=True,
+    layer_pattern=(LayerSpec("attn", "dense"),),
+    tie_embeddings=True,
+    attn_chunk=32,
+)

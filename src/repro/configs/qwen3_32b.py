@@ -1,0 +1,33 @@
+"""qwen3-32b [dense] — 64L d_model=5120 64H(GQA kv=8) d_ff=25600 vocab=151936.
+
+qk_norm, GQA, head_dim=128 [hf:Qwen/Qwen3-8B family].
+"""
+from repro.models.config import LayerSpec, ModelConfig
+
+FULL = ModelConfig(
+    name="qwen3-32b",
+    vocab_size=151936,
+    d_model=5120,
+    n_layers=64,
+    n_heads=64,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=25600,
+    qk_norm=True,
+    layer_pattern=(LayerSpec("attn", "dense"),),
+    rope_theta=1000000.0,
+)
+
+SMOKE = ModelConfig(
+    name="qwen3-32b-smoke",
+    vocab_size=256,
+    d_model=128,
+    n_layers=2,
+    n_heads=8,
+    n_kv_heads=2,
+    head_dim=16,
+    d_ff=512,
+    qk_norm=True,
+    layer_pattern=(LayerSpec("attn", "dense"),),
+    attn_chunk=32,
+)

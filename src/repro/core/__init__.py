@@ -1,0 +1,37 @@
+"""LLMEasyQuant core: the paper's quantization contribution in JAX.
+
+Public surface:
+  * ``QTensor`` + affine quantize/dequantize primitives (paper Eq. 1/10/11)
+  * method registry (symmetric, zeropoint, zeroquant, smoothquant, simquant,
+    awq, gptq) behind one ``QuantMethod`` interface
+  * online EMA quantization state (paper Alg. 1)
+  * calibration collector (Scale Estimation phase)
+  * mixed-precision bitwidth search (paper Thm 3)
+  * ``quantize_tree`` / ``dequantize_tree`` runtime dispatch (§2.1 phases 1+3)
+"""
+from .qtensor import (
+    QTensor, absmax_scale, minmax_scale_zero, quantize_affine,
+    quantize_symmetric, quantize_asymmetric, fake_quantize,
+    quantize_blockwise, dequantize_blockwise, int_range, storage_dtype,
+)
+from .online import EmaScaleState, async_quant_update, quantize_with_state, windowed_scale
+from .calibration import CalibrationCollector, calibrate, record_activation
+from .bitwidth_search import greedy_search, SearchResult, storage_cost
+from .apply import (
+    QuantPolicy, quantize_tree, dequantize_tree, fake_quantize_tree,
+    extract_modules, tree_nbytes,
+)
+from . import methods
+from .methods import available_methods, get_method
+
+__all__ = [
+    "QTensor", "absmax_scale", "minmax_scale_zero", "quantize_affine",
+    "quantize_symmetric", "quantize_asymmetric", "fake_quantize",
+    "quantize_blockwise", "dequantize_blockwise", "int_range", "storage_dtype",
+    "EmaScaleState", "async_quant_update", "quantize_with_state", "windowed_scale",
+    "CalibrationCollector", "calibrate", "record_activation",
+    "greedy_search", "SearchResult", "storage_cost",
+    "QuantPolicy", "quantize_tree", "dequantize_tree", "fake_quantize_tree",
+    "extract_modules", "tree_nbytes",
+    "methods", "available_methods", "get_method",
+]

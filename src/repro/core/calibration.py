@@ -1,0 +1,108 @@
+"""Calibration — the paper's Scale Estimation phase (§2.1 workflow step 2).
+
+Runs the fp model over a calibration batch and collects per-layer activation
+statistics (channel-wise absmax, per-tensor absmax, mean) that SmoothQuant /
+AWQ / static symmetric backends consume.
+
+Implementation: the model's forward (models/transformer.py) is written with
+``record_activation(tag, x)`` taps that are no-ops in production.  During
+calibration we run under an ``intercept`` context that accumulates stats
+functionally via a dict-of-arrays carried alongside the forward — no global
+mutable state inside jit.  Stats use the *max over batches* combiner (exact
+absmax) or EMA (paper Eq. 2) selectable per run.
+
+Thm 8 (minimum calibration set O(D log D / eps^2)) is exercised by
+tests/core/test_calibration.py: scale-estimation error vs sample count.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+# Thread-local tap registry: calibration only runs outside jit (the forward
+# itself is jitted; taps use jax.experimental.io_callback-free design — we
+# instead re-run the model with `capture=True` which returns the taps in the
+# output pytree).
+_TLS = threading.local()
+
+
+def record_activation(taps: Optional[dict], tag: str, x: jax.Array):
+    """Record channel absmax + mean for ``tag``.  ``taps`` is None in prod.
+
+    Called from inside model code.  Returns the (possibly updated) taps dict;
+    functional-style so it composes with scan-over-layers (tags include the
+    layer index only for non-scanned callsites; scanned layers record stacked
+    stats which the collector reduces).
+    """
+    if taps is None:
+        return None
+    x32 = jax.lax.stop_gradient(x).astype(jnp.float32)
+    ch_absmax = jnp.max(jnp.abs(x32), axis=tuple(range(x32.ndim - 1)))
+    entry = {
+        "ch_absmax": ch_absmax,                          # (d,)
+        "absmax": jnp.max(jnp.abs(x32)),                 # ()
+        "mean": jnp.mean(x32),                           # ()
+    }
+    prev = taps.get(tag)
+    if prev is None:
+        taps[tag] = entry
+    else:
+        taps[tag] = {
+            "ch_absmax": jnp.maximum(prev["ch_absmax"], entry["ch_absmax"]),
+            "absmax": jnp.maximum(prev["absmax"], entry["absmax"]),
+            "mean": 0.5 * (prev["mean"] + entry["mean"]),
+        }
+    return taps
+
+
+class CalibrationCollector:
+    """Accumulates stats across calibration batches (outside jit)."""
+
+    def __init__(self, mode: str = "max", alpha: float = 0.9):
+        assert mode in ("max", "ema")
+        self.mode = mode
+        self.alpha = alpha
+        self.stats: Dict[str, Dict[str, jnp.ndarray]] = {}
+
+    def update(self, batch_taps: Dict[str, Dict[str, jnp.ndarray]]):
+        for tag, entry in batch_taps.items():
+            prev = self.stats.get(tag)
+            if prev is None:
+                self.stats[tag] = {k: jnp.asarray(v) for k, v in entry.items()}
+            elif self.mode == "max":
+                self.stats[tag] = {
+                    "ch_absmax": jnp.maximum(prev["ch_absmax"], entry["ch_absmax"]),
+                    "absmax": jnp.maximum(prev["absmax"], entry["absmax"]),
+                    "mean": 0.5 * (prev["mean"] + entry["mean"]),
+                }
+            else:  # EMA combiner (paper Eq. 2 applied batch-wise)
+                a = self.alpha
+                self.stats[tag] = {
+                    k: a * prev[k] + (1 - a) * jnp.asarray(entry[k]) for k in prev
+                }
+
+    def channel_absmax(self, tag: str) -> jnp.ndarray:
+        return self.stats[tag]["ch_absmax"]
+
+    def absmax(self, tag: str) -> float:
+        return float(self.stats[tag]["absmax"])
+
+    def tags(self):
+        return sorted(self.stats)
+
+
+def calibrate(forward_with_taps: Callable, batches, mode: str = "max") -> CalibrationCollector:
+    """Drive calibration: ``forward_with_taps(batch) -> taps_dict``.
+
+    ``forward_with_taps`` is typically ``jax.jit(partial(model.apply,
+    params, capture=True))`` returning the taps pytree as an output.
+    """
+    coll = CalibrationCollector(mode=mode)
+    for batch in batches:
+        taps = forward_with_taps(batch)
+        coll.update(jax.device_get(taps) if isinstance(taps, dict) else taps)
+    return coll

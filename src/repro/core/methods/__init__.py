@@ -1,0 +1,20 @@
+"""Quantization backends (paper §2.1 Algorithm Backend Layer).
+
+Importing this package registers every backend in ``base.REGISTRY``.
+"""
+from . import base
+from . import symmetric
+from . import zeropoint
+from . import zeroquant
+from . import smoothquant
+from . import simquant
+from . import awq
+from . import gptq
+
+from .base import QuantMethod, available_methods, get_method
+
+__all__ = [
+    "QuantMethod", "available_methods", "get_method",
+    "base", "symmetric", "zeropoint", "zeroquant", "smoothquant",
+    "simquant", "awq", "gptq",
+]

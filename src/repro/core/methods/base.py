@@ -1,0 +1,55 @@
+"""Unified QuantMethod interface (paper §2.1 Algorithm Backend Layer).
+
+Every backend implements the same three-phase contract the paper's workflow
+describes (Module Extraction -> Scale Estimation -> Quantization ->
+Evaluation):
+
+  * ``needs_calibration``: whether Scale Estimation requires activation stats.
+  * ``quantize_weight(w, stats)``  -> QTensor (packed weights).
+  * ``quantize_activation(a, state)`` -> (QTensor, new_state) for runtime
+    activation quantization (static scales or Alg-1 online EMA state).
+
+Methods that transform weights *before* quantization (SmoothQuant's scale
+migration, AWQ's searched scales) expose ``fold(w_pair, stats)`` so the
+Execution Runtime Layer can rewrite adjacent (norm, linear) pairs in place.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Optional
+
+REGISTRY: Dict[str, "QuantMethod"] = {}
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantMethod:
+    """Descriptor + function bundle for one quantization backend."""
+
+    name: str
+    bits_weight: int
+    bits_act: Optional[int]            # None = weight-only method
+    needs_calibration: bool
+    weight_only: bool
+    quantize_weight: Callable          # (w, *, stats=None, **kw) -> QTensor
+    act_scale_fn: Optional[Callable] = None   # (a | stats) -> scale
+    description: str = ""
+
+    @property
+    def quantizes_activations(self) -> bool:
+        return self.bits_act is not None
+
+
+def register(method: QuantMethod) -> QuantMethod:
+    REGISTRY[method.name] = method
+    return method
+
+
+def get_method(name: str) -> QuantMethod:
+    try:
+        return REGISTRY[name]
+    except KeyError:
+        raise KeyError(f"unknown quant method {name!r}; available: {sorted(REGISTRY)}")
+
+
+def available_methods():
+    return sorted(REGISTRY)

@@ -1,0 +1,65 @@
+"""SimQuant backend — KV-cache quantization (after Hooper et al., KVQuant).
+
+The paper positions SimQuant as its KV-cache method for long-sequence
+inference (Table 5 shows it winning T_load/T_gemm at 32K context).  Following
+the KVQuant observation:
+
+  * **Keys** have strong per-channel (head_dim) outlier structure (RoPE
+    rotates pairs of channels coherently) -> per-channel asymmetric int8.
+  * **Values** are channel-homogeneous but token-varying -> per-token
+    asymmetric int8.
+
+Both use the min/max affine mapping, so Thm 2's reconstruction bound
+``(max-min)/(2^b-1)`` applies elementwise.
+
+This module provides the pure quantization math; the serving-side cache
+layout (slot ring buffer, sequence sharding, Pallas decode kernel) lives in
+``serving/kv_cache.py`` and ``kernels/kv_decode_attention.py``.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax.numpy as jnp
+
+from ..qtensor import QTensor, minmax_scale_zero, quantize_affine
+from .base import QuantMethod, register
+
+
+def quantize_keys(k: jnp.ndarray, *, bits: int = 8) -> QTensor:
+    """k: (..., seq, heads, head_dim) -> per-channel over head_dim.
+
+    Scales are shared along the sequence axis (reduce over seq) so that the
+    decode kernel can keep them resident in VMEM while streaming the cache.
+    """
+    seq_axis = k.ndim - 3
+    scale, zero = minmax_scale_zero(k, bits=bits, axis=(seq_axis,))
+    return quantize_affine(k, scale, zero, bits=bits, axis=(seq_axis,))
+
+
+def quantize_values(v: jnp.ndarray, *, bits: int = 8) -> QTensor:
+    """v: (..., seq, heads, head_dim) -> per-token (reduce over head_dim)."""
+    scale, zero = minmax_scale_zero(v, bits=bits, axis=(-1,))
+    return quantize_affine(v, scale, zero, bits=bits, axis=(-1,))
+
+
+def quantize_kv(k: jnp.ndarray, v: jnp.ndarray, *, bits: int = 8) -> Tuple[QTensor, QTensor]:
+    return quantize_keys(k, bits=bits), quantize_values(v, bits=bits)
+
+
+def quantize_weight(w, *, stats=None, bits: int = 8) -> QTensor:
+    """SimQuant is a cache method; weights fall back to per-channel minmax."""
+    axis = (0,) if w.ndim >= 2 else None
+    scale, zero = minmax_scale_zero(w, bits=bits, axis=axis)
+    return quantize_affine(w, scale, zero, bits=bits, axis=axis)
+
+
+METHOD = register(QuantMethod(
+    name="simquant",
+    bits_weight=8,
+    bits_act=8,
+    needs_calibration=False,
+    weight_only=False,
+    quantize_weight=quantize_weight,
+    description="SimQuant: INT8 KV cache (per-channel K, per-token V, asymmetric); minmax weights.",
+))

@@ -1,0 +1,47 @@
+"""Symmetric (AbsMax) quantization backend — the paper's baseline INT8 method.
+
+Per-channel symmetric weights (scale per output channel) and per-token
+symmetric activations; this is the 'Sym Quantize 8bit' row of paper Table 4
+and the W8A8 fast path of the fused kernel (§3.2).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax.numpy as jnp
+
+from ..qtensor import QTensor, absmax_scale, quantize_affine
+from .base import QuantMethod, register
+
+
+def quantize_weight(w, *, stats=None, bits: int = 8, per_channel: bool = True) -> QTensor:
+    """Weights (in_features, out_features): one scale per output channel."""
+    axis = (0,) if (per_channel and w.ndim >= 2) else None
+    scale = absmax_scale(w, bits=bits, axis=axis)
+    return quantize_affine(w, scale, None, bits=bits, axis=axis)
+
+
+def quantize_activation(a, *, scale=None, bits: int = 8) -> QTensor:
+    """Activations (..., features): dynamic per-token scale unless given."""
+    if scale is None:
+        scale = absmax_scale(a, bits=bits, axis=(-1,))
+    return quantize_affine(a, scale, None, bits=bits, axis=(-1,))
+
+
+def act_scale_from_stats(absmax, bits: int = 8, eps: float = 1e-8):
+    """Static activation scale from calibration absmax stats (per-tensor)."""
+    from ..qtensor import int_range
+    qmax = float(int_range(bits)[1])
+    return jnp.maximum(jnp.asarray(absmax, jnp.float32), eps) / qmax
+
+
+METHOD = register(QuantMethod(
+    name="symmetric",
+    bits_weight=8,
+    bits_act=8,
+    needs_calibration=False,
+    weight_only=False,
+    quantize_weight=quantize_weight,
+    act_scale_fn=act_scale_from_stats,
+    description="Per-channel symmetric INT8 weights + dynamic per-token INT8 activations (AbsMax).",
+))

@@ -1,0 +1,32 @@
+"""ZeroPoint (asymmetric) quantization backend — paper Table 4 'ZeroPoint'.
+
+Uses the min/max affine mapping with an integer offset z (paper Eq. 1), which
+wins over symmetric quantization on skewed distributions (e.g. post-GELU
+activations) at the cost of the extra zero-point correction term in the GEMM.
+"""
+from __future__ import annotations
+
+from ..qtensor import QTensor, minmax_scale_zero, quantize_affine
+from .base import QuantMethod, register
+
+
+def quantize_weight(w, *, stats=None, bits: int = 8, per_channel: bool = True) -> QTensor:
+    axis = (0,) if (per_channel and w.ndim >= 2) else None
+    scale, zero = minmax_scale_zero(w, bits=bits, axis=axis)
+    return quantize_affine(w, scale, zero, bits=bits, axis=axis)
+
+
+def quantize_activation(a, *, bits: int = 8) -> QTensor:
+    scale, zero = minmax_scale_zero(a, bits=bits, axis=(-1,))
+    return quantize_affine(a, scale, zero, bits=bits, axis=(-1,))
+
+
+METHOD = register(QuantMethod(
+    name="zeropoint",
+    bits_weight=8,
+    bits_act=8,
+    needs_calibration=False,
+    weight_only=False,
+    quantize_weight=quantize_weight,
+    description="Asymmetric (zero-point) INT8 weights/activations from min/max range.",
+))

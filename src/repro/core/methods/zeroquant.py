@@ -1,0 +1,57 @@
+"""ZeroQuant backend (Yao et al., 2022) — group-wise weights, token-wise acts.
+
+ZeroQuant's contribution is granularity: weights are quantized in hardware-
+friendly groups along the input dimension (finer than per-channel, coarser
+than per-element), activations per token, dynamically.  This is the paper's
+'ZeroQuant Func' row.  On TPU the group size is chosen as a multiple of the
+128-wide lane dimension so group scales broadcast inside a VREG tile.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from ..qtensor import QTensor, absmax_scale, quantize_affine
+from .base import QuantMethod, register
+
+DEFAULT_GROUP = 128
+
+
+def quantize_weight(w, *, stats=None, bits: int = 8, group_size: int = DEFAULT_GROUP) -> QTensor:
+    """Group-wise symmetric quantization of (in_features, out_features).
+
+    The input dim is split into groups of ``group_size``; one scale per
+    (group, out_channel).  Falls back to per-channel when in_features is not
+    divisible (keeps the method total so apply.py never special-cases).
+    """
+    if w.ndim != 2 or w.shape[0] % group_size != 0:
+        axis = (0,) if w.ndim >= 2 else None
+        scale = absmax_scale(w, bits=bits, axis=axis)
+        return quantize_affine(w, scale, None, bits=bits, axis=axis)
+    d_in, d_out = w.shape
+    g = w.reshape(d_in // group_size, group_size, d_out)
+    scale = absmax_scale(g, bits=bits, axis=(1,))
+    q = quantize_affine(g, scale, None, bits=bits, axis=(1,))
+    # Keep the grouped layout inside QTensor; dequantize() broadcasts the
+    # (nG, 1, d_out) scale, callers reshape back via .reshape(w.shape).
+    return q
+
+
+def quantize_activation(a, *, bits: int = 8) -> QTensor:
+    """Token-wise dynamic symmetric quantization (ZeroQuant's act scheme)."""
+    scale = absmax_scale(a, bits=bits, axis=(-1,))
+    return quantize_affine(a, scale, None, bits=bits, axis=(-1,))
+
+
+def dequantize_weight(q: QTensor, shape) -> jnp.ndarray:
+    return q.dequantize().reshape(shape)
+
+
+METHOD = register(QuantMethod(
+    name="zeroquant",
+    bits_weight=8,
+    bits_act=8,
+    needs_calibration=False,
+    weight_only=False,
+    quantize_weight=quantize_weight,
+    description="Group-wise (128) symmetric weights + token-wise dynamic activations (ZeroQuant).",
+))

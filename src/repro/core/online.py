@@ -1,0 +1,102 @@
+"""Online quantization with runtime scale tracking (paper §3.1, Algorithm 1).
+
+The paper's AsyncQuant tracks the activation scale with an exponential moving
+average so each serving step quantizes against a smoothed range instead of
+re-calibrating:
+
+    r_t     = absmax(X_t)                                        (Alg 1 l.2)
+    delta_t = alpha * delta_{t-1} + (1-alpha) * max(r_t, eps)    (Eq 2)
+    z_t     = -round(mu_t / delta_t)                             (Alg 1 l.4)
+    X_hat   = clip(round(X/delta_t) + z_t, -128, 127)            (Alg 1 l.5)
+
+State is a pytree carried through the jitted serve loop — the functional
+analogue of the paper's per-worker mutable tracker.  In the distributed
+setting the raw statistics (absmax, mean) are reduced across data-parallel
+workers *before* the EMA update (see distributed/scale_sync.py), which gives
+every worker bit-identical (delta, z) — the consistency property of Thm 4.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .qtensor import QTensor, int_range, quantize_affine
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class EmaScaleState:
+    """Per-tensor (or per-channel) running quantization metadata."""
+
+    delta: jax.Array            # running scale (pre-division by qmax)
+    mu: jax.Array               # running mean (for the zero offset)
+    step: jax.Array             # int32 update counter (for bias-correct init)
+
+    @staticmethod
+    def init(shape=(), dtype=jnp.float32) -> "EmaScaleState":
+        return EmaScaleState(delta=jnp.ones(shape, dtype),
+                             mu=jnp.zeros(shape, dtype),
+                             step=jnp.zeros((), jnp.int32))
+
+
+def async_quant_update(x: jax.Array, state: EmaScaleState, *, alpha: float = 0.9,
+                       eps: float = 1e-6, bits: int = 8,
+                       reduce_fn=None) -> Tuple[QTensor, EmaScaleState]:
+    """One AsyncQuant step (Algorithm 1), functional.
+
+    ``reduce_fn`` optionally reduces the raw stats across a mesh axis
+    (e.g. ``lambda s: jax.lax.pmax(s, 'data')``) before the EMA update so all
+    shards track identical scales (paper Eq. 7-8 via collectives).
+    """
+    qmin, qmax = int_range(bits)
+    r = jnp.max(jnp.abs(x)).astype(state.delta.dtype)          # absmax(X^(p))
+    m = jnp.mean(x).astype(state.mu.dtype)
+    if reduce_fn is not None:
+        r = reduce_fn(r)
+        m = reduce_fn(m)
+    first = (state.step == 0)
+    # Bias-corrected init: first observation seeds the EMA instead of decaying
+    # from the arbitrary init value (Alg 1 assumes a warm delta_{t-1}).
+    delta_prev = jnp.where(first, r, state.delta)
+    delta_t = alpha * delta_prev + (1.0 - alpha) * jnp.maximum(r, eps)
+    mu_t = jnp.where(first, m, alpha * state.mu + (1.0 - alpha) * m)
+
+    scale = jnp.maximum(delta_t, eps) / qmax
+    zero = -jnp.round(mu_t / jnp.maximum(delta_t, eps) * qmax)
+    zero = jnp.clip(zero, qmin, qmax).astype(jnp.float32)
+    q = quantize_affine(x, scale, zero, bits=bits)
+    new_state = EmaScaleState(delta=delta_t, mu=mu_t, step=state.step + 1)
+    return q, new_state
+
+
+def quantize_with_state(x: jax.Array, state: EmaScaleState, *, bits: int = 8,
+                        eps: float = 1e-6) -> QTensor:
+    """Quantize against the *current* tracked scale without updating it.
+
+    Used on the decode fast path where the scale is refreshed every K steps
+    (runtime adaptation, paper §3.4) rather than every token.
+    """
+    qmin, qmax = int_range(bits)
+    scale = jnp.maximum(state.delta, eps) / qmax
+    zero = jnp.clip(-jnp.round(state.mu / jnp.maximum(state.delta, eps) * qmax),
+                    qmin, qmax).astype(jnp.float32)
+    return quantize_affine(x, scale, zero, bits=bits)
+
+
+def windowed_scale(window_absmax: jax.Array, *, alpha: float = 0.9,
+                   eps0: float = 1e-6) -> Tuple[jax.Array, jax.Array]:
+    """Paper Eq. 9: delta_t = EMA_alpha(max over window), eps_t = max(eps0, std).
+
+    ``window_absmax``: (W,) absmax of the last W activation batches.
+    Returns (delta, eps) for fused recalibration.
+    """
+    w = window_absmax.astype(jnp.float32)
+    n = w.shape[0]
+    weights = (1.0 - alpha) * alpha ** jnp.arange(n - 1, -1, -1)
+    weights = weights / jnp.sum(weights)
+    delta = jnp.sum(w * weights)
+    eps = jnp.maximum(eps0, jnp.std(w))
+    return delta, eps

@@ -1,0 +1,209 @@
+"""QTensor: the unified quantized-tensor representation (paper Eq. 1/10/11).
+
+The paper defines one quantization mapping
+
+    X_hat = Q_theta(X) = clip(round(X / delta) + z, range)          (Eq. 1)
+    X     = Dequantize(X_hat, delta, z) = delta * (X_hat - z)       (Eq. 11)
+
+parameterized by a scale ``delta`` and offset ``z``.  Every backend in
+``core/methods`` produces a :class:`QTensor` through these two primitives, so
+the whole framework speaks a single wire format: packed integer values plus
+broadcastable scale / zero-point metadata.
+
+``QTensor`` is a jax pytree, so it can live inside jitted functions, be a
+carry of ``lax.scan``, be sharded with ``NamedSharding``, and be checkpointed
+like any other array pytree.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# Integer ranges for supported bitwidths.  int4 uses the native jnp.int4
+# dtype (TPU packs two nibbles per byte); sub-4-bit widths are stored in int8
+# carriers with a narrowed clip range (paper's search space B = {2,3,4,8}).
+_BITWIDTH_RANGE = {
+    2: (-2, 1),
+    3: (-4, 3),
+    4: (-8, 7),
+    8: (-128, 127),
+}
+
+_STORAGE_DTYPE = {
+    2: jnp.int8,
+    3: jnp.int8,
+    4: jnp.int4,
+    8: jnp.int8,
+}
+
+
+def int_range(bits: int) -> Tuple[int, int]:
+    """(qmin, qmax) of a signed ``bits``-wide integer code."""
+    try:
+        return _BITWIDTH_RANGE[bits]
+    except KeyError:
+        raise ValueError(f"unsupported bitwidth {bits}; supported: {sorted(_BITWIDTH_RANGE)}")
+
+
+def storage_dtype(bits: int):
+    return _STORAGE_DTYPE[bits]
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class QTensor:
+    """Packed integer tensor + affine metadata.
+
+    Attributes:
+      values: integer codes, ``storage_dtype(bits)``.
+      scale:  positive fp scale ``delta``, broadcastable to ``values.shape``.
+      zero:   integer-valued (stored fp for grad-friendliness) offset ``z``,
+              broadcastable to ``values.shape``; ``None`` means symmetric.
+      bits:   logical bitwidth (static / aux data).
+      axis:   quantization axes the scale was reduced over (static, for
+              introspection + serialization metadata only).
+    """
+
+    values: jax.Array
+    scale: jax.Array
+    zero: Optional[jax.Array] = None
+    bits: int = dataclasses.field(default=8, metadata=dict(static=True))
+    axis: Optional[Tuple[int, ...]] = dataclasses.field(default=None, metadata=dict(static=True))
+    # AWQ-style per-input-channel fold: dequantize() divides by this factor
+    # (broadcastable); keeps the packed format per-out-channel + one vector.
+    pre_scale: Optional[jax.Array] = None
+
+    # -- pytree-friendly helpers ------------------------------------------------
+    @property
+    def shape(self):
+        return self.values.shape
+
+    @property
+    def ndim(self):
+        return self.values.ndim
+
+    def dequantize(self, dtype=jnp.float32) -> jax.Array:
+        """DequantizeLinear (paper Eq. 11): ``delta * (x_hat - z)``."""
+        v = self.values.astype(dtype)
+        if self.zero is not None:
+            v = v - self.zero.astype(dtype)
+        v = v * self.scale.astype(dtype)
+        if self.pre_scale is not None:
+            v = v / self.pre_scale.astype(dtype)
+        return v
+
+    def nbytes_packed(self) -> int:
+        """Model-size accounting for the comparison-matrix benchmark."""
+        n = int(np.prod(self.shape)) * self.bits / 8.0
+        n += self.scale.size * self.scale.dtype.itemsize
+        if self.zero is not None:
+            n += self.zero.size * self.zero.dtype.itemsize
+        if self.pre_scale is not None:
+            n += self.pre_scale.size * self.pre_scale.dtype.itemsize
+        return int(np.ceil(n))
+
+
+def _reduce_axes(x: jax.Array, axis: Optional[Sequence[int]]):
+    """Normalize ``axis`` (None = per-tensor) to a tuple of reduce axes."""
+    if axis is None:
+        return tuple(range(x.ndim))
+    if isinstance(axis, int):
+        axis = (axis,)
+    return tuple(a % x.ndim for a in axis)
+
+
+def absmax_scale(x: jax.Array, bits: int = 8, axis: Optional[Sequence[int]] = None,
+                 eps: float = 1e-8) -> jax.Array:
+    """Symmetric scale ``delta = absmax(X)/qmax`` (paper AbsMax backend)."""
+    red = _reduce_axes(x, axis)
+    qmax = float(int_range(bits)[1])
+    amax = jnp.max(jnp.abs(x), axis=red, keepdims=True)
+    return jnp.maximum(amax, eps) / qmax
+
+
+def minmax_scale_zero(x: jax.Array, bits: int = 8, axis: Optional[Sequence[int]] = None,
+                      eps: float = 1e-8) -> Tuple[jax.Array, jax.Array]:
+    """Asymmetric (zero-point) scale/offset from the min/max range.
+
+    ``delta = (max - min) / (qmax - qmin)``; ``z = qmin - round(min/delta)``.
+    This realizes the paper's ZeroPoint backend and SimQuant's per-channel
+    min/max quantizer (Thm 2's error bound ``(max-min)/(2^b-1)`` follows).
+    """
+    red = _reduce_axes(x, axis)
+    qmin, qmax = int_range(bits)
+    xmin = jnp.min(x, axis=red, keepdims=True)
+    xmax = jnp.max(x, axis=red, keepdims=True)
+    delta = jnp.maximum((xmax - xmin) / (qmax - qmin), eps)
+    zero = qmin - jnp.round(xmin / delta)
+    return delta, zero
+
+
+def quantize_affine(x: jax.Array, scale: jax.Array, zero: Optional[jax.Array] = None,
+                    bits: int = 8, axis: Optional[Sequence[int]] = None) -> QTensor:
+    """QuantizeLinear (paper Eq. 1/10) with explicit metadata."""
+    qmin, qmax = int_range(bits)
+    q = jnp.round(x / scale)
+    if zero is not None:
+        q = q + zero
+    q = jnp.clip(q, qmin, qmax).astype(storage_dtype(bits))
+    red = _reduce_axes(x, axis) if axis is not None else None
+    return QTensor(values=q, scale=scale.astype(jnp.float32),
+                   zero=None if zero is None else zero.astype(jnp.float32),
+                   bits=bits, axis=red)
+
+
+def quantize_symmetric(x: jax.Array, bits: int = 8, axis: Optional[Sequence[int]] = None,
+                       eps: float = 1e-8) -> QTensor:
+    """One-shot symmetric quantization (scale estimated from ``x``)."""
+    scale = absmax_scale(x, bits=bits, axis=axis, eps=eps)
+    return quantize_affine(x, scale, None, bits=bits, axis=axis)
+
+
+def quantize_asymmetric(x: jax.Array, bits: int = 8, axis: Optional[Sequence[int]] = None,
+                        eps: float = 1e-8) -> QTensor:
+    """One-shot zero-point quantization (scale+zero estimated from ``x``)."""
+    scale, zero = minmax_scale_zero(x, bits=bits, axis=axis, eps=eps)
+    return quantize_affine(x, scale, zero, bits=bits, axis=axis)
+
+
+def fake_quantize(x: jax.Array, bits: int = 8, axis: Optional[Sequence[int]] = None,
+                  symmetric: bool = True) -> jax.Array:
+    """Quantize-dequantize roundtrip in one dtype-preserving op.
+
+    Used by calibration-time error probes and the bitwidth search objective
+    (Thm 3), where we need the quantization *error* but not the packed codes.
+    """
+    q = quantize_symmetric(x, bits, axis) if symmetric else quantize_asymmetric(x, bits, axis)
+    return q.dequantize(jnp.promote_types(x.dtype, jnp.float32)).astype(x.dtype)
+
+
+@partial(jax.jit, static_argnames=("bits", "block"))
+def quantize_blockwise(x: jax.Array, bits: int = 8, block: int = 256) -> QTensor:
+    """Group/block-wise symmetric quantization over the flattened tensor.
+
+    This is the ZeroQuant-style group-wise weight scheme and is also used for
+    the int8 optimizer states.  The tensor is viewed as (nblocks, block) with
+    one scale per block; remainder is padded (pad values quantize to 0 and are
+    sliced off on dequant by the caller via shape metadata in apply.py).
+    """
+    flat = x.reshape(-1)
+    n = flat.shape[0]
+    nblocks = -(-n // block)
+    pad = nblocks * block - n
+    flat = jnp.pad(flat, (0, pad))
+    grouped = flat.reshape(nblocks, block)
+    scale = absmax_scale(grouped, bits=bits, axis=(1,))
+    q = quantize_affine(grouped, scale, None, bits=bits, axis=(1,))
+    return q
+
+
+def dequantize_blockwise(q: QTensor, shape, dtype=jnp.float32) -> jax.Array:
+    """Inverse of :func:`quantize_blockwise` back to ``shape``."""
+    flat = q.dequantize(dtype).reshape(-1)
+    n = int(np.prod(shape))
+    return flat[:n].reshape(shape)

@@ -1,0 +1,4 @@
+"""Data pipeline: deterministic synthetic LM streams (offline container)."""
+from .pipeline import DataConfig, SyntheticLM, calibration_batches
+
+__all__ = ["DataConfig", "SyntheticLM", "calibration_batches"]

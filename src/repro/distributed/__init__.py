@@ -1,0 +1,14 @@
+"""Distributed Controller Layer: sharding rules, scale sync, compression,
+elastic re-mesh, straggler watchdog."""
+from .sharding import (
+    axis_rules, constrain, spec, resolve, active_mesh,
+    param_spec, param_logical_axes, tree_param_shardings, DEFAULT_RULES,
+)
+from .elastic import RemeshPlan, plan_remesh, build_mesh
+from .watchdog import Watchdog, StepRecord
+
+__all__ = [
+    "axis_rules", "constrain", "spec", "resolve", "active_mesh",
+    "param_spec", "param_logical_axes", "tree_param_shardings", "DEFAULT_RULES",
+    "RemeshPlan", "plan_remesh", "build_mesh", "Watchdog", "StepRecord",
+]

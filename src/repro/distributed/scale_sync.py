@@ -1,0 +1,71 @@
+"""Distributed quantization-scale synchronization (paper §3.3, Eq. 7-8, Thm 4).
+
+The paper all-gathers per-shard (delta, z) over NCCL so every rank quantizes
+with identical parameters.  TPU/JAX adaptation (DESIGN.md §2): the *raw
+statistics* are reduced with ``lax.pmax`` / ``lax.pmean`` over the mesh axes
+inside ``shard_map`` — max-of-absmax is the exact global absmax (a strictly
+stronger consistency than gather-then-union, with one collective instead of
+two).  Thm 4's determinism argument carries over verbatim: psum/pmax are
+deterministic collectives, so all shards hold bit-identical (delta, z).
+
+``sync_ema_state`` is the distributed version of Alg. 1: per-shard stats ->
+collective reduce -> shared EMA update.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import shard_map
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.core.online import EmaScaleState
+
+
+def global_absmax(x: jax.Array, axis_names: Sequence[str]) -> jax.Array:
+    """Inside shard_map/pjit: exact global absmax across mesh axes."""
+    r = jnp.max(jnp.abs(x))
+    for ax in axis_names:
+        r = jax.lax.pmax(r, ax)
+    return r
+
+
+def global_mean(x: jax.Array, axis_names: Sequence[str]) -> jax.Array:
+    m = jnp.mean(x)
+    for ax in axis_names:
+        m = jax.lax.pmean(m, ax)
+    return m
+
+
+def sync_scale_allgather(delta_local: jax.Array, axis_name: str) -> jax.Array:
+    """Paper Eq. 7 literal form: all-gather shards' scales then reduce (max).
+
+    Provided for parity benchmarking against the pmax fast path; both yield
+    identical results (tests/distributed assert this)."""
+    gathered = jax.lax.all_gather(delta_local, axis_name)     # (P, ...)
+    return jnp.max(gathered, axis=0)
+
+
+def make_synced_quant_step(mesh: Mesh, *, alpha: float = 0.9, bits: int = 8,
+                           axes: Tuple[str, ...] = ("data",)):
+    """Build a jitted distributed AsyncQuant step over ``mesh``.
+
+    Returns f(x_sharded, state) -> (qvalues int8 sharded like x, new state
+    replicated).  x shards along its leading dim over ``axes``.
+    """
+    from repro.core.online import async_quant_update
+
+    in_spec = (P(axes), P())
+    out_spec = (P(axes), P())
+
+    @partial(shard_map, mesh=mesh, in_specs=in_spec, out_specs=out_spec,
+             check_vma=False)
+    def step(x, state):
+        reduce_fn = lambda s: jax.lax.pmax(s, axes)
+        q, new_state = async_quant_update(x, state, alpha=alpha, bits=bits,
+                                          reduce_fn=reduce_fn)
+        return q.values, new_state
+
+    return jax.jit(step)

@@ -1,0 +1,96 @@
+"""Step-time watchdog: straggler detection + restart policy (DESIGN.md §4).
+
+In SPMD there is no per-step work stealing — the mitigation at fleet scale
+is *detect and act*: flag hosts whose step times blow out (pre-empted VM,
+failing HBM, thermally throttled chip), checkpoint, and evict/restart.  The
+watchdog implements the detection + decision layer, host-side:
+
+  * rolling median/MAD of step durations,
+  * straggler flag when a step exceeds ``threshold`` x median,
+  * escalation to ``RESTART`` after ``patience`` consecutive flags
+    (the launcher's auto-restart loop consumes this),
+  * hang detection via a deadline timer (collective stuck -> no step end).
+
+Tests inject synthetic delays; the launcher wires ``on_restart`` to the
+checkpoint-and-exit path.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from collections import deque
+from typing import Callable, Deque, List, Optional
+
+
+@dataclasses.dataclass
+class StepRecord:
+    step: int
+    seconds: float
+    straggler: bool
+
+
+class Watchdog:
+    def __init__(self, *, window: int = 50, threshold: float = 2.5,
+                 patience: int = 3, hang_timeout: Optional[float] = None,
+                 on_hang: Optional[Callable[[], None]] = None):
+        self.window: Deque[float] = deque(maxlen=window)
+        self.threshold = threshold
+        self.patience = patience
+        self.hang_timeout = hang_timeout
+        self.on_hang = on_hang
+        self.records: List[StepRecord] = []
+        self._consecutive = 0
+        self._t0: Optional[float] = None
+        self._timer: Optional[threading.Timer] = None
+
+    # -- step lifecycle -------------------------------------------------------
+    def step_begin(self):
+        self._t0 = time.monotonic()
+        if self.hang_timeout:
+            self._timer = threading.Timer(self.hang_timeout, self._hang)
+            self._timer.daemon = True
+            self._timer.start()
+
+    def _hang(self):
+        if self.on_hang:
+            self.on_hang()
+
+    def step_end(self, step: int) -> StepRecord:
+        assert self._t0 is not None, "step_end without step_begin"
+        if self._timer:
+            self._timer.cancel()
+            self._timer = None
+        dt = time.monotonic() - self._t0
+        self._t0 = None
+        med = self.median()
+        straggler = bool(self.window) and med > 0 and dt > self.threshold * med
+        self.window.append(dt)
+        self._consecutive = self._consecutive + 1 if straggler else 0
+        rec = StepRecord(step=step, seconds=dt, straggler=straggler)
+        self.records.append(rec)
+        return rec
+
+    # -- stats / policy -------------------------------------------------------
+    def median(self) -> float:
+        if not self.window:
+            return 0.0
+        s = sorted(self.window)
+        return s[len(s) // 2]
+
+    @property
+    def should_restart(self) -> bool:
+        """Persistent straggling: this host (or a peer it waits on) is sick."""
+        return self._consecutive >= self.patience
+
+    def summary(self) -> dict:
+        if not self.records:
+            return {"steps": 0}
+        times = [r.seconds for r in self.records]
+        s = sorted(times)
+        return {
+            "steps": len(times),
+            "median_s": s[len(s) // 2],
+            "p99_s": s[min(len(s) - 1, int(0.99 * len(s)))],
+            "stragglers": sum(r.straggler for r in self.records),
+        }

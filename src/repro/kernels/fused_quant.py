@@ -1,0 +1,49 @@
+"""Pallas TPU kernel: fused row-wise dynamic INT8 quantization (paper Alg. 1).
+
+The GPU version stages tiles HBM->SMEM with cudaMemcpyAsync and reduces with
+warp shuffles (paper §3.2).  TPU mapping (DESIGN.md §2): the grid pipeline
+streams (bm, K) tiles HBM->VMEM (double-buffered by Pallas), the absmax
+reduction runs on the VPU across the 128-wide lane dim, and the quantized
+tile is written back alongside its per-row scale — one pass over the data,
+so T_quant rides on T_load exactly like the paper's fused stage.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, q_ref, s_ref, *, eps: float):
+    x = x_ref[...].astype(jnp.float32)                    # (bm, K)
+    amax = jnp.max(jnp.abs(x), axis=-1, keepdims=True)    # (bm, 1) VPU reduce
+    scale = jnp.maximum(amax, eps) / 127.0
+    q = jnp.clip(jnp.round(x / scale), -128, 127)
+    q_ref[...] = q.astype(jnp.int8)
+    s_ref[...] = scale
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "interpret"))
+def fused_quant(x: jax.Array, *, block_m: int = 256, eps: float = 1e-8,
+                interpret: bool = False):
+    """x: (M, K) -> (q int8 (M, K), scale f32 (M, 1)).
+
+    block_m rows per grid step; K kept whole in VMEM (K*block_m*4B must fit —
+    for K=8192, bm=256 that is 8 MiB fp32 working set, within v5e VMEM after
+    double-buffering at bm=128; callers shrink bm for very wide K).
+    """
+    m, k = x.shape
+    bm = min(block_m, m)
+    grid = (-(-m // bm),)
+    return pl.pallas_call(
+        functools.partial(_kernel, eps=eps),
+        grid=grid,
+        in_specs=[pl.BlockSpec((bm, k), lambda i: (i, 0))],
+        out_specs=[pl.BlockSpec((bm, k), lambda i: (i, 0)),
+                   pl.BlockSpec((bm, 1), lambda i: (i, 0))],
+        out_shape=[jax.ShapeDtypeStruct((m, k), jnp.int8),
+                   jax.ShapeDtypeStruct((m, 1), jnp.float32)],
+        interpret=interpret,
+    )(x)

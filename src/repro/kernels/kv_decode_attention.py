@@ -1,0 +1,125 @@
+"""Pallas TPU kernel: flash-decode attention over the SimQuant INT8 KV cache.
+
+One new query token attends to an S-long quantized cache (paper §4.7
+"SimQuant is particularly effective for KV cache quantization in
+long-sequence inference").  Design:
+
+  * grid = (B, KH, S/chunk): each step streams one (chunk, D) INT8 K tile and
+    V tile HBM->VMEM — the INT8 stream is the point: half the T_load bytes of
+    a bf16 cache (paper Table 5's Load column).
+  * dequantization runs in-register right before the MXU dot (the paper's
+    fused dequant in SMEM), with per-channel K affine and per-token V affine.
+  * online softmax state (m, l, acc) lives in VMEM scratch across the S grid
+    dim (flash-decode); the final chunk writes acc / l.
+  * `length` masking: positions >= length contribute NEG_INF scores.
+
+Group dimension (H/KH query heads per KV head) rides inside the block: the
+score matmul is (G, D) x (D, chunk).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -2.0e38
+
+
+def _kernel(len_ref, q_ref, ks_ref, kz_ref, k_ref, v_ref, vs_ref, vz_ref,
+            o_ref, m_ref, l_ref, acc_ref, *, n_chunks: int, chunk: int,
+            scale: float):
+    s_idx = pl.program_id(2)
+
+    @pl.when(s_idx == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32) * scale           # (G, D)
+    k_q = k_ref[0, 0].astype(jnp.float32)                 # (C, D)
+    k = (k_q - kz_ref[0, 0]) * ks_ref[0, 0]               # per-channel affine
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # (G, C)
+
+    length = len_ref[0]
+    pos = s_idx * chunk + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    s = jnp.where(pos < length, s, NEG_INF)
+
+    m_prev = m_ref[...]                                   # (G, 1)
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    p = jnp.exp(s - m_new)                                # (G, C)
+    alpha = jnp.exp(m_prev - m_new)                       # (G, 1)
+
+    v_q = v_ref[0, 0].astype(jnp.float32)                 # (C, D)
+    v = (v_q - vz_ref[0, 0]) * vs_ref[0, 0]               # per-token affine
+    acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=-1, keepdims=True)
+    m_ref[...] = m_new
+
+    @pl.when(s_idx == n_chunks - 1)
+    def _finish():
+        o_ref[0, 0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
+                       ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def kv_decode_attention(q: jax.Array,
+                        k_vals: jax.Array, k_scale: jax.Array, k_zero: jax.Array,
+                        v_vals: jax.Array, v_scale: jax.Array, v_zero: jax.Array,
+                        length: jax.Array, *, chunk: int = 512,
+                        interpret: bool = False) -> jax.Array:
+    """q: (B, H, D); k_vals/v_vals: (B, S, KH, D) int8;
+    k_scale/k_zero: (B, 1, KH, D) f32; v_scale/v_zero: (B, S, KH, 1) f32;
+    length: (B,) int32 -> (B, H, D) f32.
+    """
+    b, h, d = q.shape
+    s, kh = k_vals.shape[1], k_vals.shape[2]
+    g = h // kh
+    chunk = min(chunk, s)
+    pad_s = (-s) % chunk
+    if pad_s:
+        k_vals = jnp.pad(k_vals, ((0, 0), (0, pad_s), (0, 0), (0, 0)))
+        v_vals = jnp.pad(v_vals, ((0, 0), (0, pad_s), (0, 0), (0, 0)))
+        v_scale = jnp.pad(v_scale, ((0, 0), (0, pad_s), (0, 0), (0, 0)),
+                          constant_values=1.0)
+        v_zero = jnp.pad(v_zero, ((0, 0), (0, pad_s), (0, 0), (0, 0)))
+    s_p = s + pad_s
+    n_chunks = s_p // chunk
+
+    # Layout: (B, KH, S_or_G, D) so the last two dims form the VMEM tile.
+    q_r = q.reshape(b, kh, g, d)
+    k_r = k_vals.transpose(0, 2, 1, 3)                    # (B, KH, S, D)
+    v_r = v_vals.transpose(0, 2, 1, 3)
+    ks_r = k_scale.transpose(0, 2, 1, 3)                  # (B, KH, 1, D)
+    kz_r = k_zero.transpose(0, 2, 1, 3)
+    vs_r = v_scale.transpose(0, 2, 1, 3)                  # (B, KH, S, 1)
+    vz_r = v_zero.transpose(0, 2, 1, 3)
+
+    kernel = functools.partial(_kernel, n_chunks=n_chunks, chunk=chunk,
+                               scale=1.0 / (d ** 0.5))
+    out = pl.pallas_call(
+        kernel,
+        grid=(b, kh, n_chunks),
+        in_specs=[
+            pl.BlockSpec((1,), lambda bb, hh, ss: (bb,)),                       # length
+            pl.BlockSpec((1, 1, g, d), lambda bb, hh, ss: (bb, hh, 0, 0)),      # q
+            pl.BlockSpec((1, 1, 1, d), lambda bb, hh, ss: (bb, hh, 0, 0)),      # ks
+            pl.BlockSpec((1, 1, 1, d), lambda bb, hh, ss: (bb, hh, 0, 0)),      # kz
+            pl.BlockSpec((1, 1, chunk, d), lambda bb, hh, ss: (bb, hh, ss, 0)), # k
+            pl.BlockSpec((1, 1, chunk, d), lambda bb, hh, ss: (bb, hh, ss, 0)), # v
+            pl.BlockSpec((1, 1, chunk, 1), lambda bb, hh, ss: (bb, hh, ss, 0)), # vs
+            pl.BlockSpec((1, 1, chunk, 1), lambda bb, hh, ss: (bb, hh, ss, 0)), # vz
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, d), lambda bb, hh, ss: (bb, hh, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, kh, g, d), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((g, 1), jnp.float32),
+                        pltpu.VMEM((g, 1), jnp.float32),
+                        pltpu.VMEM((g, d), jnp.float32)],
+        interpret=interpret,
+    )(length, q_r, ks_r, kz_r, k_r, v_r, vs_r, vz_r)
+    return out.reshape(b, h, d)

@@ -1,0 +1,144 @@
+"""Dispatch layer: model code calls these; they pick Pallas kernel vs oracle.
+
+``qdot(x, w)`` is the single integration point for the paper's Execution
+Runtime Layer: a weight leaf may be a raw array (fp path), or a QTensor from
+core.quantize_tree; dispatch covers
+
+  * W8A8 per-channel symmetric  -> fused dynamic act-quant + INT8 GEMM
+    (paper Alg. 1 + Alg. 2 — Pallas on TPU, int-matmul oracle elsewhere)
+  * W8A8 asymmetric / grouped   -> dequant-then-GEMM oracle
+  * weight-only INT4/INT3/INT2 (AWQ/GPTQ/search) -> dequant-then-GEMM (W4A16)
+
+Pallas execution is enabled when running on real TPU (or forced with
+REPRO_FORCE_PALLAS=1, interpret mode — used by integration tests).
+"""
+from __future__ import annotations
+
+import os
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.qtensor import QTensor
+from . import ref
+from .fused_quant import fused_quant
+from .w8a8_matmul import w8a8_matmul
+from .kv_decode_attention import kv_decode_attention
+
+
+def _use_pallas() -> Optional[dict]:
+    """None = jnp oracle; {"interpret": bool} = pallas_call kwargs."""
+    if os.environ.get("REPRO_FORCE_PALLAS") == "1":
+        return {"interpret": jax.default_backend() != "tpu"}
+    if jax.default_backend() == "tpu":
+        return {"interpret": False}
+    return None
+
+
+def quantize_rowwise(x2d: jax.Array):
+    """(M, K) -> (int8 codes, (M,1) scales); Pallas on TPU."""
+    pk = _use_pallas()
+    if pk is not None:
+        return fused_quant(x2d, **pk)
+    return ref.fused_quant_ref(x2d)
+
+
+def _w8a8(x2d: jax.Array, qw: QTensor, out_dtype):
+    q_x, x_scale = quantize_rowwise(x2d)
+    w_scale = qw.scale.reshape(1, -1)
+    pk = _use_pallas()
+    if pk is not None:
+        return w8a8_matmul(q_x, x_scale, qw.values, w_scale,
+                           out_dtype=out_dtype, **pk)
+    return ref.w8a8_matmul_ref(q_x, x_scale, qw.values, w_scale, out_dtype)
+
+
+def qdot(x: jax.Array, w, out_dtype=None) -> jax.Array:
+    """Matmul against a maybe-quantized weight.  x: (..., K); w: (K, N) array
+    or QTensor.  Returns (..., N) in ``out_dtype`` (default x.dtype)."""
+    out_dtype = out_dtype or x.dtype
+    if not isinstance(w, QTensor):
+        return jnp.matmul(x, w.astype(x.dtype)).astype(out_dtype)
+
+    lead = x.shape[:-1]
+    k = x.shape[-1]
+    x2d = x.reshape(-1, k)
+
+    fast_w8a8 = (w.bits == 8 and w.zero is None and w.values.ndim == 2
+                 and w.axis == (0,))
+    if fast_w8a8:
+        out = _w8a8(x2d, w, jnp.float32)
+    else:
+        deq = w.dequantize(jnp.float32)
+        if deq.ndim == 3 and w.axis == (1,):              # ZeroQuant grouped
+            deq = deq.reshape(-1, deq.shape[-1])
+        out = x2d.astype(jnp.float32) @ deq               # weight-only path
+    return out.reshape(*lead, -1).astype(out_dtype)
+
+
+def decode_attention(q, k_vals, k_scale, k_zero, v_vals, v_scale, v_zero,
+                     length, *, chunk: int = 512):
+    """SimQuant cache decode attention: Pallas on TPU, oracle elsewhere.
+
+    REPRO_FLASH_DECODE=1 selects the chunk-scanned jnp formulation: the
+    INT8 cache is dequantized per chunk inside a scan (XLA fuses the
+    dequant into the chunk matmul) instead of materializing the full fp32
+    cache — the XLA-level mirror of the Pallas kernel's memory behaviour.
+    """
+    pk = _use_pallas()
+    if pk is not None:
+        return kv_decode_attention(q, k_vals, k_scale, k_zero,
+                                   v_vals, v_scale, v_zero, length,
+                                   chunk=chunk, **pk)
+    if os.environ.get("REPRO_FLASH_DECODE") == "1":
+        return flash_decode_ref(q, k_vals, k_scale, k_zero,
+                                v_vals, v_scale, v_zero, length, chunk=2048)
+    return ref.kv_decode_attention_ref(q, k_vals, k_scale, k_zero,
+                                       v_vals, v_scale, v_zero, length)
+
+
+def flash_decode_ref(q, k_vals, k_scale, k_zero, v_vals, v_scale, v_zero,
+                     length, *, chunk: int = 2048):
+    """Chunk-scanned INT8-cache decode attention (online softmax)."""
+    b, h, d = q.shape
+    s, kh = k_vals.shape[1], k_vals.shape[2]
+    g = h // kh
+    chunk = min(chunk, s)
+    pad = (-s) % chunk
+    if pad:
+        padv = lambda a: jnp.pad(a, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k_vals, v_vals = padv(k_vals), padv(v_vals)
+        v_scale = jnp.pad(v_scale, ((0, 0), (0, pad), (0, 0), (0, 0)),
+                          constant_values=1.0)
+        v_zero = jnp.pad(v_zero, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    nc = (s + pad) // chunk
+    qg = (q.reshape(b, kh, g, d).astype(jnp.float32) / (d ** 0.5))
+    kc = k_vals.reshape(b, nc, chunk, kh, d).transpose(1, 0, 2, 3, 4)
+    vc = v_vals.reshape(b, nc, chunk, kh, d).transpose(1, 0, 2, 3, 4)
+    vs = v_scale.reshape(b, nc, chunk, kh, 1).transpose(1, 0, 2, 3, 4)
+    vz = v_zero.reshape(b, nc, chunk, kh, 1).transpose(1, 0, 2, 3, 4)
+    ks32, kz32 = k_scale.astype(jnp.float32), k_zero.astype(jnp.float32)
+    neg = -2.0e38
+
+    def step(carry, inp):
+        m, l, acc = carry
+        idx, k_j, v_j, vs_j, vz_j = inp
+        kf = (k_j.astype(jnp.float32) - kz32) * ks32          # (B,C,KH,D)
+        sc = jnp.einsum("bhgd,bchd->bhgc", qg, kf)
+        pos = idx * chunk + jnp.arange(chunk)
+        sc = jnp.where((pos[None, :] < length[:, None])[:, None, None], sc, neg)
+        m_new = jnp.maximum(m, jnp.max(sc, axis=-1, keepdims=True))
+        pexp = jnp.exp(sc - m_new)
+        alpha = jnp.exp(m - m_new)
+        vf = (v_j.astype(jnp.float32) - vz_j) * vs_j
+        acc = acc * alpha + jnp.einsum("bhgc,bchd->bhgd", pexp, vf)
+        l = l * alpha + jnp.sum(pexp, axis=-1, keepdims=True)
+        return (m_new, l, acc), None
+
+    m0 = jnp.full((b, kh, g, 1), neg, jnp.float32)
+    l0 = jnp.zeros((b, kh, g, 1), jnp.float32)
+    a0 = jnp.zeros((b, kh, g, d), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(step, (m0, l0, a0),
+                                  (jnp.arange(nc), kc, vc, vs, vz))
+    return (acc / jnp.maximum(l, 1e-30)).reshape(b, h, d)

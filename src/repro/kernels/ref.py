@@ -1,0 +1,55 @@
+"""Pure-jnp oracles for every Pallas kernel (the contract each kernel must
+match under assert_allclose in tests/kernels/)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -2.0e38
+
+
+def fused_quant_ref(x: jax.Array, eps: float = 1e-8):
+    """Row-wise dynamic symmetric INT8 quantization (paper Alg. 1 lines 2+5).
+
+    x: (M, K) -> (q int8 (M,K), scale f32 (M,1))."""
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    scale = jnp.maximum(amax, eps) / 127.0
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -128, 127).astype(jnp.int8)
+    return q, scale
+
+
+def w8a8_matmul_ref(q_x: jax.Array, x_scale: jax.Array,
+                    q_w: jax.Array, w_scale: jax.Array,
+                    out_dtype=jnp.float32) -> jax.Array:
+    """INT8 x INT8 -> INT32 GEMM with affine rescale (paper Alg. 2 QuantGEMMFused).
+
+    q_x: (M,K) int8; x_scale: (M,1) f32; q_w: (K,N) int8; w_scale: (1,N) f32.
+
+    Uses a native int8 dot with int32 accumulation (no widened operand
+    materialization — the roofline found 70 GB/step of s32 weight converts
+    with the astype formulation).
+    """
+    acc = jax.lax.dot_general(q_x, q_w, (((1,), (0,)), ((), ())),
+                              preferred_element_type=jnp.int32)
+    return (acc.astype(jnp.float32) * x_scale * w_scale).astype(out_dtype)
+
+
+def quant_gemm_fused_ref(x: jax.Array, q_w: jax.Array, w_scale: jax.Array,
+                         out_dtype=jnp.float32) -> jax.Array:
+    """End-to-end fused path: dynamic act quant + INT8 GEMM (Alg. 1 + Alg. 2)."""
+    q_x, x_scale = fused_quant_ref(x)
+    return w8a8_matmul_ref(q_x, x_scale, q_w, w_scale, out_dtype)
+
+
+def kv_decode_attention_ref(q: jax.Array,
+                            k_vals: jax.Array, k_scale: jax.Array, k_zero: jax.Array,
+                            v_vals: jax.Array, v_scale: jax.Array, v_zero: jax.Array,
+                            length: jax.Array) -> jax.Array:
+    """SimQuant INT8-cache decode attention (oracle shared with the model).
+
+    q: (B,H,D); k_vals/v_vals: (B,S,KH,D) int8; k_scale/k_zero: (B,1,KH,D);
+    v_scale/v_zero: (B,S,KH,1); length: (B,) -> (B,H,D).
+    """
+    from repro.models.attention import decode_attention_ref
+    return decode_attention_ref(q, k_vals, k_scale, k_zero,
+                                v_vals, v_scale, v_zero, length)

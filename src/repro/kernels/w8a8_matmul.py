@@ -1,0 +1,77 @@
+"""Pallas TPU kernel: INT8xINT8 GEMM with fused affine rescale (paper Alg. 2).
+
+GPU original: mma.sync / dp4a Tensor-Core tiles with SMEM staging.  TPU
+mapping: the MXU consumes int8 operands natively at 2x bf16 throughput on
+v5e; tiles are (bm, bk) x (bk, bn) VMEM blocks with an int32 VMEM scratch
+accumulator, K as the innermost (fastest-moving) grid dim (standard Pallas
+revisiting-output pattern).  Dequantization (x_scale * w_scale outer
+product) is fused into the final K step — the paper's "dequant in SRAM
+before writeback".
+
+All block shapes default to 128/256 multiples so the MXU (128x128) and VREG
+lanes (8x128) stay full.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, w_ref, xs_ref, ws_ref, o_ref, acc_ref, *, nk: int):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jax.lax.dot_general(
+        x_ref[...], w_ref[...],
+        dimension_numbers=(((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32)                 # MXU int8 path
+
+    @pl.when(pl.program_id(2) == nk - 1)
+    def _finish():
+        acc = acc_ref[...].astype(jnp.float32)
+        o_ref[...] = (acc * xs_ref[...] * ws_ref[...]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "block_n", "block_k",
+                                             "out_dtype", "interpret"))
+def w8a8_matmul(q_x: jax.Array, x_scale: jax.Array,
+                q_w: jax.Array, w_scale: jax.Array,
+                *, block_m: int = 256, block_n: int = 256, block_k: int = 256,
+                out_dtype=jnp.float32, interpret: bool = False) -> jax.Array:
+    """q_x (M,K) int8, x_scale (M,1) f32, q_w (K,N) int8, w_scale (1,N) f32
+    -> (M,N) out_dtype."""
+    m, k = q_x.shape
+    k2, n = q_w.shape
+    assert k == k2, (q_x.shape, q_w.shape)
+    bm, bn, bk = min(block_m, m), min(block_n, n), min(block_k, k)
+    # Explicit zero-padding to block multiples: padded int8 zeros contribute
+    # nothing to the int32 accumulator (OOB block contents are undefined).
+    pm, pn, pk = (-m) % bm, (-n) % bn, (-k) % bk
+    if pm or pk:
+        q_x = jnp.pad(q_x, ((0, pm), (0, pk)))
+        x_scale = jnp.pad(x_scale, ((0, pm), (0, 0)))
+    if pk or pn:
+        q_w = jnp.pad(q_w, ((0, pk), (0, pn)))
+        w_scale = jnp.pad(w_scale, ((0, 0), (0, pn)))
+    m_p, n_p, k_p = m + pm, n + pn, k + pk
+    grid = (m_p // bm, n_p // bn, k_p // bk)
+    out = pl.pallas_call(
+        functools.partial(_kernel, nk=grid[2]),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((bm, 1), lambda i, j, kk: (i, 0)),
+            pl.BlockSpec((1, bn), lambda i, j, kk: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m_p, n_p), out_dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.int32)],
+        interpret=interpret,
+    )(q_x, q_w, x_scale, w_scale)
+    return out[:m, :n] if (pm or pn) else out

@@ -1,0 +1,274 @@
+"""Trip-count-aware cost model over optimized HLO text.
+
+``compiled.cost_analysis()`` counts every while-loop body ONCE, so any
+scanned model (layers-scan, flash chunks, SSD chunks, microbatches, chunked
+CE) is undercounted by the trip counts — for an 8-step scan the FLOPs are 8x
+low (validated in tests/launch/test_hlo_cost.py against an unrolled oracle),
+and collectives inside loop bodies are missed the same way.
+
+This walker parses the optimized HLO text into a per-computation symbol
+table (op name -> result shape) and computes, recursively through
+``while``/``fusion``/``call`` edges with ``known_trip_count`` multipliers:
+
+  * flops        — 2*|out|*K for dot ops (contraction dims resolved through
+                   the symbol table)
+  * bytes        — operands + result of top-level ops (fusion = one pass
+                   over its call-site operands/result: XLA's fusion model)
+  * collectives  — result bytes by kind, wire-factor weighted
+
+Used by launch/dryrun.py for the §Roofline terms.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 0.5, "u4": 0.5, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8, "f8e4m3fn": 1, "f8e5m2": 1,
+    "bf16": 2, "f16": 2, "f32": 4, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_TRIP_RE = re.compile(r'known_trip_count[^0-9]*"?n"?[^0-9]*(\d+)')
+_OPLINE_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(.*?)\s*([a-z][a-z0-9\-]*)\((.*)$")
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+_WIRE_FACTOR = {"all-reduce": 2.0, "all-gather": 1.0, "reduce-scatter": 1.0,
+                "all-to-all": 1.0, "collective-permute": 1.0}
+
+_FREE_OPS = {"parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+             "after-all", "iota", "partition-id", "replica-id", "domain",
+             "opt-barrier"}
+
+
+def _shape_list_bytes(text: str) -> float:
+    total = 0.0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d.strip():
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _shape_dims(shape_text: str) -> List[int]:
+    m = _SHAPE_RE.search(shape_text)
+    if not m:
+        return []
+    return [int(d) for d in m.group(2).split(",") if d.strip()]
+
+
+def _shape_elems(shape_text: str) -> float:
+    n = 1.0
+    for d in _shape_dims(shape_text):
+        n *= d
+    return n
+
+
+@dataclasses.dataclass
+class Op:
+    name: str
+    kind: str
+    result: str                  # result type text (may be a tuple)
+    args: List[str]              # operand op names
+    attrs: str                   # text after the closing operand paren
+    trip: int = 1
+
+
+@dataclasses.dataclass
+class Cost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll_bytes: Dict[str, float] = dataclasses.field(default_factory=dict)
+    coll_counts: Dict[str, float] = dataclasses.field(default_factory=dict)
+
+    def add(self, other: "Cost", mult: float = 1.0):
+        self.flops += other.flops * mult
+        self.bytes += other.bytes * mult
+        for k, v in other.coll_bytes.items():
+            self.coll_bytes[k] = self.coll_bytes.get(k, 0.0) + v * mult
+        for k, v in other.coll_counts.items():
+            self.coll_counts[k] = self.coll_counts.get(k, 0.0) + v * mult
+
+    @property
+    def wire_bytes(self) -> float:
+        return sum(_WIRE_FACTOR[k] * v for k, v in self.coll_bytes.items())
+
+
+def _split_args(argtext: str) -> Tuple[List[str], str]:
+    """Operand names from the call-paren contents; returns (args, attrs)."""
+    depth = 1
+    out = []
+    cur = []
+    i = 0
+    while i < len(argtext) and depth > 0:
+        ch = argtext[i]
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            depth -= 1
+            if depth == 0:
+                break
+        if depth >= 1 and ch == "," and depth == 1:
+            out.append("".join(cur))
+            cur = []
+        else:
+            cur.append(ch)
+        i += 1
+    if cur:
+        out.append("".join(cur))
+    attrs = argtext[i + 1:]
+    names = []
+    for a in out:
+        m = re.search(r"%([\w.\-]+)", a)
+        if m:
+            names.append(m.group(1))
+    return names, attrs
+
+
+class HloCostModel:
+    def __init__(self, hlo_text: str):
+        self.comps: Dict[str, List[Op]] = {}
+        self.entry: Optional[str] = None
+        self.shape_of: Dict[str, str] = {}       # op name -> result text
+        self._parse(hlo_text)
+        self._memo: Dict[str, Cost] = {}
+
+    def _parse(self, hlo: str):
+        cur = None
+        for raw in hlo.splitlines():
+            line = raw.rstrip()
+            s = line.strip()
+            if cur is None:
+                m = re.match(r"^(ENTRY\s+)?%?([\w.\-]+)\s*(\(.*\))?\s*->.*\{\s*$", s)
+                if m and not s.startswith("//"):
+                    cur = m.group(2)
+                    self.comps[cur] = []
+                    if m.group(1):
+                        self.entry = cur
+                continue
+            if s.startswith("}"):
+                cur = None
+                continue
+            m = _OPLINE_RE.match(s)
+            if not m:
+                continue
+            name, result, kind, rest = m.groups()
+            args, attrs = _split_args(rest)
+            trip = 1
+            tm = _TRIP_RE.search(attrs)
+            if tm:
+                trip = int(tm.group(1))
+            op = Op(name=name, kind=kind, result=result, args=args,
+                    attrs=attrs, trip=trip)
+            self.comps[cur].append(op)
+            self.shape_of[name] = result
+
+    # -- cost ------------------------------------------------------------
+    def _arg_bytes(self, op: Op) -> float:
+        return sum(_shape_list_bytes(self.shape_of.get(a, "")) for a in op.args)
+
+    def _callees(self, op: Op, keys=("calls", "body", "condition", "to_apply",
+                                     "branch_computations")) -> List[str]:
+        out = []
+        for key in keys:
+            for m in re.finditer(rf"{key}=(\{{[^}}]*\}}|%?[\w.\-]+)", op.attrs):
+                val = m.group(1)
+                if val.startswith("{"):
+                    out += [v.strip().lstrip("%") for v in val[1:-1].split(",")]
+                else:
+                    out.append(val.lstrip("%"))
+        return out
+
+    def _io_bytes(self, op: Op) -> float:
+        """HBM traffic of one op/fusion call, aliasing-aware.
+
+        Plain model: operands + result.  In-place update patterns
+        (dynamic-update-slice / scatter, incl. fusions rooted in them) alias
+        the big buffer: traffic = 2x the small operands (read update, write
+        region) — a 1-token KV-cache append must not count as a full-cache
+        rewrite (this overcounted decode memory ~20x).  Slice-read patterns
+        (dynamic-slice/gather fusions) read the slice, not the whole operand.
+        """
+        rb = _shape_list_bytes(op.result)
+        args = [_shape_list_bytes(self.shape_of.get(a, "")) for a in op.args]
+        tag = op.name + " " + op.kind
+        if "dynamic-update-slice" in tag or "scatter" in tag:
+            small = sum(args) - (max(args) if args else 0.0)
+            return 2.0 * small
+        if "dynamic-slice" in tag or "gather" in tag:
+            small = sum(args) - (max(args) if args else 0.0)
+            return rb + small
+        return rb + sum(args)
+
+    def _dot_flops(self, op: Op) -> float:
+        out_elems = _shape_elems(op.result)
+        k = 1
+        cm = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", op.attrs)
+        lhs_shape = self.shape_of.get(op.args[0], "") if op.args else ""
+        dims = _shape_dims(lhs_shape)
+        if cm and dims:
+            for ci in cm.group(1).split(","):
+                if ci.strip():
+                    idx = int(ci)
+                    if idx < len(dims):
+                        k *= dims[idx]
+        return 2.0 * out_elems * k
+
+    def cost_of(self, comp: str) -> Cost:
+        if comp in self._memo:
+            return self._memo[comp]
+        self._memo[comp] = Cost()               # cycle guard
+        total = Cost()
+        for op in self.comps.get(comp, []):
+            if op.kind in _FREE_OPS:
+                continue
+            if op.kind == "while":
+                for body in self._callees(op, keys=("body",)):
+                    total.add(self.cost_of(body), op.trip)
+                for cond in self._callees(op, keys=("condition",)):
+                    total.add(self.cost_of(cond), op.trip)
+                continue
+            kind = op.kind.replace("-start", "").replace("-done", "")
+            if kind in COLLECTIVES:
+                if op.kind.endswith("-done"):
+                    continue
+                rbytes = _shape_list_bytes(op.result)
+                total.coll_bytes[kind] = total.coll_bytes.get(kind, 0.0) + rbytes
+                total.coll_counts[kind] = total.coll_counts.get(kind, 0.0) + 1
+                total.bytes += rbytes + self._arg_bytes(op)
+                continue
+            if op.kind in ("dot", "convolution"):
+                total.flops += self._dot_flops(op)
+                total.bytes += _shape_list_bytes(op.result) + self._arg_bytes(op)
+                continue
+            if op.kind in ("fusion", "call", "conditional", "map",
+                           "custom-call", "async-start"):
+                total.bytes += self._io_bytes(op)
+                for c in self._callees(op):
+                    inner = self.cost_of(c)
+                    total.flops += inner.flops
+                    for k2, v in inner.coll_bytes.items():
+                        total.coll_bytes[k2] = total.coll_bytes.get(k2, 0) + v
+                    for k2, v in inner.coll_counts.items():
+                        total.coll_counts[k2] = total.coll_counts.get(k2, 0) + v
+                continue
+            # generic data-moving op (copy, convert, dus, reduce, ...)
+            total.bytes += self._io_bytes(op)
+        self._memo[comp] = total
+        return total
+
+    def entry_cost(self) -> Cost:
+        assert self.entry is not None, "no ENTRY computation found"
+        return self.cost_of(self.entry)
+
+
+def analyze(hlo_text: str) -> Cost:
+    return HloCostModel(hlo_text).entry_cost()

@@ -1,0 +1,34 @@
+"""Production mesh builders (assignment contract).
+
+``make_production_mesh`` is a FUNCTION (not module-level state) so importing
+this module never touches jax device initialization — dryrun.py sets
+XLA_FLAGS before any jax import; tests build tiny meshes explicitly.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_mesh(shape: Tuple[int, ...], axes: Tuple[str, ...]) -> Mesh:
+    return jax.make_mesh(shape, axes)
+
+
+def make_local_mesh(model: int = 1) -> Mesh:
+    """Whatever this host has: (n/model, model) data x model mesh."""
+    n = len(jax.devices())
+    data = max(n // model, 1)
+    return jax.make_mesh((data, model), ("data", "model"))
+
+
+def mesh_chip_count(mesh: Mesh) -> int:
+    return int(np.prod(list(mesh.shape.values())))

@@ -1,0 +1,325 @@
+"""Step builders + abstract input specs for every (arch x shape) cell.
+
+Shapes (assignment):
+  train_4k     seq=4096   global_batch=256   -> train_step
+  prefill_32k  seq=32768  global_batch=32    -> prefill_step
+  decode_32k   seq=32768  global_batch=128   -> serve_step (1 token, full cache)
+  long_500k    seq=524288 global_batch=1     -> serve_step (SSM/hybrid only)
+
+``input_specs`` returns ShapeDtypeStructs (weak-type-correct, shardable, no
+allocation) for params / optimizer state / batch / cache, with NamedShardings
+attached when a mesh is given — the dry-run lowers directly from these.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.distributed.compression import compress_decompress
+from repro.distributed.sharding import (axis_rules, blocked_state_spec,
+                                        param_spec, resolve)
+from repro.models import (ModelConfig, forward_decode, forward_prefill,
+                          forward_train, init_params, lm_loss)
+from repro.optim import AdamWConfig, OptState, apply_updates, init_state
+
+SHAPES: Dict[str, Dict[str, int]] = {
+    "train_4k": dict(seq=4096, batch=256, kind="train"),
+    "prefill_32k": dict(seq=32768, batch=32, kind="prefill"),
+    "decode_32k": dict(seq=32768, batch=128, kind="decode"),
+    "long_500k": dict(seq=524288, batch=1, kind="decode"),
+}
+
+
+def shape_kind(shape: str) -> str:
+    return SHAPES[shape]["kind"]
+
+
+def cell_is_applicable(cfg: ModelConfig, shape: str) -> Tuple[bool, str]:
+    """long_500k only for sub-quadratic (SSM/hybrid) archs (assignment)."""
+    if shape == "long_500k" and cfg.is_pure_attention:
+        return False, "pure full-attention arch: no sub-quadratic path (DESIGN.md §5)"
+    return True, ""
+
+
+# ---------------------------------------------------------------------------
+# Step functions
+# ---------------------------------------------------------------------------
+
+def make_train_step(cfg: ModelConfig, ocfg: AdamWConfig, *,
+                    compress_grads: bool = False, microbatches: int = 1,
+                    accum_dtype=jnp.float32):
+    """(params, opt_state, batch [, err]) -> (params, opt_state, metrics [, err]).
+
+    ``microbatches > 1`` runs gradient accumulation: the global batch is
+    scanned in slices, cutting activation temps by the slice factor at the
+    cost of one f32 grad accumulator (how the 400B train cell fits 16 GB).
+    """
+    from repro.models.transformer import train_loss
+
+    def grads_of(params, batch):
+        return jax.value_and_grad(lambda p: train_loss(p, batch, cfg))(params)
+
+    def train_step(params, opt_state: OptState, batch, error_state=None):
+        if microbatches == 1:
+            loss, grads = grads_of(params, batch)
+        else:
+            mb_batch = jax.tree_util.tree_map(
+                lambda x: x.reshape((microbatches, x.shape[0] // microbatches)
+                                    + x.shape[1:]), batch)
+
+            def micro(carry, mb):
+                gacc, lacc = carry
+                loss_i, g_i = grads_of(params, mb)
+                gacc = jax.tree_util.tree_map(
+                    lambda a, g: a + g.astype(accum_dtype), gacc, g_i)
+                return (gacc, lacc + loss_i), None
+
+            gacc0 = jax.tree_util.tree_map(
+                lambda p_: jnp.zeros(p_.shape, accum_dtype), params)
+            (grads, loss), _ = jax.lax.scan(micro, (gacc0, jnp.zeros((), jnp.float32)),
+                                            mb_batch)
+            grads = jax.tree_util.tree_map(lambda g: g / microbatches, grads)
+            loss = loss / microbatches
+        if compress_grads:
+            grads, error_state = compress_decompress(grads, error_state)
+        params, opt_state, metrics = apply_updates(params, grads, opt_state, ocfg)
+        metrics["loss"] = loss
+        if compress_grads:
+            return params, opt_state, metrics, error_state
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig, smax: int):
+    def prefill_step(params, batch):
+        return forward_prefill(params, batch, cfg, smax=smax)
+    return prefill_step
+
+
+def make_serve_step(cfg: ModelConfig):
+    def serve_step(params, tokens_t, cache):
+        return forward_decode(params, tokens_t, cache, cfg)
+    return serve_step
+
+
+# ---------------------------------------------------------------------------
+# Abstract specs
+# ---------------------------------------------------------------------------
+
+def _key_str(k) -> str:
+    """Robust pytree path-entry name (DictKey.key / SequenceKey.idx /
+    GetAttrKey.name — GetAttrKey has no .key and str() prepends a dot)."""
+    for attr in ("key", "idx", "name"):
+        if hasattr(k, attr):
+            return str(getattr(k, attr))
+    return str(k).lstrip(".")
+
+
+def _sds(shape, dtype, mesh: Optional[Mesh], spec: Optional[P]):
+    if mesh is None:
+        return jax.ShapeDtypeStruct(shape, dtype)
+    return jax.ShapeDtypeStruct(shape, dtype,
+                                sharding=NamedSharding(mesh, spec or P()))
+
+
+def _batch_axes(mesh: Optional[Mesh]):
+    if mesh is None:
+        return None
+    axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    return axes if axes else None
+
+
+def batch_axis(mesh: Optional[Mesh], b: int):
+    """Joint (pod, data) batch sharding when divisible, else replicated."""
+    ba = _batch_axes(mesh)
+    if not ba:
+        return None
+    size = int(np.prod([mesh.shape[a] for a in ba]))
+    if b % size != 0:
+        return None
+    return ba[0] if len(ba) == 1 else ba
+
+
+def batch_specs(cfg: ModelConfig, shape: str, mesh: Optional[Mesh],
+                *, with_labels: bool) -> Any:
+    s = SHAPES[shape]
+    b, seq = s["batch"], s["seq"]
+    bax = batch_axis(mesh, b)
+
+    def tok(shp):
+        return _sds(shp, jnp.int32, mesh, P(bax, *([None] * (len(shp) - 1))))
+
+    if cfg.n_codebooks:
+        out = {"tokens": tok((b, cfg.n_codebooks, seq))}
+        if with_labels:
+            out["labels"] = tok((b, cfg.n_codebooks, seq))
+        return out
+    if cfg.n_img_patches:
+        s_text = seq - cfg.n_img_patches
+        out = {"tokens": tok((b, s_text)),
+               "patches": _sds((b, cfg.n_img_patches, cfg.d_model), jnp.float32,
+                               mesh, P(bax, None, None))}
+        if with_labels:
+            out["labels"] = tok((b, seq))
+        return out
+    out = {"tokens": tok((b, seq))}
+    if with_labels:
+        out["labels"] = tok((b, seq))
+    return out
+
+
+def params_specs(cfg: ModelConfig, mesh: Optional[Mesh], *,
+                 quantized: Optional[bool] = None):
+    """Abstract params pytree (+ shardings from path rules).
+
+    ``quantized`` (default: env REPRO_SERVE_W8A8) makes the template the
+    symmetric-INT8 QTensor tree — the paper's deployed weight format; the
+    serve_step then lowers through the W8A8 qdot path.
+    """
+    import os as _os
+    if quantized is None:
+        quantized = _os.environ.get("REPRO_SERVE_W8A8") == "1"
+    if quantized:
+        from repro.core import QuantPolicy, quantize_tree
+
+        def make(key):
+            return quantize_tree(init_params(cfg, key),
+                                 QuantPolicy(method="symmetric"))
+        tmpl = jax.eval_shape(make, jax.random.PRNGKey(0))
+    else:
+        tmpl = jax.eval_shape(partial(init_params, cfg), jax.random.PRNGKey(0))
+    if mesh is None:
+        return tmpl
+
+    def visit(path, leaf):
+        parts = [_key_str(k) for k in path]
+        if parts and parts[-1] in ("values", "scale", "zero", "pre_scale"):
+            # QTensor fields: values share the param's rank/rules; scale has
+            # reduced dims (1s) which the divisibility check replicates.
+            base = "/".join(parts[:-1])
+            return jax.ShapeDtypeStruct(
+                leaf.shape, leaf.dtype,
+                sharding=NamedSharding(mesh, param_spec(mesh, base, leaf.shape)))
+        ps = "/".join(parts)
+        return jax.ShapeDtypeStruct(
+            leaf.shape, leaf.dtype,
+            sharding=NamedSharding(mesh, param_spec(mesh, ps, leaf.shape)))
+    return jax.tree_util.tree_map_with_path(visit, tmpl)
+
+
+def optstate_specs(params_tmpl, ocfg: AdamWConfig, mesh: Optional[Mesh]):
+    tmpl = jax.eval_shape(partial(init_state, cfg=ocfg), params_tmpl)
+    if mesh is None:
+        return tmpl
+
+    # m/v inherit the param's sharding rules by path.  Blocked-INT8 QTensor
+    # fields (".../values", ".../scale") use blocked_state_spec: the param's
+    # axes with the trailing block dim unsharded.
+    def visit(path, leaf):
+        parts = [_key_str(k) for k in path]
+        if parts and parts[-1] in ("values", "scale", "zero"):
+            base = "/".join(parts[:-1])
+            return jax.ShapeDtypeStruct(
+                leaf.shape, leaf.dtype,
+                sharding=NamedSharding(mesh, blocked_state_spec(mesh, base, leaf.shape)))
+        ps = "/".join(parts)
+        return jax.ShapeDtypeStruct(
+            leaf.shape, leaf.dtype,
+            sharding=NamedSharding(mesh, param_spec(mesh, ps, leaf.shape)))
+    return jax.tree_util.tree_map_with_path(visit, tmpl)
+
+
+def _cache_leaf_spec(name: str, leaf, mesh: Mesh, *, shard_seq: bool) -> P:
+    """Cache leaves: GQA (R,B,S,KH,D) / MLA (R,B,S,d) / SSM (R,B,H,P,N) /
+    conv (R,B,K-1,C) / length (B,)."""
+    nd = leaf.ndim
+    base = name.rsplit("/", 1)[-1]
+    parts = [None] * nd
+    if nd < 2:
+        return P(*parts)
+    bax = batch_axis(mesh, leaf.shape[1])
+    if bax is not None:
+        parts[1] = bax
+    tp = mesh.shape.get("model", 1)
+    is_seq_cache = base.startswith(("k_", "v_", "c_", "kr_"))
+    if is_seq_cache:
+        if (bax is None and shard_seq and nd >= 3 and "data" in mesh.axis_names
+                and leaf.shape[2] % mesh.shape["data"] == 0 and leaf.shape[2] > 1):
+            parts[2] = "data"          # long-context SP over sequence
+        kh_sharded = False
+        if nd == 5 and tp > 1 and leaf.shape[3] % tp == 0 and leaf.shape[3] > 1:
+            parts[3] = "model"         # GQA kv heads over model
+            kh_sharded = True
+        if (not kh_sharded and tp > 1 and nd >= 3 and parts[2] is None
+                and leaf.shape[2] % tp == 0 and leaf.shape[2] > 1):
+            # kv heads can't absorb the TP degree (GQA kv < model, or the MLA
+            # latent has no head dim): sequence-parallel cache over `model`
+            # — decode becomes a flash-decode with partial-softmax psum.
+            parts[2] = "model"
+    elif base == "ssm" and nd == 5 and tp > 1 and leaf.shape[2] % tp == 0:
+        parts[2] = "model"             # SSM heads over model
+    elif base.startswith("conv") and nd == 4 and tp > 1 and leaf.shape[3] % tp == 0:
+        parts[3] = "model"             # conv channels over model
+    return P(*parts)
+
+
+def cache_specs(cfg: ModelConfig, shape: str, mesh: Optional[Mesh]):
+    """Abstract decode cache at full length (serve_step input)."""
+    s = SHAPES[shape]
+    b, seq = s["batch"], s["seq"]
+    pre_batch = batch_specs(cfg, shape, None, with_labels=False)
+    # prefill template at the same (b, seq) to get cache shapes
+    def shapes_only(tree):
+        return jax.tree_util.tree_map(
+            lambda l: jax.ShapeDtypeStruct(l.shape, l.dtype), tree)
+
+    params_tmpl = jax.eval_shape(partial(init_params, cfg), jax.random.PRNGKey(0))
+    # Replace prefill batch seq with full seq (already is); eval_shape prefill
+    cache_tmpl = jax.eval_shape(
+        lambda p, bb: forward_prefill(p, bb, cfg, smax=seq)[1],
+        params_tmpl, pre_batch)
+    if mesh is None:
+        return shapes_only(cache_tmpl)
+
+    shard_seq = (b == 1)
+
+    def visit(path, leaf):
+        name = "/".join(_key_str(k) for k in path)
+        spec = _cache_leaf_spec(name, leaf, mesh, shard_seq=shard_seq)
+        return jax.ShapeDtypeStruct(leaf.shape, leaf.dtype,
+                                    sharding=NamedSharding(mesh, spec))
+    return jax.tree_util.tree_map_with_path(visit, cache_tmpl)
+
+
+def decode_token_specs(cfg: ModelConfig, shape: str, mesh: Optional[Mesh]):
+    b = SHAPES[shape]["batch"]
+    bax = batch_axis(mesh, b)
+    if cfg.n_codebooks:
+        return _sds((b, cfg.n_codebooks), jnp.int32, mesh, P(bax, None))
+    return _sds((b,), jnp.int32, mesh, P(bax))
+
+
+def input_specs(cfg: ModelConfig, shape: str, mesh: Optional[Mesh],
+                ocfg: Optional[AdamWConfig] = None) -> Dict[str, Any]:
+    """Everything the cell's step function needs, as abstract sharded specs."""
+    kind = shape_kind(shape)
+    specs: Dict[str, Any] = {"kind": kind}
+    specs["params"] = params_specs(cfg, mesh)
+    if kind == "train":
+        ocfg = ocfg or AdamWConfig()
+        specs["opt_state"] = optstate_specs(
+            jax.eval_shape(partial(init_params, cfg), jax.random.PRNGKey(0)), ocfg, mesh)
+        specs["batch"] = batch_specs(cfg, shape, mesh, with_labels=True)
+    elif kind == "prefill":
+        specs["batch"] = batch_specs(cfg, shape, mesh, with_labels=False)
+    else:  # decode
+        specs["tokens"] = decode_token_specs(cfg, shape, mesh)
+        specs["cache"] = cache_specs(cfg, shape, mesh)
+    return specs

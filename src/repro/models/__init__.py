@@ -1,0 +1,10 @@
+"""Model zoo: unified decoder LM covering all assigned architectures."""
+from .config import LayerSpec, ModelConfig, repeat_pattern
+from .transformer import (
+    init_params, forward_train, forward_prefill, forward_decode, lm_loss,
+)
+
+__all__ = [
+    "LayerSpec", "ModelConfig", "repeat_pattern",
+    "init_params", "forward_train", "forward_prefill", "forward_decode", "lm_loss",
+]

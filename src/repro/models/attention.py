@@ -1,0 +1,210 @@
+"""Attention mixers: GQA/MQA/MHA with chunked-flash softmax, qk-norm, bias.
+
+Training/prefill use a KV-chunked online-softmax attention (`flash_attention`)
+implemented with ``lax.scan`` — O(S * chunk) live memory instead of O(S^2),
+which is what makes the 32K-prefill dry-run cells fit.  GQA is computed in
+grouped form (no materialized head-repeat of K/V).
+
+Decode against the SimQuant INT8 KV cache lives in `decode_attention_ref`
+(jnp oracle) — the Pallas kernel in kernels/kv_decode_attention.py implements
+the same contract for the TPU target.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+import numpy as np
+
+from repro.distributed.sharding import active_mesh, constrain, resolve
+from repro.kernels.ops import qdot
+from .config import ModelConfig
+from .layers import apply_rope, dense_init, rms_norm
+
+NEG_INF = -2.0e38
+
+
+def attn_init(key, cfg: ModelConfig):
+    h, kh, hd, d = cfg.n_heads, cfg.kv_heads, cfg.hd, cfg.d_model
+    ks = jax.random.split(key, 4)
+    dt = jnp.dtype(cfg.param_dtype)
+    p = {
+        "wq": dense_init(ks[0], (d, h * hd), dt),
+        "wk": dense_init(ks[1], (d, kh * hd), dt),
+        "wv": dense_init(ks[2], (d, kh * hd), dt),
+        "wo": dense_init(ks[3], (h * hd, d), dt),
+    }
+    if cfg.qkv_bias:
+        p["b_q"] = jnp.zeros((h * hd,), dt)
+        p["b_k"] = jnp.zeros((kh * hd,), dt)
+        p["b_v"] = jnp.zeros((kh * hd,), dt)
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((hd,), dt)
+        p["k_norm"] = jnp.ones((hd,), dt)
+    return p
+
+
+def qkv_project(p, x: jax.Array, cfg: ModelConfig, positions: jax.Array):
+    """x: (B, S, D) -> q (B,S,H,hd), k/v (B,S,KH,hd), RoPE'd + normed."""
+    b, s, _ = x.shape
+    h, kh, hd = cfg.n_heads, cfg.kv_heads, cfg.hd
+    dt = x.dtype
+    q = qdot(x, p["wq"])
+    k = qdot(x, p["wk"])
+    v = qdot(x, p["wv"])
+    if cfg.qkv_bias:
+        q = q + p["b_q"].astype(dt)
+        k = k + p["b_k"].astype(dt)
+        v = v + p["b_v"].astype(dt)
+    q = q.reshape(b, s, h, hd)
+    k = k.reshape(b, s, kh, hd)
+    v = v.reshape(b, s, kh, hd)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    q = constrain(q, "batch", "seq", "heads", None)
+    k = constrain(k, "batch", "seq", "kv_heads", None)
+    v = constrain(v, "batch", "seq", "kv_heads", None)
+    return q, k, v
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                    *, q_positions: jax.Array, kv_positions: jax.Array,
+                    chunk: int = 1024, prefix_len: int = 0,
+                    softcap: float = 0.0) -> jax.Array:
+    """Chunked online-softmax attention, grouped GQA, causal (+ prefix-LM).
+
+    q: (B, Sq, H, D); k, v: (B, Skv, KH, D).  Returns (B, Sq, H, D).
+    """
+    import os as _os
+    b, sq, h, d = q.shape
+    skv, kh = k.shape[1], k.shape[2]
+    dv = v.shape[-1]                                    # may differ (MLA)
+    g = h // kh
+    # REPRO_FLASH_QG_BF16: stream q in bf16 across the kv-chunk scan (the
+    # full q block is re-read once per chunk — its bytes dominate prefill);
+    # scores still accumulate in f32 via preferred_element_type.
+    qg_dt = (jnp.bfloat16 if _os.environ.get("REPRO_FLASH_QG_BF16") == "1"
+             else jnp.float32)
+    scale = 1.0 / jnp.sqrt(d).astype(jnp.float32)
+    qg = (q.astype(jnp.float32) * scale).astype(qg_dt).reshape(b, sq, kh, g, d)
+
+    chunk = min(chunk, skv)
+    n_chunks = -(-skv // chunk)
+    pad = n_chunks * chunk - skv
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        kv_positions = jnp.pad(kv_positions, (0, pad), constant_values=2**30)
+    kc = k.reshape(b, n_chunks, chunk, kh, d).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(b, n_chunks, chunk, kh, dv).transpose(1, 0, 2, 3, 4)
+    pc = kv_positions.reshape(n_chunks, chunk)
+
+    # TP plan for the score tensors (B, KH, G, Sq, C): shard KH over `model`
+    # when the kv-head count divides the TP degree; otherwise shard the
+    # query-sequence dim (Megatron-SP style — kv replicated, q stays
+    # S-sharded; required for kh<TP archs like GQA kv=8 on model=16).
+    mesh = active_mesh()
+    tp = int(np.prod([mesh.shape[a] for a in resolve("kv_heads")])) if mesh else 1
+    kh_ok = tp > 1 and kh % tp == 0
+    kh_ax = "kv_heads" if kh_ok else None
+    sq_ax = None if kh_ok else "seq_carry"
+    qg = constrain(qg, "batch", sq_ax, kh_ax, None, None)
+    kc = constrain(kc, None, "batch", None, kh_ax, None)
+    vc = constrain(vc, None, "batch", None, kh_ax, None)
+
+    def step(carry, inp):
+        m, l, acc = carry                               # running max / sum / out
+        k_j, v_j, pos_j = inp                           # (B,C,KH,D)...(C,)
+        s_ij = jnp.einsum("bqhgd,bchd->bhgqc", qg, k_j.astype(qg_dt),
+                          preferred_element_type=jnp.float32)
+        if softcap > 0.0:
+            s_ij = softcap * jnp.tanh(s_ij / softcap)
+        allowed = (pos_j[None, :] <= q_positions[:, None]) | (pos_j[None, :] < prefix_len)
+        s_ij = jnp.where(allowed[None, None, None], s_ij, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s_ij, axis=-1))
+        p_ij = jnp.exp(s_ij - m_new[..., None])
+        alpha = jnp.exp(m - m_new)
+        l_new = l * alpha + jnp.sum(p_ij, axis=-1)
+        acc_new = acc * alpha[..., None] + jnp.einsum(
+            "bhgqc,bchd->bhgqd", p_ij.astype(qg_dt), v_j.astype(qg_dt),
+            preferred_element_type=jnp.float32)
+        return (m_new, l_new, acc_new), None
+
+    m0 = constrain(jnp.full((b, kh, g, sq), NEG_INF, jnp.float32),
+                   "batch", kh_ax, None, sq_ax)
+    l0 = constrain(jnp.zeros((b, kh, g, sq), jnp.float32),
+                   "batch", kh_ax, None, sq_ax)
+    acc0 = constrain(jnp.zeros((b, kh, g, sq, dv), jnp.float32),
+                     "batch", kh_ax, None, sq_ax, None)
+    # remat the chunk step: without it, reverse-mode scan saves every p_ij
+    # block — i.e. the full S x S score matrix — defeating flash attention
+    # (dry-run memory finding: 14 GiB/device of saved scores at 4K train).
+    (m, l, acc), _ = jax.lax.scan(jax.checkpoint(step), (m0, l0, acc0),
+                                  (kc, vc, pc))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]        # (B,KH,G,Sq,Dv)
+    out = out.transpose(0, 3, 1, 2, 4).reshape(b, sq, h, dv)
+    return out.astype(q.dtype)
+
+
+def attn_apply(p, x: jax.Array, cfg: ModelConfig, *, positions: jax.Array,
+               prefix_len: int = 0) -> jax.Array:
+    """Full-sequence (train / prefill) attention for one layer."""
+    b, s, _ = x.shape
+    q, k, v = qkv_project(p, x, cfg, positions)
+    pos1d = positions[0] if positions.ndim > 1 else positions
+    out = flash_attention(q, k, v, q_positions=pos1d, kv_positions=pos1d,
+                          chunk=cfg.attn_chunk, prefix_len=prefix_len)
+    out = constrain(out, "batch", "seq", "heads", None)
+    return qdot(out.reshape(b, s, -1), p["wo"])
+
+
+# ---------------------------------------------------------------------------
+# Decode against the SimQuant INT8 KV cache — jnp reference implementation.
+# The Pallas TPU kernel (kernels/kv_decode_attention.py) matches this contract.
+# ---------------------------------------------------------------------------
+
+def decode_attention_ref(q: jax.Array,
+                         k_vals: jax.Array, k_scale: jax.Array, k_zero: jax.Array,
+                         v_vals: jax.Array, v_scale: jax.Array, v_zero: jax.Array,
+                         length: jax.Array, softcap: float = 0.0) -> jax.Array:
+    """One-token attention over a quantized cache.
+
+    q: (B, H, D).  k_vals: (B, Smax, KH, D) int8 with per-channel affine
+    (k_scale/k_zero: (B, 1, KH, D)); v_vals likewise with per-token scales
+    (v_scale/v_zero: (B, Smax, KH, 1)).  length: (B,) valid prefix lengths.
+    Dequantization happens *inside* the attention (paper's fused-dequant
+    pattern): scores use the identity  q . (s*(k-z)) = s*(q.k) - s*(q.z)
+    only blockwise in the kernel; the reference materializes fp32.
+    """
+    import os as _os
+    b, h, d = q.shape
+    smax, kh = k_vals.shape[1], k_vals.shape[2]
+    g = h // kh
+    # REPRO_DECODE_BF16_DEQ: materialize the dequantized cache in bf16 —
+    # halves the dominant decode HBM stream; the score matmul still
+    # accumulates in f32 (preferred_element_type).  The Pallas kernel on
+    # real TPU avoids the materialization entirely (in-VMEM dequant).
+    deq_dt = (jnp.bfloat16 if _os.environ.get("REPRO_DECODE_BF16_DEQ") == "1"
+              else jnp.float32)
+    k = ((k_vals.astype(deq_dt) - k_zero.astype(deq_dt))
+         * k_scale.astype(deq_dt))                           # (B,S,KH,D)
+    v = ((v_vals.astype(deq_dt) - v_zero.astype(deq_dt))
+         * v_scale.astype(deq_dt))
+    qg = (q.reshape(b, kh, g, d).astype(deq_dt)
+          / jnp.sqrt(d).astype(deq_dt))
+    s = jnp.einsum("bhgd,bshd->bhgs", qg, k,
+                   preferred_element_type=jnp.float32)
+    if softcap > 0.0:
+        s = softcap * jnp.tanh(s / softcap)
+    mask = jnp.arange(smax)[None, :] < length[:, None]       # (B,S)
+    s = jnp.where(mask[:, None, None, :], s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgs,bshd->bhgd", w.astype(deq_dt), v,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(b, h, d)

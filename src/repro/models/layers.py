@@ -1,0 +1,100 @@
+"""Shared layer primitives: norms, RoPE, activations, sharding helpers.
+
+All parameters are plain dict pytrees (no flax dependency); initializers take
+an explicit key.  Sharding is expressed through *logical axis* constraints
+that map to mesh axes via ``repro.distributed.sharding`` — when no mesh is
+active (CPU smoke tests) the constraints are no-ops.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.distributed.sharding import constrain
+from repro.kernels.ops import qdot
+
+
+def dense_init(key, shape, dtype=jnp.float32, scale: Optional[float] = None):
+    """Truncated-normal fan-in init (MaxText-style)."""
+    fan_in = shape[0] if len(shape) >= 2 else max(shape[0], 1)
+    std = scale if scale is not None else 1.0 / np.sqrt(fan_in)
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32) * std).astype(dtype)
+
+
+def embed_init(key, shape, dtype=jnp.float32):
+    return (jax.random.normal(key, shape, jnp.float32) * 0.02).astype(dtype)
+
+
+# --- normalization ---------------------------------------------------------
+
+def rms_norm(x: jax.Array, gamma: jax.Array, eps: float = 1e-6) -> jax.Array:
+    """RMSNorm in fp32 accumulation, output in input dtype."""
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * gamma.astype(jnp.float32)).astype(x.dtype)
+
+
+def rms_norm_init(d: int, dtype=jnp.float32):
+    return jnp.ones((d,), dtype)
+
+
+def group_norm(x: jax.Array, gamma: jax.Array, n_groups: int, eps: float = 1e-5) -> jax.Array:
+    """Grouped RMS-style norm used by Mamba-2's gated output norm."""
+    *lead, d = x.shape
+    x32 = x.astype(jnp.float32).reshape(*lead, n_groups, d // n_groups)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    y = (x32 * jax.lax.rsqrt(var + eps)).reshape(*lead, d)
+    return (y * gamma.astype(jnp.float32)).astype(x.dtype)
+
+
+# --- activations -----------------------------------------------------------
+
+def act(name: str):
+    return {"silu": jax.nn.silu, "gelu": jax.nn.gelu, "relu": jax.nn.relu}[name]
+
+
+# --- rotary embeddings -----------------------------------------------------
+
+def rope_frequencies(head_dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float = 10000.0) -> jax.Array:
+    """x: (..., seq, heads, head_dim); positions: broadcastable to (..., seq)."""
+    hd = x.shape[-1]
+    freqs = rope_frequencies(hd, theta)                              # (hd/2,)
+    angles = positions[..., :, None].astype(jnp.float32) * freqs     # (..., S, hd/2)
+    cos = jnp.cos(angles)[..., :, None, :]                           # (..., S, 1, hd/2)
+    sin = jnp.sin(angles)[..., :, None, :]
+    x32 = x.astype(jnp.float32)
+    x1, x2 = jnp.split(x32, 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# --- FFN ---------------------------------------------------------------------
+
+def swiglu_init(key, d: int, f: int, dtype=jnp.float32):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w_gate": dense_init(k1, (d, f), dtype),
+        "w_up": dense_init(k2, (d, f), dtype),
+        "w_out": dense_init(k3, (f, d), dtype),
+    }
+
+
+def swiglu_apply(p, x: jax.Array, act_name: str = "silu") -> jax.Array:
+    """Gated FFN: act(x @ w_gate) * (x @ w_up) @ w_out, TP-sharded on f.
+
+    Weights may be QTensors (quantized runtime path) — qdot dispatches.
+    """
+    h = act(act_name)(qdot(x, p["w_gate"])) * qdot(x, p["w_up"])
+    if h.ndim == 3:
+        h = constrain(h, "batch", "seq", "ffn")
+    elif h.ndim == 2:                      # flattened-token callers (MoE shared)
+        h = constrain(h, "batch", "ffn")
+    return qdot(h, p["w_out"])

@@ -1,0 +1,235 @@
+"""Mamba-2 SSD mixer (state-space duality, arXiv:2405.21060).
+
+TPU adaptation: the SSD *chunked dual form* is used for train/prefill — each
+chunk of Q tokens is processed with dense (Q,Q)/(Q,N)/(N,P) matmuls (MXU
+food), and inter-chunk state flows through a ``lax.scan`` recurrence.  This
+is the matmul-dominant formulation the paper's GPU kernels approximate with
+Triton; on TPU it lowers to plain batched GEMMs, which is exactly what the
+systolic array wants (DESIGN.md §2).
+
+Decode is the O(1) recurrent update on the (B, H, P, N) state — no KV cache
+exists, so SimQuant is inapplicable to this mixer (DESIGN.md §5); weights are
+still quantized by the runtime layer.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import constrain
+from repro.kernels.ops import qdot
+from .config import ModelConfig
+from .layers import dense_init, rms_norm
+
+NEG_INF = -1e30
+
+
+def ssm_init(key, cfg: ModelConfig):
+    d, di = cfg.d_model, cfg.d_inner
+    g, n, h = cfg.ssm_groups, cfg.ssm_state, cfg.ssm_heads
+    conv_dim = di + 2 * g * n
+    ks = jax.random.split(key, 4)
+    dt = jnp.dtype(cfg.param_dtype)
+    # dt bias init so softplus(dt_bias) spans [1e-3, 1e-1] (mamba2 defaults)
+    u = jax.random.uniform(ks[2], (h,), jnp.float32)
+    dt_init = jnp.exp(u * (jnp.log(0.1) - jnp.log(1e-3)) + jnp.log(1e-3))
+    dt_bias = dt_init + jnp.log(-jnp.expm1(-dt_init))   # inverse softplus
+    # Projections are SEPARATE leaves (z/x/B/C/dt), not one fused in_proj:
+    # a fused (d, 2di+2gn+h) output sliced at x|B|C|dt boundaries cuts the
+    # model-sharded dim at non-shard-aligned offsets — SPMD re-shards with
+    # all-to-alls/gathers (dry-run: 260 GB/dev of collectives on the mamba2
+    # train cell).  Split projections shard cleanly: z/x over `model`,
+    # B/C/dt replicated (tiny).  Same math, same init distribution.
+    kz, kx, kb, kc, kdt = jax.random.split(ks[0], 5)
+    kcx, kcb, kcc = jax.random.split(ks[1], 3)
+    conv = lambda k, c: (jax.random.normal(k, (c, cfg.ssm_conv), jnp.float32)
+                         * (1.0 / jnp.sqrt(cfg.ssm_conv))).astype(dt)
+    return {
+        "in_proj_z": dense_init(kz, (d, di), dt),
+        "in_proj_x": dense_init(kx, (d, di), dt),
+        "in_proj_b": dense_init(kb, (d, g * n), dt),
+        "in_proj_c": dense_init(kc, (d, g * n), dt),
+        "in_proj_dt": dense_init(kdt, (d, h), dt),
+        "conv_w_x": conv(kcx, di),
+        "conv_w_b": conv(kcb, g * n),
+        "conv_w_c": conv(kcc, g * n),
+        "conv_bias_x": jnp.zeros((di,), dt),
+        "conv_bias_b": jnp.zeros((g * n,), dt),
+        "conv_bias_c": jnp.zeros((g * n,), dt),
+        "A_log": jnp.log(jnp.arange(1, h + 1, dtype=jnp.float32)),  # A in [-1,-h]
+        "D": jnp.ones((h,), jnp.float32),
+        "dt_bias": dt_bias.astype(jnp.float32),
+        "gn_gamma": jnp.ones((di,), dt),
+        "out_proj": dense_init(ks[3], (di, d), dt),
+    }
+
+
+def _segsum(a: jax.Array) -> jax.Array:
+    """a: (..., Q) log-decays -> (..., Q, Q) lower-tri cumulative sums.
+
+    out[i, j] = sum_{k=j+1..i} a_k for i >= j (0 on diagonal), -inf above.
+    """
+    q = a.shape[-1]
+    cs = jnp.cumsum(a, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((q, q), bool))
+    return jnp.where(mask, diff, NEG_INF)
+
+
+def _causal_conv(xbc: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv1d.  xbc: (B,S,C); w: (C,K)."""
+    k = w.shape[-1]
+    pad = jnp.pad(xbc, ((0, 0), (k - 1, 0), (0, 0)))
+    # stack K shifted views: (B,S,C,K)
+    views = jnp.stack([pad[:, i:i + xbc.shape[1]] for i in range(k)], axis=-1)
+    return jnp.einsum("bsck,ck->bsc", views, w.astype(xbc.dtype)) + b.astype(xbc.dtype)
+
+
+def ssd_scan(x: jax.Array, dt: jax.Array, a_log: jax.Array,
+             b_mat: jax.Array, c_mat: jax.Array, d_skip: jax.Array,
+             chunk: int, init_state: Optional[jax.Array] = None
+             ) -> Tuple[jax.Array, jax.Array]:
+    """Chunked SSD.  x: (B,S,H,P); dt: (B,S,H); b_mat/c_mat: (B,S,N) (G=1);
+    returns (y: (B,S,H,P), final_state: (B,H,P,N))."""
+    bsz, s_orig, h, p = x.shape
+    n = b_mat.shape[-1]
+    q = min(chunk, s_orig)
+    # Pad to a chunk multiple: padded steps use dt=0 (decay=1, zero input) so
+    # they are exact no-ops on the state; their outputs are sliced off.
+    pad = (-s_orig) % q
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        b_mat = jnp.pad(b_mat, ((0, 0), (0, pad), (0, 0)))
+        c_mat = jnp.pad(c_mat, ((0, 0), (0, pad), (0, 0)))
+    s = s_orig + pad
+    nc = s // q
+    f32 = jnp.float32
+
+    a = -jnp.exp(a_log.astype(f32))                       # (H,) negative
+    adt = dt.astype(f32) * a                              # (B,S,H) log-decay
+    xdt = x.astype(f32) * dt.astype(f32)[..., None]       # (B,S,H,P) dt-weighted
+
+    # REPRO_SSD_BF16: stream the big per-chunk operands in bf16 (intra-chunk
+    # einsums run bf16 with f32 MXU accumulation); decays/state stay f32.
+    # Halves the dominant HBM streams on the memory-bound SSM train cells.
+    import os as _os
+    stream_dt = jnp.bfloat16 if _os.environ.get("REPRO_SSD_BF16") == "1" else f32
+
+    def to_chunks(t, tail_shape):
+        return t.reshape((bsz, nc, q) + tail_shape)
+
+    xc = to_chunks(xdt.astype(stream_dt), (h, p)).transpose(1, 0, 2, 3, 4)
+    ac = to_chunks(adt, (h,)).transpose(1, 0, 2, 3)               # (nc,B,Q,H) f32
+    bc = to_chunks(b_mat.astype(stream_dt), (n,)).transpose(1, 0, 2, 3)
+    cc = to_chunks(c_mat.astype(stream_dt), (n,)).transpose(1, 0, 2, 3)
+
+    def chunk_step(state, inp):
+        x_k, a_k, b_k, c_k = inp                          # per-chunk slices
+        a_t = a_k.transpose(0, 2, 1)                      # (B,H,Q) f32
+        cs = jnp.cumsum(a_t, axis=-1)                     # (B,H,Q)
+        l_mat = jnp.exp(_segsum(a_t)).astype(stream_dt)   # (B,H,Q,Q)
+        scores = jnp.einsum("bqn,bkn->bqk", c_k, b_k)     # (B,Q,Q)
+        m = scores[:, None] * l_mat                       # (B,H,Q,K)
+        y_intra = jnp.einsum("bhqk,bkhp->bqhp", m, x_k).astype(f32)
+        # inter-chunk: contribution of the carried state
+        decay_in = jnp.exp(cs)                            # (B,H,Q) decay from chunk start
+        y_inter = jnp.einsum("bqn,bhpn,bhq->bqhp", c_k.astype(f32), state, decay_in)
+        # state update: S <- exp(sum a) * S + sum_k exp(cs_last - cs_k) dt_k B_k x_k
+        decay_out = jnp.exp(cs[..., -1:] - cs).astype(stream_dt)  # (B,H,Q)
+        s_chunk = jnp.einsum("bqn,bhq,bqhp->bhpn", b_k, decay_out, x_k)
+        state_new = (jnp.exp(cs[..., -1])[..., None, None] * state
+                     + s_chunk.astype(f32))
+        return state_new, y_intra + y_inter
+
+    state0 = (jnp.zeros((bsz, h, p, n), f32) if init_state is None
+              else init_state.astype(f32))
+    # remat: avoid saving per-chunk (Q,Q) decay/score blocks for backward
+    # (same flash-style memory argument as attention.flash_attention).
+    final_state, ys = jax.lax.scan(jax.checkpoint(chunk_step), state0,
+                                   (xc, ac, bc, cc))
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(bsz, s, h, p)
+    y = y + d_skip.astype(f32)[None, None, :, None] * x.astype(f32)
+    return y[:, :s_orig].astype(x.dtype), final_state
+
+
+def ssm_apply(p, x: jax.Array, cfg: ModelConfig,
+              init_state: Optional[Dict] = None,
+              return_state: bool = False):
+    """Full-sequence Mamba-2 layer.  x: (B,S,D) -> (B,S,D) [, state dict]."""
+    bsz, s, d = x.shape
+    di, g, n, h = cfg.d_inner, cfg.ssm_groups, cfg.ssm_state, cfg.ssm_heads
+    assert g == 1, "ssm_groups > 1 not supported"
+    dt_c = x.dtype
+
+    # gather seq-sharding: conv + SSD chunk scan are cross-token
+    x = constrain(x, "batch", None, None)
+    z = constrain(qdot(x, p["in_proj_z"]), "batch", None, "ssm_inner")
+    x_in = constrain(qdot(x, p["in_proj_x"]), "batch", None, "ssm_inner")
+    b_in = qdot(x, p["in_proj_b"])                          # (B,S,N) replicated
+    c_in = qdot(x, p["in_proj_c"])
+    dt_raw = qdot(x, p["in_proj_dt"])                       # (B,S,H)
+    conv_in = (x_in, b_in, c_in)
+    xs = jax.nn.silu(_causal_conv(x_in, p["conv_w_x"], p["conv_bias_x"]))
+    xs = constrain(xs, "batch", None, "ssm_inner")
+    b_mat = jax.nn.silu(_causal_conv(b_in, p["conv_w_b"], p["conv_bias_b"]))
+    c_mat = jax.nn.silu(_causal_conv(c_in, p["conv_w_c"], p["conv_bias_c"]))
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])  # (B,S,H)
+
+    y, final_state = ssd_scan(xs.reshape(bsz, s, h, cfg.ssm_head_dim), dt,
+                              p["A_log"], b_mat, c_mat, p["D"],
+                              cfg.ssm_chunk,
+                              None if init_state is None else init_state["ssm"])
+    y = y.reshape(bsz, s, di)
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(dt_c),
+                 p["gn_gamma"], cfg.norm_eps)
+    out = qdot(y, p["out_proj"])
+    if not return_state:
+        return out
+    k1 = cfg.ssm_conv - 1
+    state = {"ssm": final_state,
+             "conv_x": conv_in[0][:, -k1:, :],
+             "conv_b": conv_in[1][:, -k1:, :],
+             "conv_c": conv_in[2][:, -k1:, :]}
+    return out, state
+
+
+def ssm_decode_step(p, x_t: jax.Array, state: Dict, cfg: ModelConfig
+                    ) -> Tuple[jax.Array, Dict]:
+    """One-token recurrent update.  x_t: (B,D); state: {"conv": (B,K-1,C),
+    "ssm": (B,H,P,N)} -> (y_t: (B,D), new state)."""
+    bsz, d = x_t.shape
+    di, g, n, h = cfg.d_inner, cfg.ssm_groups, cfg.ssm_state, cfg.ssm_heads
+    pd = cfg.ssm_head_dim
+    dt_c = x_t.dtype
+
+    z = qdot(x_t, p["in_proj_z"])
+    dt_raw = qdot(x_t, p["in_proj_dt"])
+
+    def step_conv(name, proj):
+        t = qdot(x_t, p[proj])                              # (B, C)
+        window = jnp.concatenate([state[name], t[:, None, :]], axis=1)
+        out = jnp.einsum("bkc,ck->bc", window.astype(jnp.float32),
+                         p[f"conv_w{name[4:]}"].astype(jnp.float32))
+        out = out + p[f"conv_bias{name[4:]}"].astype(jnp.float32)
+        return jax.nn.silu(out).astype(dt_c), window[:, 1:, :]
+
+    xs, new_cx = step_conv("conv_x", "in_proj_x")
+    b_t, new_cb = step_conv("conv_b", "in_proj_b")
+    c_t, new_cc = step_conv("conv_c", "in_proj_c")
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])      # (B,H)
+
+    a = -jnp.exp(p["A_log"])                               # (H,)
+    decay = jnp.exp(dt * a)                                # (B,H)
+    xh = xs.astype(jnp.float32).reshape(bsz, h, pd)
+    hs = state["ssm"] * decay[:, :, None, None] + jnp.einsum(
+        "bn,bhp,bh->bhpn", b_t.astype(jnp.float32), xh, dt)
+    y = jnp.einsum("bhpn,bn->bhp", hs, c_t.astype(jnp.float32))
+    y = y + p["D"][None, :, None] * xh
+    y = y.reshape(bsz, di)
+    y = rms_norm((y * jax.nn.silu(z.astype(jnp.float32))).astype(dt_c),
+                 p["gn_gamma"], cfg.norm_eps)
+    out = qdot(y, p["out_proj"])
+    return out, {"ssm": hs, "conv_x": new_cx, "conv_b": new_cb, "conv_c": new_cc}

@@ -1,0 +1,470 @@
+"""Unified decoder LM over heterogeneous layer patterns.
+
+One model covers all 10 assigned architectures: the layer stack is
+``lax.scan`` over ``n_repeats`` of the config's ``layer_pattern`` (pattern
+positions unrolled inside the scanned block).  Modes:
+
+  * ``forward_train``   — full-sequence, optional calibration taps
+  * ``forward_prefill`` — full-sequence + builds the SimQuant INT8 cache
+  * ``forward_decode``  — one token against the quantized cache / SSM state
+
+Multimodal stubs: MusicGen consumes (B, K, S) codebook tokens (summed
+embeddings, per-codebook heads); PaliGemma consumes precomputed patch
+embeddings concatenated before the text tokens with a bidirectional prefix
+mask (frontends are stubs per the assignment).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.calibration import record_activation
+from repro.distributed.sharding import constrain
+from repro.kernels import ops
+from repro.kernels.ops import qdot
+from repro.serving import kv_cache as kvc
+from .attention import attn_apply, attn_init, decode_attention_ref, flash_attention, qkv_project
+from .config import LayerSpec, ModelConfig
+from .layers import apply_rope, dense_init, embed_init, rms_norm, rms_norm_init, swiglu_apply, swiglu_init
+from .mla import (mla_absorbed_weights, mla_apply, mla_decode_ref, mla_init,
+                  mla_latent, mla_queries)
+from .moe import moe_apply, moe_init
+from .ssm import ssm_apply, ssm_decode_step, ssm_init
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+def _layer_init(key, cfg: ModelConfig, spec: LayerSpec):
+    k_mix, k_ffn = jax.random.split(key)
+    dt = jnp.dtype(cfg.param_dtype)
+    p: Dict[str, Any] = {"norm_mix": rms_norm_init(cfg.d_model, dt)}
+    if spec.mixer == "attn":
+        p["attn"] = attn_init(k_mix, cfg)
+    elif spec.mixer == "mla":
+        p["attn"] = mla_init(k_mix, cfg)
+    else:
+        p["ssm"] = ssm_init(k_mix, cfg)
+    if spec.ffn != "none":
+        p["norm_ffn"] = rms_norm_init(cfg.d_model, dt)
+        if spec.ffn == "dense":
+            p["ffn"] = swiglu_init(k_ffn, cfg.d_model, cfg.d_ff, dt)
+        else:
+            p["moe"] = moe_init(k_ffn, cfg)
+    return p
+
+
+def init_params(cfg: ModelConfig, key) -> Dict[str, Any]:
+    keys = jax.random.split(key, cfg.pattern_len + 3)
+    dt = jnp.dtype(cfg.param_dtype)
+    params: Dict[str, Any] = {}
+
+    if cfg.n_codebooks:
+        emb_keys = jax.random.split(keys[-1], cfg.n_codebooks)
+        params["embed"] = {f"cb{i}": embed_init(emb_keys[i], (cfg.vocab_size, cfg.d_model), dt)
+                           for i in range(cfg.n_codebooks)}
+        head_keys = jax.random.split(keys[-2], cfg.n_codebooks)
+        params["heads"] = {f"head_cb{i}": dense_init(head_keys[i], (cfg.d_model, cfg.vocab_size), dt)
+                           for i in range(cfg.n_codebooks)}
+    else:
+        params["embed"] = {"tok": embed_init(keys[-1], (cfg.vocab_size, cfg.d_model), dt)}
+        if not cfg.tie_embeddings:
+            params["lm_head"] = dense_init(keys[-2], (cfg.d_model, cfg.vocab_size), dt)
+
+    # Stacked layer params: one sub-tree per pattern position, each leaf
+    # stacked over n_repeats (scan axis).
+    layers = {}
+    for i, spec in enumerate(cfg.layer_pattern):
+        rep_keys = jax.random.split(keys[i], cfg.n_repeats)
+        stacked = jax.vmap(lambda k: _layer_init(k, cfg, spec))(rep_keys)
+        layers[f"p{i}"] = stacked
+    params["layers"] = layers
+    params["final_norm"] = rms_norm_init(cfg.d_model, dt)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Embedding / head
+# ---------------------------------------------------------------------------
+
+def _embed_lookup(table, tokens, cfg: ModelConfig) -> jax.Array:
+    """Embedding lookup.  Under a mesh with a vocab-sharded table and a
+    long token axis, use a chunked one-hot matmul: the backward becomes a
+    sharded GEMM instead of a full-table f32 scatter-add (dry-run finding:
+    6x 3.85 GiB replicated scatter operands on the 200K-vocab cell).
+    """
+    from repro.distributed.sharding import active_mesh
+    dt = cfg.compute_dtype
+    v = table.shape[0]
+    if active_mesh() is None or tokens.ndim != 2 or tokens.shape[1] < 512:
+        return table[tokens].astype(dt)
+    b, s = tokens.shape
+    nc = 8
+    while s % nc != 0:
+        nc -= 1
+    c = s // nc
+    tc = tokens.reshape(b, nc, c).transpose(1, 0, 2)              # (nc,B,c)
+
+    def step(_, tk):
+        oh = jax.nn.one_hot(tk, v, dtype=table.dtype)             # (B,c,V)
+        oh = constrain(oh, "batch", None, "vocab")
+        return None, (oh @ table).astype(dt)                      # (B,c,D)
+
+    _, hs = jax.lax.scan(jax.checkpoint(step), None, tc)
+    return hs.transpose(1, 0, 2, 3).reshape(b, s, -1)
+
+
+def embed_tokens(params, batch, cfg: ModelConfig) -> Tuple[jax.Array, int]:
+    """-> (h (B,S,D) in compute dtype, prefix_len)."""
+    dt = cfg.compute_dtype
+    if cfg.n_codebooks:
+        tokens = batch["tokens"] if isinstance(batch, dict) else batch   # (B,K,S)
+        h = sum(_embed_lookup(params["embed"][f"cb{i}"], tokens[:, i], cfg)
+                for i in range(cfg.n_codebooks))
+        return h.astype(dt), 0
+    if cfg.n_img_patches:
+        tokens = batch["tokens"]                                          # (B, S_text)
+        patches = batch["patches"].astype(dt)                             # (B, P, D)
+        h_txt = _embed_lookup(params["embed"]["tok"], tokens, cfg)
+        h = jnp.concatenate([patches, h_txt], axis=1)
+        return h, cfg.n_img_patches
+    tokens = batch["tokens"] if isinstance(batch, dict) else batch
+    return _embed_lookup(params["embed"]["tok"], tokens, cfg), 0
+
+
+def logits_head(params, h: jax.Array, cfg: ModelConfig) -> jax.Array:
+    dt = h.dtype
+    if cfg.n_codebooks:
+        logits = jnp.stack([qdot(h, params["heads"][f"head_cb{i}"])
+                            for i in range(cfg.n_codebooks)], axis=-2)    # (...,K,V)
+    elif cfg.tie_embeddings:
+        logits = h @ params["embed"]["tok"].T.astype(dt)
+    else:
+        logits = qdot(h, params["lm_head"])
+    logits = logits.astype(jnp.float32)
+    if cfg.logits_softcap > 0:
+        logits = cfg.logits_softcap * jnp.tanh(logits / cfg.logits_softcap)
+    # Vocab-shard the fp32 logits: at 150K+ vocab an unsharded (B,S,V) fp32
+    # tensor is the single biggest temp in the train step (dry-run finding).
+    if logits.ndim == 4:
+        logits = constrain(logits, "batch", "seq", None, "vocab")
+    elif logits.ndim == 3:
+        logits = constrain(logits, "batch", "seq", "vocab")
+    elif logits.ndim == 2:
+        logits = constrain(logits, "batch", "vocab")
+    return logits
+
+
+# ---------------------------------------------------------------------------
+# Block (one pattern repeat: P layers)
+# ---------------------------------------------------------------------------
+
+def _block_full(p_blk, h, cfg: ModelConfig, *, positions, prefix_len: int,
+                mode: str, smax: int, capture: bool):
+    """Full-sequence pass over one pattern repeat.
+
+    Returns (h, aux, cache_entries, taps).  ``cache_entries``/{taps} are {}
+    unless mode=="prefill"/capture.
+    """
+    aux = jnp.zeros((), jnp.float32)
+    cache_entries: Dict[str, Any] = {}
+    taps: Dict[str, Any] = {} if capture else None
+    pos1d = positions[0] if positions.ndim > 1 else positions
+
+    for i, spec in enumerate(cfg.layer_pattern):
+        p = p_blk[f"p{i}"]
+        x = rms_norm(h, p["norm_mix"], cfg.norm_eps)
+        if capture:
+            record_activation(taps, f"p{i}/attn_in", x)
+        if spec.mixer == "attn":
+            if mode == "prefill":
+                q, k, v = qkv_project(p["attn"], x, cfg, positions)
+                out = flash_attention(q, k, v, q_positions=pos1d, kv_positions=pos1d,
+                                      chunk=cfg.attn_chunk, prefix_len=prefix_len)
+                b, s, _, _ = q.shape
+                dtc = x.dtype
+                mix = qdot(out.reshape(b, s, -1), p["attn"]["wo"])
+                cache_entries[f"p{i}"] = kvc.gqa_cache_entry(k, v, smax)
+            else:
+                mix = attn_apply(p["attn"], x, cfg, positions=positions,
+                                 prefix_len=prefix_len)
+        elif spec.mixer == "mla":
+            if mode == "prefill":
+                c_kv, k_rope = mla_latent(p["attn"], x, cfg, positions)
+                cache_entries[f"p{i}"] = kvc.mla_cache_entry(c_kv, k_rope, smax)
+            mix = mla_apply(p["attn"], x, cfg, positions=positions,
+                            prefix_len=prefix_len)
+        else:  # ssm
+            if mode == "prefill":
+                mix, state = ssm_apply(p["ssm"], x, cfg, return_state=True)
+                cache_entries[f"p{i}"] = state
+            else:
+                mix = ssm_apply(p["ssm"], x, cfg)
+        # constrain the mixer output to the residual's seq-sharding BEFORE the
+        # add: the row-parallel psum then lowers to a reduce-scatter instead
+        # of a full all-reduce + slice (dry-run: 2x wire on every layer)
+        mix = constrain(mix, "batch", "seq", "embed")
+        h = h + mix
+        h = constrain(h, "batch", "seq", "embed")
+
+        if spec.ffn != "none":
+            y = rms_norm(h, p["norm_ffn"], cfg.norm_eps)
+            if capture:
+                record_activation(taps, f"p{i}/ffn_in", y)
+            if spec.ffn == "dense":
+                f = swiglu_apply(p["ffn"], y, cfg.act_fn)
+            else:
+                f, aux_i = moe_apply(p["moe"], y, cfg)
+                aux = aux + aux_i
+            f = constrain(f, "batch", "seq", "embed")
+            h = h + f
+            h = constrain(h, "batch", "seq", "embed")
+    return h, aux, cache_entries, (taps if capture else {})
+
+
+def _block_decode(p_blk, h, cache_blk, cfg: ModelConfig, *, length):
+    """One-token pass over one pattern repeat.  h: (B, D)."""
+    new_cache: Dict[str, Any] = {}
+    b = h.shape[0]
+    positions = length[:, None]                           # (B,1)
+
+    for i, spec in enumerate(cfg.layer_pattern):
+        p = p_blk[f"p{i}"]
+        entry = cache_blk[f"p{i}"]
+        x = rms_norm(h, p["norm_mix"], cfg.norm_eps)
+        if spec.mixer == "attn":
+            q, k, v = qkv_project(p["attn"], x[:, None, :], cfg, positions)
+            entry = kvc.gqa_cache_append(entry, k[:, 0], v[:, 0], length)
+            out = ops.decode_attention(
+                q[:, 0], entry["k_vals"], entry["k_scale"], entry["k_zero"],
+                entry["v_vals"], entry["v_scale"], entry["v_zero"],
+                length + 1)
+            mix = qdot(out.astype(x.dtype).reshape(b, -1), p["attn"]["wo"])
+        elif spec.mixer == "mla":
+            q_nope, q_rope = mla_queries(p["attn"], x[:, None, :], cfg, positions)
+            c_t, kr_t = mla_latent(p["attn"], x[:, None, :], cfg, positions)
+            entry = kvc.mla_cache_append(entry, c_t[:, 0], kr_t[:, 0], length)
+            w_uk, w_uv = mla_absorbed_weights(p["attn"], cfg)
+            out = mla_decode_ref(q_nope[:, 0], q_rope[:, 0],
+                                 entry["c_vals"], entry["c_scale"], entry["c_zero"],
+                                 entry["kr_vals"], entry["kr_scale"], entry["kr_zero"],
+                                 w_uk, w_uv, length + 1, cfg)
+            mix = qdot(out.astype(x.dtype).reshape(b, -1), p["attn"]["wo"])
+        else:
+            mix, entry = ssm_decode_step(p["ssm"], x, entry, cfg)
+        new_cache[f"p{i}"] = entry
+        h = h + mix.astype(h.dtype)
+
+        if spec.ffn != "none":
+            y = rms_norm(h, p["norm_ffn"], cfg.norm_eps)
+            if spec.ffn == "dense":
+                f = swiglu_apply(p["ffn"], y[:, None, :], cfg.act_fn)[:, 0]
+            else:
+                f, _ = moe_apply(p["moe"], y[:, None, :], cfg)
+                f = f[:, 0]
+            h = h + f.astype(h.dtype)
+    return h, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Full model entry points
+# ---------------------------------------------------------------------------
+
+def _scan_full(params, h, cfg: ModelConfig, *, positions, prefix_len, mode,
+               smax, capture):
+    block = partial(_block_full, cfg=cfg, positions=positions,
+                    prefix_len=prefix_len, mode=mode, smax=smax, capture=capture)
+
+    def body(carry, p_blk):
+        h, aux = carry
+        h_new, aux_i, cache_i, taps_i = block(p_blk, h)
+        if mode == "train":
+            # carry sharded over (batch, seq->model): shrinks the saved
+            # residual stacks by the TP degree (see sharding.seq_carry)
+            h_new = constrain(h_new, "batch", "seq_carry", "embed")
+        return (h_new, aux + aux_i), (cache_i, taps_i)
+
+    if cfg.remat and mode == "train":
+        policy = {
+            "dots_nobatch": jax.checkpoint_policies.dots_with_no_batch_dims_saveable,
+            "nothing": jax.checkpoint_policies.nothing_saveable,
+            "everything": jax.checkpoint_policies.everything_saveable,
+        }[cfg.remat_policy]
+        body = jax.checkpoint(body, policy=policy)
+    (h, aux), (cache, taps) = jax.lax.scan(body, (h, jnp.zeros((), jnp.float32)),
+                                           params["layers"])
+    return h, aux, cache, taps
+
+
+def forward_train(params, batch, cfg: ModelConfig, *, capture: bool = False):
+    """-> (logits, aux_loss, taps).  batch: tokens or dict (see embed_tokens)."""
+    h, prefix_len = embed_tokens(params, batch, cfg)
+    b, s, _ = h.shape
+    positions = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
+    h = constrain(h, "batch", "seq", "embed")
+    h, aux, _, taps = _scan_full(params, h, cfg, positions=positions,
+                                 prefix_len=prefix_len, mode="train",
+                                 smax=0, capture=capture)
+    h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+    logits = logits_head(params, h, cfg)
+    return logits, aux, taps
+
+
+def forward_prefill(params, batch, cfg: ModelConfig, *, smax: int):
+    """-> (last-position logits, cache).  Builds the quantized cache."""
+    h, prefix_len = embed_tokens(params, batch, cfg)
+    b, s, _ = h.shape
+    positions = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
+    h = constrain(h, "batch", "seq", "embed")
+    h, _, cache, _ = _scan_full(params, h, cfg, positions=positions,
+                                prefix_len=prefix_len, mode="prefill",
+                                smax=smax, capture=False)
+    h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+    logits = logits_head(params, h[:, -1:, :], cfg)[:, 0]
+    cache = {"entries": cache, "length": jnp.full((b,), s, jnp.int32)}
+    return logits, cache
+
+
+def forward_decode(params, tokens_t, cache, cfg: ModelConfig):
+    """One decode step.  tokens_t: (B,) int32 (or (B,K) MusicGen).
+
+    -> (logits (B, V) / (B, K, V), new cache).
+    """
+    dt = cfg.compute_dtype
+    if cfg.n_codebooks:
+        h = sum(params["embed"][f"cb{i}"][tokens_t[:, i]] for i in range(cfg.n_codebooks))
+    else:
+        h = params["embed"]["tok"][tokens_t]
+    h = h.astype(dt)                                       # (B, D)
+    length = cache["length"]
+
+    def body(h, xs):
+        p_blk, cache_blk = xs
+        h_new, cache_new = _block_decode(p_blk, h, cache_blk, cfg, length=length)
+        return h_new, cache_new
+
+    h, new_entries = jax.lax.scan(body, h, (params["layers"], cache["entries"]))
+    h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+    logits = logits_head(params, h[:, None, :], cfg)[:, 0]
+    return logits, {"entries": new_entries, "length": length + 1}
+
+
+# ---------------------------------------------------------------------------
+# Loss
+# ---------------------------------------------------------------------------
+
+def lm_loss(logits: jax.Array, labels: jax.Array, mask: Optional[jax.Array] = None,
+            z_coef: float = 1e-4) -> jax.Array:
+    """Causal LM cross-entropy in fp32 with z-loss.
+
+    logits: (B,S,V) or (B,S,K,V); labels: (B,S) or (B,K,S).
+    """
+    if logits.ndim == 4:                                   # MusicGen codebooks
+        labels = labels.transpose(0, 2, 1)                 # (B,S,K)
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    # Fused one-hot contraction instead of take_along_axis: stays sharded
+    # over the vocab axis (a vocab gather would force an all-gather of the
+    # (B,S,V) logits under SPMD).
+    v = logits.shape[-1]
+    onehot = jax.nn.one_hot(labels, v, dtype=logits.dtype)
+    gold = jnp.sum(logits * onehot, axis=-1)
+    nll = lse - gold
+    z = z_coef * lse ** 2
+    per_tok = nll + z
+    if mask is not None:
+        while mask.ndim < per_tok.ndim:
+            mask = mask[..., None]
+        per_tok = per_tok * mask
+        return jnp.sum(per_tok) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(per_tok)
+
+def _head_weights(params, cfg: ModelConfig):
+    """List of (D, V) head weights (1 normally, K for MusicGen codebooks)."""
+    if cfg.n_codebooks:
+        return [params["heads"][f"head_cb{i}"] for i in range(cfg.n_codebooks)]
+    if cfg.tie_embeddings:
+        return [params["embed"]["tok"].T]
+    return [params["lm_head"]]
+
+
+def chunked_ce(h: jax.Array, w_head, labels: jax.Array, cfg: ModelConfig,
+               *, mask: Optional[jax.Array] = None, loss_chunks: int = 8,
+               z_coef: float = 1e-4) -> jax.Array:
+    """Cross-entropy without materializing (B, S, V) logits.
+
+    Sequence is processed in ``loss_chunks`` slices; each slice computes its
+    (B, c, V) logits (vocab-sharded), reduces to per-token nll, and is
+    remat'd — peak logits memory drops by the chunk factor.  Dry-run finding:
+    at 150K vocab the fp32 logits were the largest train-step temp.
+
+    h: (B, S, D); w_head: (D, V); labels: (B, S); mask: (B, S) or None.
+    """
+    b, s, d = h.shape
+    nc = loss_chunks
+    while s % nc != 0:
+        nc -= 1
+    c = s // nc
+    hc = h.reshape(b, nc, c, d).transpose(1, 0, 2, 3)           # (nc,B,c,D)
+    lc = labels.reshape(b, nc, c).transpose(1, 0, 2)            # (nc,B,c)
+    mc = (mask.reshape(b, nc, c).transpose(1, 0, 2).astype(jnp.float32)
+          if mask is not None else jnp.ones((nc, b, c), jnp.float32))
+
+    def step(acc, inp):
+        hh, ll, mm = inp                                        # (B,c,D)...
+        logits = qdot(hh, w_head, out_dtype=jnp.float32)        # (B,c,V)
+        logits = constrain(logits, "batch", None, "vocab")
+        if cfg.logits_softcap > 0:
+            logits = cfg.logits_softcap * jnp.tanh(logits / cfg.logits_softcap)
+        lse = jax.nn.logsumexp(logits, axis=-1)                 # (B,c)
+        onehot = jax.nn.one_hot(ll, logits.shape[-1], dtype=logits.dtype)
+        # match the logits' vocab sharding: an unconstrained one-hot makes
+        # SPMD gather the full-V logits chunk instead (26 GB/dev on mamba2)
+        onehot = constrain(onehot, "batch", None, "vocab")
+        gold = jnp.sum(logits * onehot, axis=-1)
+        per_tok = (lse - gold + z_coef * lse * lse) * mm
+        nll_sum, msum = acc
+        return (nll_sum + jnp.sum(per_tok), msum + jnp.sum(mm)), None
+
+    (nll_sum, msum), _ = jax.lax.scan(
+        jax.checkpoint(step), (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)),
+        (hc, lc, mc))
+    return nll_sum / jnp.maximum(msum, 1.0)
+
+
+def train_loss(params, batch, cfg: ModelConfig, *, loss_chunks: int = 8):
+    """Full train-mode loss with chunked CE (the train_step entry point)."""
+    inputs = {k: v for k, v in batch.items() if k != "labels"}
+    if set(inputs) == {"tokens"}:
+        inputs = inputs["tokens"]
+    labels = batch["labels"]
+    mask = batch.get("loss_mask")
+
+    h, prefix_len = embed_tokens(params, inputs, cfg)
+    b, s, _ = h.shape
+    positions = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
+    # initial carry matches the per-layer carry sharding (seq over model):
+    # a replicated step-0 input would force the whole saved stack replicated
+    h = constrain(h, "batch", "seq_carry", "embed")
+    h, aux, _, _ = _scan_full(params, h, cfg, positions=positions,
+                              prefix_len=prefix_len, mode="train",
+                              smax=0, capture=False)
+    h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+
+    heads = _head_weights(params, cfg)
+    if cfg.n_codebooks:                                    # labels (B,K,S)
+        losses = [chunked_ce(h, heads[i], labels[:, i], cfg,
+                             loss_chunks=loss_chunks)
+                  for i in range(cfg.n_codebooks)]
+        loss = sum(losses) / len(losses)
+    else:
+        if cfg.n_img_patches and labels.shape[1] == s and mask is None:
+            # patch-prefix positions carry no LM target
+            mask = (positions >= cfg.n_img_patches).astype(jnp.float32)
+        loss = chunked_ce(h, heads[0], labels, cfg, mask=mask,
+                          loss_chunks=loss_chunks)
+    return loss + aux

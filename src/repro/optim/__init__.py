@@ -1,0 +1,10 @@
+"""Optimizers: AdamW with optional INT8 block-quantized moments."""
+from .adamw import (
+    AdamWConfig, OptState, init_state, apply_updates, lr_at, global_norm,
+    state_nbytes,
+)
+
+__all__ = [
+    "AdamWConfig", "OptState", "init_state", "apply_updates", "lr_at",
+    "global_norm", "state_nbytes",
+]

@@ -1,0 +1,11 @@
+"""Serving runtime: quantized KV cache + batched prefill/decode engine."""
+from . import kv_cache
+
+__all__ = ["kv_cache", "engine"]
+
+
+def __getattr__(name):            # lazy: engine imports models (heavier)
+    if name == "engine":
+        from . import engine as _engine
+        return _engine
+    raise AttributeError(name)

@@ -1,0 +1,135 @@
+"""SimQuant INT8 KV cache (paper §2 SimQuant + §3.4 runtime adaptation).
+
+Layouts (per pattern-position, stacked over scan repeats on a leading axis):
+
+  GQA:  k_vals  int8 (R, B, Smax, KH, D)   per-channel affine K
+        k_scale f32  (R, B, 1,    KH, D)   (frozen at prefill — KVQuant-style
+        k_zero  f32  (R, B, 1,    KH, D)    offline per-channel calibration)
+        v_vals  int8 (R, B, Smax, KH, D)   per-token affine V
+        v_scale f32  (R, B, Smax, KH, 1)   (computed online per appended token)
+        v_zero  f32  (R, B, Smax, KH, 1)
+  MLA:  c_vals  int8 (R, B, Smax, rkv)  + per-channel scale/zero (R,B,1,rkv)
+        kr_vals int8 (R, B, Smax, dr)   + per-channel scale/zero (R,B,1,dr)
+  SSM:  conv    bf16 (R, B, K-1, conv_dim); ssm f32 (R, B, H, P, N)
+
+Decode appends K with the *frozen* per-channel scales (clipping handled by
+the affine clip — paper Eq. 1) and V/token scales computed on the fly
+(paper's online quantization path).  Batch shards over (pod, data); the
+sequence axis can shard over `data` for the long-context cells ("kv_seq"
+logical axis — DESIGN.md §4 SP).
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.qtensor import int_range
+from repro.core.methods.simquant import quantize_keys, quantize_values
+from repro.distributed.sharding import constrain
+from repro.models.config import ModelConfig
+
+
+# ---------------------------------------------------------------------------
+# GQA cache
+# ---------------------------------------------------------------------------
+
+def gqa_cache_entry(k: jax.Array, v: jax.Array, smax: int) -> Dict[str, jax.Array]:
+    """Quantize prefill K/V (B, S, KH, D) and embed into an Smax-long cache."""
+    b, s, kh, d = k.shape
+    qk = quantize_keys(k)                       # per-channel (reduce over seq)
+    qv = quantize_values(v)                     # per-token
+    pad = [(0, 0), (0, smax - s), (0, 0), (0, 0)]
+    entry = {
+        "k_vals": jnp.pad(qk.values, pad),
+        "k_scale": qk.scale,
+        "k_zero": qk.zero,
+        "v_vals": jnp.pad(qv.values, pad),
+        "v_scale": jnp.pad(qv.scale, pad, constant_values=1.0),
+        "v_zero": jnp.pad(qv.zero, pad),
+    }
+    return {n: constrain_cache(n, a) for n, a in entry.items()}
+
+
+def constrain_cache(name: str, a: jax.Array) -> jax.Array:
+    """Apply logical sharding to one cache tensor (no leading repeat dim)."""
+    if a.ndim == 4:
+        seq_ax = "kv_seq" if a.shape[1] > 1 else None
+        return constrain(a, "batch", seq_ax, "kv_heads", None)
+    if a.ndim == 3:
+        seq_ax = "kv_seq" if a.shape[1] > 1 else None
+        return constrain(a, "batch", seq_ax, None)
+    return a
+
+
+def gqa_cache_append(entry: Dict[str, jax.Array], k_t: jax.Array, v_t: jax.Array,
+                     pos: jax.Array) -> Dict[str, jax.Array]:
+    """Append one token's K/V (B, KH, D) at position ``pos`` (B,).
+
+    K uses the frozen per-channel scales; V computes fresh per-token scales
+    (paper Alg. 1 online path with alpha=0 — instantaneous range).
+    """
+    b, kh, d = k_t.shape
+    qmin, qmax = int_range(8)
+    k_scale = entry["k_scale"][:, 0]            # (B,KH,D)
+    k_zero = entry["k_zero"][:, 0]
+    k_q = jnp.clip(jnp.round(k_t.astype(jnp.float32) / k_scale) + k_zero,
+                   qmin, qmax).astype(jnp.int8)
+
+    vmin = jnp.min(v_t, axis=-1, keepdims=True).astype(jnp.float32)
+    vmax = jnp.max(v_t, axis=-1, keepdims=True).astype(jnp.float32)
+    v_scale = jnp.maximum((vmax - vmin) / (qmax - qmin), 1e-8)
+    v_zero = qmin - jnp.round(vmin / v_scale)
+    v_q = jnp.clip(jnp.round(v_t.astype(jnp.float32) / v_scale) + v_zero,
+                   qmin, qmax).astype(jnp.int8)
+
+    bidx = jnp.arange(b)
+    new = dict(entry)
+    new["k_vals"] = entry["k_vals"].at[bidx, pos].set(k_q)
+    new["v_vals"] = entry["v_vals"].at[bidx, pos].set(v_q)
+    new["v_scale"] = entry["v_scale"].at[bidx, pos].set(v_scale)
+    new["v_zero"] = entry["v_zero"].at[bidx, pos].set(v_zero)
+    return new
+
+
+# ---------------------------------------------------------------------------
+# MLA latent cache
+# ---------------------------------------------------------------------------
+
+def mla_cache_entry(c_kv: jax.Array, k_rope: jax.Array, smax: int) -> Dict[str, jax.Array]:
+    """Quantize the latent (B,S,rkv) + rope key (B,S,dr) per-channel."""
+    from repro.core.qtensor import minmax_scale_zero, quantize_affine
+    out = {}
+    for name, x in (("c", c_kv), ("kr", k_rope)):
+        scale, zero = minmax_scale_zero(x, bits=8, axis=(1,))     # reduce seq
+        q = quantize_affine(x, scale, zero, bits=8, axis=(1,))
+        pad = [(0, 0), (0, smax - x.shape[1]), (0, 0)]
+        out[f"{name}_vals"] = constrain_cache("", jnp.pad(q.values, pad))
+        out[f"{name}_scale"] = q.scale
+        out[f"{name}_zero"] = q.zero
+    return out
+
+
+def mla_cache_append(entry: Dict[str, jax.Array], c_t: jax.Array, kr_t: jax.Array,
+                     pos: jax.Array) -> Dict[str, jax.Array]:
+    """Append one token's latent (B,rkv) + rope key (B,dr) at ``pos``."""
+    qmin, qmax = int_range(8)
+    new = dict(entry)
+    for name, x_t in (("c", c_t), ("kr", kr_t)):
+        scale = entry[f"{name}_scale"][:, 0]
+        zero = entry[f"{name}_zero"][:, 0]
+        q = jnp.clip(jnp.round(x_t.astype(jnp.float32) / scale) + zero,
+                     qmin, qmax).astype(jnp.int8)
+        bidx = jnp.arange(x_t.shape[0])
+        new[f"{name}_vals"] = entry[f"{name}_vals"].at[bidx, pos].set(q)
+    return new
+
+
+def cache_nbytes(cache) -> int:
+    """Packed size of a cache pytree (memory accounting for benches)."""
+    total = 0
+    for leaf in jax.tree_util.tree_leaves(cache):
+        if hasattr(leaf, "nbytes"):
+            total += leaf.nbytes
+    return total

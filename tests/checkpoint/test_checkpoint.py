@@ -1,0 +1,109 @@
+"""Checkpoint manager: atomic/async/retention/resume + quantized export."""
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointManager, export_quantized, import_quantized
+from repro.core import QuantPolicy, QTensor, quantize_tree
+
+
+def _tree(seed=0):
+    k = jax.random.PRNGKey(seed)
+    return {
+        "layers": {"p0": {"wq": jax.random.normal(k, (64, 64)),
+                          "norm": jnp.ones(64)}},
+        "step_scalar": jnp.asarray(7, jnp.int32),
+    }
+
+
+def test_save_restore_roundtrip(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    tree = _tree()
+    mgr.save(3, tree)
+    assert mgr.latest_step() == 3
+    out = mgr.restore(3, tree)
+    for a, b in zip(jax.tree_util.tree_leaves(out), jax.tree_util.tree_leaves(tree)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b))
+
+
+def test_restore_with_qtensors(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    qt = quantize_tree(_tree(), QuantPolicy(method="symmetric", min_size=1024))
+    mgr.save(1, qt)
+    out = mgr.restore(1, qt)
+    q_in = qt["layers"]["p0"]["wq"]
+    q_out = out["layers"]["p0"]["wq"]
+    assert isinstance(q_out, QTensor) and q_out.bits == q_in.bits
+    np.testing.assert_array_equal(np.asarray(q_out.values), np.asarray(q_in.values))
+
+
+def test_async_save_and_retention(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    tree = _tree()
+    for s in range(5):
+        mgr.save(s, tree, blocking=False)
+    mgr.wait()
+    steps = mgr.all_steps()
+    assert steps == [3, 4]
+
+
+def test_keep_period(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=1, keep_period=2)
+    tree = _tree()
+    for s in range(5):
+        mgr.save(s, tree)
+    steps = mgr.all_steps()
+    assert 4 in steps          # newest
+    assert 0 in steps and 2 in steps   # period-protected
+
+
+def test_atomic_no_partial_dir(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(1, _tree())
+    names = os.listdir(tmp_path)
+    assert not any(n.startswith("tmp.") for n in names)
+    assert mgr.manifest(1)["step"] == 1
+
+
+def test_resume_latest_after_restart(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    for s in (10, 20):
+        mgr.save(s, _tree(s))
+    # simulate restart: new manager instance over the same directory
+    mgr2 = CheckpointManager(str(tmp_path))
+    assert mgr2.latest_step() == 20
+    out = mgr2.restore(20, _tree())
+    np.testing.assert_allclose(
+        np.asarray(out["layers"]["p0"]["wq"]),
+        np.asarray(_tree(20)["layers"]["p0"]["wq"]))
+
+
+def test_quantized_export_import_bitexact(tmp_path):
+    """ONNX-style Q/DQ serialization (paper §3.5) round-trips bit-exactly."""
+    qt = quantize_tree(_tree(), QuantPolicy(method="zeropoint", min_size=1024))
+    path = str(tmp_path / "model")
+    export_quantized(path, qt, extra_meta={"method": "zeropoint"})
+    assert os.path.exists(path + ".npz")
+    assert os.path.exists(path + ".manifest.msgpack")
+    back = import_quantized(path, qt)
+    q_in = qt["layers"]["p0"]["wq"]
+    q_out = back["layers"]["p0"]["wq"]
+    np.testing.assert_array_equal(np.asarray(q_out.values), np.asarray(q_in.values))
+    np.testing.assert_allclose(np.asarray(q_out.zero), np.asarray(q_in.zero))
+    np.testing.assert_allclose(np.asarray(q_out.dequantize()),
+                               np.asarray(q_in.dequantize()))
+
+
+def test_int4_export_roundtrip(tmp_path):
+    qt = quantize_tree(_tree(), QuantPolicy(method="gptq", min_size=1024))
+    path = str(tmp_path / "m4")
+    export_quantized(path, qt)
+    back = import_quantized(path, qt)
+    q_out = back["layers"]["p0"]["wq"]
+    assert q_out.bits == 4
+    np.testing.assert_allclose(np.asarray(q_out.dequantize()),
+                               np.asarray(qt["layers"]["p0"]["wq"].dequantize()))

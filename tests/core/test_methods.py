@@ -1,0 +1,118 @@
+"""Per-backend behaviour: the paper's Algorithm Backend Layer contracts."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import available_methods, get_method, quantize_symmetric
+from repro.core.methods import awq, gptq, simquant, smoothquant, zeroquant
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _calib(d_in=64, n=256, correlated=True):
+    x = jax.random.normal(KEY, (n, d_in))
+    if correlated:
+        mix = jax.random.normal(jax.random.PRNGKey(1), (d_in, d_in)) * 0.3
+        x = x @ mix
+    # outlier channels (the SmoothQuant motivation)
+    x = x.at[:, :4].mul(8.0)
+    return x
+
+
+def test_registry_complete():
+    methods = available_methods()
+    for m in ["symmetric", "zeropoint", "zeroquant", "smoothquant", "simquant",
+              "awq", "gptq"]:
+        assert m in methods
+
+
+def test_smoothquant_exactness_prequant():
+    """Thm 1 algebraic identity: (X/s)(sW) == XW exactly (pre-quantization)."""
+    w = jax.random.normal(KEY, (64, 32))
+    x = _calib()
+    gamma = jnp.ones((64,))
+    act_absmax = jnp.max(jnp.abs(x), axis=0)
+    w_f, gamma_f, s = smoothquant.fold(w, gamma, act_absmax)
+    np.testing.assert_allclose(np.asarray((x * gamma_f) @ w_f),
+                               np.asarray((x * gamma) @ w), rtol=2e-4, atol=2e-4)
+
+
+def test_smoothquant_beats_plain_w8a8_on_outliers():
+    """With activation outliers, smoothed W8A8 has lower matmul error."""
+    w = jax.random.normal(KEY, (64, 32)) * 0.4
+    x = _calib()
+    ref = x @ w
+    act_absmax = jnp.max(jnp.abs(x), axis=0)
+
+    def w8a8_err(x_in, w_in):
+        from repro.kernels.ref import quant_gemm_fused_ref
+        qw = quantize_symmetric(w_in, 8, axis=(0,))
+        out = quant_gemm_fused_ref(x_in, qw.values, qw.scale.reshape(1, -1))
+        return float(jnp.mean((out - ref) ** 2))
+
+    plain = w8a8_err(x, w)
+    s = smoothquant.smoothing_factors(act_absmax, w)
+    smoothed = w8a8_err(x / s[None, :], w * s[:, None])
+    assert smoothed < plain, (smoothed, plain)
+
+
+def test_gptq_beats_rtn():
+    w = jax.random.normal(KEY, (64, 48)) * 0.5
+    x = _calib()
+    qg = gptq.quantize_weight(w, calib_x=x, bits=4)
+    rtn = quantize_symmetric(w, 4, axis=(0,))
+    e_g = float(jnp.mean((x @ qg.dequantize() - x @ w) ** 2))
+    e_r = float(jnp.mean((x @ rtn.dequantize() - x @ w) ** 2))
+    assert e_g < e_r, (e_g, e_r)
+
+
+def test_gptq_act_order():
+    w = jax.random.normal(KEY, (64, 48)) * 0.5
+    x = _calib()
+    q = gptq.quantize_weight(w, calib_x=x, bits=4, act_order=True)
+    e = float(jnp.mean((x @ q.dequantize() - x @ w) ** 2))
+    rtn = quantize_symmetric(w, 4, axis=(0,))
+    e_r = float(jnp.mean((x @ rtn.dequantize() - x @ w) ** 2))
+    assert e < e_r
+
+
+def test_awq_beats_rtn_with_outlier_channels():
+    w = jax.random.normal(KEY, (64, 48)) * 0.5
+    x = _calib()
+    stats = jnp.max(jnp.abs(x), axis=0)
+    qa = awq.quantize_weight(w, stats=stats, calib_x=x[:64], bits=4)
+    rtn = quantize_symmetric(w, 4, axis=(0,))
+    e_a = float(jnp.mean((x @ qa.dequantize() - x @ w) ** 2))
+    e_r = float(jnp.mean((x @ rtn.dequantize() - x @ w) ** 2))
+    assert e_a < e_r, (e_a, e_r)
+
+
+def test_simquant_kv_bounds():
+    """K per-channel / V per-token reconstruction within the Thm-2 bound."""
+    k = jax.random.normal(KEY, (2, 32, 4, 16)) * jnp.linspace(0.2, 4, 16)
+    v = jax.random.normal(jax.random.PRNGKey(2), (2, 32, 4, 16))
+    qk, qv = simquant.quantize_kv(k, v)
+    # per-channel K: error bounded by per-channel range / 255
+    k_range = (jnp.max(k, axis=1, keepdims=True) - jnp.min(k, axis=1, keepdims=True))
+    assert float(jnp.max(jnp.abs(qk.dequantize() - k) - k_range / 255)) <= 1e-5
+    v_range = (jnp.max(v, axis=-1, keepdims=True) - jnp.min(v, axis=-1, keepdims=True))
+    assert float(jnp.max(jnp.abs(qv.dequantize() - v) - v_range / 255)) <= 1e-5
+
+
+def test_zeroquant_groups_beat_per_channel_on_ramp():
+    """Group-wise scales win when magnitude varies along the input dim."""
+    d_in, d_out = 512, 32
+    ramp = jnp.linspace(0.05, 5.0, d_in)[:, None]
+    w = jax.random.normal(KEY, (d_in, d_out)) * ramp
+    qz = zeroquant.quantize_weight(w, group_size=128)
+    per_ch = quantize_symmetric(w, 8, axis=(0,))
+    e_z = float(jnp.mean((qz.dequantize().reshape(w.shape) - w) ** 2))
+    e_c = float(jnp.mean((per_ch.dequantize() - w) ** 2))
+    assert e_z < e_c
+
+
+def test_weight_only_methods_flagged():
+    assert get_method("awq").weight_only and get_method("gptq").weight_only
+    assert not get_method("symmetric").weight_only
+    assert get_method("smoothquant").needs_calibration

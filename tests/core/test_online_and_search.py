@@ -1,0 +1,160 @@
+"""Alg-1 EMA online quantization + Thm-3 bitwidth search + Thm-8 calibration."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (EmaScaleState, async_quant_update, greedy_search,
+                        quantize_with_state, windowed_scale)
+from repro.core.apply import (QuantPolicy, dequantize_tree, extract_modules,
+                              fake_quantize_tree, quantize_tree, tree_nbytes)
+
+KEY = jax.random.PRNGKey(0)
+
+
+def test_ema_converges_to_stationary_absmax():
+    """Eq. 2 fixed point: delta_t -> absmax(X) for a stationary stream."""
+    state = EmaScaleState.init()
+    x = jax.random.normal(KEY, (512,)) * 3.0
+    target = float(jnp.max(jnp.abs(x)))
+    for _ in range(60):
+        _, state = async_quant_update(x, state, alpha=0.9)
+    assert abs(float(state.delta) - target) / target < 1e-3
+
+
+def test_ema_tracks_range_shift():
+    """Runtime adaptation (paper §3.4): scale follows a distribution shift."""
+    state = EmaScaleState.init()
+    for i in range(40):
+        x = jax.random.normal(jax.random.PRNGKey(i), (256,))
+        _, state = async_quant_update(x, state, alpha=0.8)
+    d_small = float(state.delta)
+    for i in range(40):
+        x = jax.random.normal(jax.random.PRNGKey(100 + i), (256,)) * 10
+        _, state = async_quant_update(x, state, alpha=0.8)
+    assert float(state.delta) > 5 * d_small
+
+
+def test_quantize_with_state_roundtrip():
+    state = EmaScaleState.init()
+    x = jax.random.normal(KEY, (256,)) * 2
+    for _ in range(20):
+        _, state = async_quant_update(x, state)
+    q = quantize_with_state(x, state)
+    err = float(jnp.mean(jnp.abs(q.dequantize() - x)))
+    assert err < 0.02
+
+
+def test_windowed_scale_eq9():
+    w = jnp.array([1.0, 2.0, 3.0, 10.0])
+    delta, eps = windowed_scale(w, alpha=0.5)
+    assert 1.0 < float(delta) <= 10.0
+    assert float(eps) >= float(jnp.std(w)) - 1e-6
+
+
+def test_greedy_search_monotone_descent():
+    """Thm 3: the objective trace is monotonically decreasing."""
+    layers = {f"l{i}": jax.random.normal(jax.random.PRNGKey(i), (64, 64)) * s
+              for i, s in enumerate([0.1, 1.0, 5.0])}
+    res = greedy_search(layers, lam=1e-6, policy="entropy")
+    trace = res.objective_trace
+    assert all(trace[i + 1] <= trace[i] + 1e-9 for i in range(len(trace) - 1))
+    assert res.compression > 1.0
+    assert set(res.assignment.values()) <= {2, 3, 4, 8}
+
+
+def test_greedy_search_sensitivity_ordering():
+    """High-magnitude (sensitive) layers keep more bits under the same lambda."""
+    layers = {"small": jax.random.normal(KEY, (64, 64)) * 0.01,
+              "big": jax.random.normal(jax.random.PRNGKey(7), (64, 64)) * 10.0}
+    res = greedy_search(layers, lam=1e-7, policy="entropy")
+    assert res.assignment["big"] >= res.assignment["small"]
+
+
+def test_grid_policy_with_task_loss():
+    layers = {"a": jax.random.normal(KEY, (32, 32)),
+              "b": jax.random.normal(jax.random.PRNGKey(2), (32, 32))}
+    x = jax.random.normal(jax.random.PRNGKey(3), (64, 32))
+
+    def task_loss(assign):
+        from repro.core import fake_quantize
+        out = x
+        for name in ("a", "b"):
+            out = out @ fake_quantize(layers[name], bits=assign[name], axis=(0,))
+        ref = x @ layers["a"] @ layers["b"]
+        return float(jnp.mean((out - ref) ** 2))
+
+    res = greedy_search(layers, lam=1e-8, policy="grid", task_loss_fn=task_loss)
+    assert res.evaluations > 0
+    assert res.objective_trace[-1] <= res.objective_trace[0]
+
+
+def test_calibration_scale_error_decays_with_samples():
+    """Thm 8 flavour: absmax estimation error decreases with sample count."""
+    rng = np.random.default_rng(0)
+    full = rng.standard_normal(200_000).astype(np.float32)
+    true = np.abs(full).max()
+    errs = []
+    for n in (16, 256, 16384):
+        est = np.abs(full[:n]).max()
+        errs.append(abs(true - est))
+    assert errs[2] <= errs[0] + 1e-9 and errs[2] <= errs[1] + 1e-9
+
+
+# ---------------------------------------------------------------------------
+# Runtime dispatch layer (apply.py)
+# ---------------------------------------------------------------------------
+
+def _toy_params():
+    k = jax.random.PRNGKey(0)
+    return {
+        "layers": {"p0": {
+            "attn": {"wq": jax.random.normal(k, (128, 128)),
+                     "wo": jax.random.normal(k, (128, 128))},
+            "ffn": {"w_gate": jax.random.normal(k, (128, 256)),
+                    "w_out": jax.random.normal(k, (256, 128))},
+            "norm_mix": jnp.ones(128),
+        }},
+        "embed": {"tok": jax.random.normal(k, (512, 128))},
+    }
+
+
+def test_extract_modules_respects_policy():
+    params = _toy_params()
+    pol = QuantPolicy(method="symmetric", min_size=1024)
+    names = [n for n, _ in extract_modules(params, pol)]
+    assert any("wq" in n for n in names)
+    assert not any("norm" in n for n in names)
+    assert not any("embed" in n for n in names)      # excluded by default
+
+
+def test_quantize_dequantize_tree_roundtrip():
+    from repro.core import QTensor
+    params = _toy_params()
+    pol = QuantPolicy(method="symmetric", min_size=1024)
+    qt = quantize_tree(params, pol)
+    qleaves = [l for l in jax.tree_util.tree_leaves(
+        qt, is_leaf=lambda l: isinstance(l, QTensor)) if isinstance(l, QTensor)]
+    assert len(qleaves) == 4
+    deq = dequantize_tree(qt)
+    err = float(jnp.max(jnp.abs(deq["layers"]["p0"]["attn"]["wq"].astype(jnp.float32)
+                                - params["layers"]["p0"]["attn"]["wq"])))
+    assert err < 0.05
+    assert tree_nbytes(qt) < tree_nbytes(params) * 0.6
+
+
+def test_bits_override():
+    params = _toy_params()
+    pol = QuantPolicy(method="symmetric", min_size=1024,
+                      bits_override={"*wq*": 4})
+    qt = quantize_tree(params, pol)
+    assert qt["layers"]["p0"]["attn"]["wq"].bits == 4
+    assert qt["layers"]["p0"]["attn"]["wo"].bits == 8
+
+
+def test_fake_quantize_tree_preserves_structure():
+    params = _toy_params()
+    pol = QuantPolicy(method="zeroquant", min_size=1024)
+    fq = fake_quantize_tree(params, pol)
+    assert jax.tree_util.tree_structure(fq) == jax.tree_util.tree_structure(params)
+    for a, b in zip(jax.tree_util.tree_leaves(fq), jax.tree_util.tree_leaves(params)):
+        assert a.shape == b.shape and a.dtype == b.dtype

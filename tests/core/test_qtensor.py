@@ -1,0 +1,95 @@
+"""Quantization primitive invariants, incl. hypothesis property tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (QTensor, absmax_scale, dequantize_blockwise, fake_quantize,
+                        int_range, minmax_scale_zero, quantize_asymmetric,
+                        quantize_blockwise, quantize_symmetric)
+
+KEY = jax.random.PRNGKey(0)
+
+
+@pytest.mark.parametrize("bits", [2, 3, 4, 8])
+def test_symmetric_roundtrip_bound(bits):
+    """|x - deq(q(x))| <= scale/2 elementwise (round-to-nearest)."""
+    x = jax.random.normal(KEY, (64, 32)) * 2.5
+    q = quantize_symmetric(x, bits=bits, axis=(0,))
+    scale = absmax_scale(x, bits=bits, axis=(0,))
+    err = jnp.abs(q.dequantize() - x)
+    assert float(jnp.max(err - scale / 2)) <= 1e-6
+
+
+@pytest.mark.parametrize("bits", [4, 8])
+def test_thm2_asymmetric_bound(bits):
+    """Paper Thm 2: ||X - X_hat||_inf <= (max-min)/(2^b - 1)."""
+    x = jax.random.normal(jax.random.PRNGKey(3), (128, 16)) * 3 + 1.7
+    q = quantize_asymmetric(x, bits=bits)
+    bound = (float(jnp.max(x)) - float(jnp.min(x))) / (2 ** bits - 1)
+    err = float(jnp.max(jnp.abs(q.dequantize() - x)))
+    assert err <= bound + 1e-5, (err, bound)
+
+
+def test_int4_native_dtype():
+    x = jax.random.normal(KEY, (32, 32))
+    q = quantize_symmetric(x, bits=4, axis=(0,))
+    assert q.values.dtype == jnp.int4
+    assert q.nbytes_packed() < x.nbytes / 4   # 4-bit packing + scales
+
+
+def test_codes_within_range():
+    for bits in (2, 3, 4, 8):
+        x = jax.random.normal(KEY, (256,)) * 100
+        q = quantize_symmetric(x, bits=bits)
+        lo, hi = int_range(bits)
+        v = np.asarray(q.values, dtype=np.int32)
+        assert v.min() >= lo and v.max() <= hi
+
+
+def test_blockwise_roundtrip():
+    x = jax.random.normal(KEY, (1000,)) * jnp.linspace(0.1, 10, 1000)
+    q = quantize_blockwise(x, bits=8, block=128)
+    back = dequantize_blockwise(q, x.shape)
+    # per-block scale must beat per-tensor scale on this ramp
+    per_tensor = quantize_symmetric(x, bits=8).dequantize()
+    assert float(jnp.mean((back - x) ** 2)) < float(jnp.mean((per_tensor - x) ** 2))
+
+
+def test_zero_point_exact_on_zero():
+    """Asymmetric quantization represents x=min exactly at code qmin."""
+    x = jnp.concatenate([jnp.zeros(10), jnp.linspace(0, 5, 90)])
+    q = quantize_asymmetric(x, bits=8)
+    assert float(jnp.max(jnp.abs(q.dequantize()[:10]))) < 0.02
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.integers(2, 200), st.floats(0.01, 100.0), st.sampled_from([4, 8]))
+def test_property_roundtrip_error(n, scale_mag, bits):
+    """Property: quantization error is bounded by the step size, any shape/scale."""
+    x = np.random.RandomState(n).randn(n).astype(np.float32) * scale_mag
+    q = quantize_symmetric(jnp.asarray(x), bits=bits)
+    step = float(q.scale.max())
+    err = np.abs(np.asarray(q.dequantize()) - x).max()
+    assert err <= step / 2 + 1e-4 * scale_mag
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(1, 64), st.integers(1, 64))
+def test_property_fake_quant_idempotent(m, n):
+    """fake_quantize is idempotent: Q(Q(x)) == Q(x)."""
+    x = np.random.RandomState(m * 97 + n).randn(m, n).astype(np.float32)
+    y1 = np.asarray(fake_quantize(jnp.asarray(x), bits=8))
+    y2 = np.asarray(fake_quantize(jnp.asarray(y1), bits=8))
+    np.testing.assert_allclose(y1, y2, atol=1e-6)
+
+
+def test_qtensor_is_pytree():
+    x = jax.random.normal(KEY, (16, 16))
+    q = quantize_symmetric(x, bits=8, axis=(0,))
+    leaves = jax.tree_util.tree_leaves(q)
+    assert len(leaves) == 2                     # values + scale (zero=None)
+    q2 = jax.jit(lambda t: QTensor(values=t.values, scale=t.scale * 2,
+                                   zero=t.zero, bits=t.bits, axis=t.axis))(q)
+    assert float(jnp.max(jnp.abs(q2.dequantize() - 2 * q.dequantize()))) < 1e-6

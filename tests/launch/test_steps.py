@@ -1,0 +1,82 @@
+"""input_specs / step-builder contracts (no mesh: plain CPU shapes)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_config, get_smoke_config
+from repro.launch.steps import (SHAPES, batch_specs, cell_is_applicable,
+                                input_specs, make_train_step, shape_kind)
+from repro.optim import AdamWConfig, init_state
+
+
+def test_shapes_table_exact():
+    assert SHAPES["train_4k"] == dict(seq=4096, batch=256, kind="train")
+    assert SHAPES["prefill_32k"] == dict(seq=32768, batch=32, kind="prefill")
+    assert SHAPES["decode_32k"] == dict(seq=32768, batch=128, kind="decode")
+    assert SHAPES["long_500k"] == dict(seq=524288, batch=1, kind="decode")
+
+
+def test_long_context_applicability():
+    """long_500k runs for SSM/hybrid, skips pure-attention (assignment)."""
+    assert cell_is_applicable(get_config("mamba2-370m"), "long_500k")[0]
+    assert cell_is_applicable(get_config("jamba-v0.1-52b"), "long_500k")[0]
+    for arch in ("qwen3-32b", "minicpm3-4b", "paligemma-3b", "musicgen-large",
+                 "llama4-maverick-400b-a17b"):
+        ok, why = cell_is_applicable(get_config(arch), "long_500k")
+        assert not ok and "attention" in why
+
+
+def test_batch_specs_multimodal():
+    cfg = get_config("paligemma-3b")
+    b = batch_specs(cfg, "train_4k", None, with_labels=True)
+    assert b["patches"].shape == (256, cfg.n_img_patches, cfg.d_model)
+    assert b["tokens"].shape == (256, 4096 - cfg.n_img_patches)
+    assert b["labels"].shape == (256, 4096)
+
+    cfg = get_config("musicgen-large")
+    b = batch_specs(cfg, "train_4k", None, with_labels=True)
+    assert b["tokens"].shape == (256, 4, 4096)
+
+
+def test_input_specs_decode_cache_shapes():
+    cfg = get_smoke_config("qwen3-1.7b")
+    import repro.launch.steps as steps
+    old = steps.SHAPES
+    steps.SHAPES = {"decode_32k": dict(seq=64, batch=4, kind="decode")}
+    try:
+        specs = input_specs(cfg, "decode_32k", None)
+        cache = specs["cache"]
+        k = cache["entries"]["p0"]["k_vals"]
+        assert k.shape == (cfg.n_repeats, 4, 64, cfg.kv_heads, cfg.hd)
+        assert k.dtype == jnp.int8
+        assert cache["length"].shape == (4,)
+    finally:
+        steps.SHAPES = old
+
+
+def test_train_step_with_compression_and_microbatches():
+    cfg = get_smoke_config("qwen2-0.5b")
+    ocfg = AdamWConfig(lr=1e-3, warmup_steps=1)
+    params = jax.eval_shape(lambda k: __import__("repro.models", fromlist=["init_params"]).init_params(cfg, k),
+                            jax.random.PRNGKey(0))
+    from repro.models import init_params
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    opt = init_state(params, ocfg)
+    from repro.data import DataConfig, SyntheticLM
+    dc = DataConfig(vocab_size=cfg.vocab_size, seq_len=32, global_batch=4)
+    batch = jax.tree_util.tree_map(jnp.asarray, SyntheticLM(dc).batch_at(0))
+
+    step = jax.jit(make_train_step(cfg, ocfg, microbatches=2))
+    p2, o2, m = step(params, opt, batch)
+    assert bool(jnp.isfinite(m["loss"]))
+
+    from repro.distributed.compression import init_error_state
+    stepc = jax.jit(make_train_step(cfg, ocfg, compress_grads=True))
+    err = init_error_state(params)
+    p3, o3, m3, err2 = stepc(params, opt, batch, err)
+    assert bool(jnp.isfinite(m3["loss"]))
+    # error feedback is now nonzero somewhere
+    total_err = sum(float(jnp.sum(jnp.abs(l))) for l in jax.tree_util.tree_leaves(err2))
+    assert total_err > 0

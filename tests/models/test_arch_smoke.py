@@ -1,0 +1,133 @@
+"""Per-architecture smoke tests: reduced config, one forward + one train step
+on CPU, asserting output shapes and finiteness (assignment requirement)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ALL, ASSIGNED, get_config, get_smoke_config
+from repro.data import DataConfig, SyntheticLM
+from repro.launch.steps import make_train_step
+from repro.models import forward_prefill, forward_decode, forward_train, init_params
+from repro.optim import AdamWConfig, init_state
+
+SEQ = 32
+BATCH = 2
+
+
+def _batch_for(cfg, seq=SEQ, batch=BATCH):
+    dc = DataConfig(vocab_size=cfg.vocab_size, seq_len=seq, global_batch=batch,
+                    n_codebooks=cfg.n_codebooks,
+                    n_img_patches=cfg.n_img_patches, d_model=cfg.d_model)
+    raw = SyntheticLM(dc).batch_at(0)
+    if cfg.n_img_patches:
+        # prefix patches join the text tokens: label seq covers both
+        pad = np.zeros((batch, cfg.n_img_patches), np.int32)
+        raw["labels"] = np.concatenate([pad, raw["labels"]], axis=1)
+    return jax.tree_util.tree_map(jnp.asarray, raw)
+
+
+@pytest.mark.parametrize("name", ALL)
+def test_forward_smoke(name):
+    cfg = get_smoke_config(name)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    batch = _batch_for(cfg)
+    inputs = {k: v for k, v in batch.items() if k != "labels"}
+    if set(inputs) == {"tokens"}:
+        inputs = inputs["tokens"]
+    logits, aux, _ = forward_train(params, inputs, cfg)
+    b = BATCH
+    if cfg.n_codebooks:
+        assert logits.shape == (b, SEQ, cfg.n_codebooks, cfg.vocab_size)
+    elif cfg.n_img_patches:
+        assert logits.shape == (b, SEQ + cfg.n_img_patches, cfg.vocab_size)
+    else:
+        assert logits.shape == (b, SEQ, cfg.vocab_size)
+    assert bool(jnp.all(jnp.isfinite(logits))), f"{name}: non-finite logits"
+    assert bool(jnp.isfinite(aux))
+
+
+@pytest.mark.parametrize("name", ALL)
+def test_train_step_smoke(name):
+    cfg = get_smoke_config(name)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    ocfg = AdamWConfig(lr=1e-3, warmup_steps=1, total_steps=10)
+    opt_state = init_state(params, ocfg)
+    step = jax.jit(make_train_step(cfg, ocfg))
+    batch = _batch_for(cfg)
+    params2, opt_state2, metrics = step(params, opt_state, batch)
+    assert bool(jnp.isfinite(metrics["loss"])), f"{name}: non-finite loss"
+    assert bool(jnp.isfinite(metrics["grad_norm"]))
+    # params actually changed
+    delta = jax.tree_util.tree_reduce(
+        lambda a, l: a + float(jnp.sum(jnp.abs(l[0] - l[1]))),
+        jax.tree_util.tree_map(lambda a, b: (a, b), params, params2), 0.0)
+    assert delta > 0.0
+
+
+@pytest.mark.parametrize("name", ALL)
+def test_serve_smoke(name):
+    cfg = get_smoke_config(name)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    batch = _batch_for(cfg)
+    inputs = {k: v for k, v in batch.items() if k != "labels"}
+    if set(inputs) == {"tokens"}:
+        inputs = inputs["tokens"]
+    logits, cache = forward_prefill(params, inputs, cfg,
+                                    smax=SEQ + cfg.n_img_patches + 8)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+    if cfg.n_codebooks:
+        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)     # (B,K)
+    else:
+        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)     # (B,)
+    logits2, cache2 = forward_decode(params, tok, cache, cfg)
+    assert bool(jnp.all(jnp.isfinite(logits2))), f"{name}: non-finite decode"
+    assert int(cache2["length"][0]) == int(cache["length"][0]) + 1
+
+
+@pytest.mark.parametrize("name", ASSIGNED)
+def test_full_config_exact(name):
+    """The FULL config matches the assignment numbers (no allocation)."""
+    cfg = get_config(name)
+    spec = {
+        "minicpm3-4b": dict(n_layers=62, d_model=2560, n_heads=40, d_ff=6400, vocab_size=73448),
+        "qwen3-1.7b": dict(n_layers=28, d_model=2048, n_heads=16, d_ff=6144, vocab_size=151936),
+        "qwen2-0.5b": dict(n_layers=24, d_model=896, n_heads=14, d_ff=4864, vocab_size=151936),
+        "qwen3-32b": dict(n_layers=64, d_model=5120, n_heads=64, d_ff=25600, vocab_size=151936),
+        "musicgen-large": dict(n_layers=48, d_model=2048, n_heads=32, d_ff=8192, vocab_size=2048),
+        "llama4-maverick-400b-a17b": dict(n_layers=48, d_model=5120, n_heads=40, d_ff=8192, vocab_size=202048),
+        "phi3.5-moe-42b-a6.6b": dict(n_layers=32, d_model=4096, n_heads=32, d_ff=6400, vocab_size=32064),
+        "jamba-v0.1-52b": dict(n_layers=32, d_model=4096, n_heads=32, d_ff=14336, vocab_size=65536),
+        "mamba2-370m": dict(n_layers=48, d_model=1024, d_ff=0, vocab_size=50280),
+        "paligemma-3b": dict(n_layers=18, d_model=2048, n_heads=8, d_ff=16384, vocab_size=257216),
+    }[name]
+    for k, v in spec.items():
+        assert getattr(cfg, k) == v, f"{name}.{k}: {getattr(cfg, k)} != {v}"
+
+
+def test_param_counts_sane():
+    """Analytic parameter counts land near the advertised scales."""
+    expect = {
+        "minicpm3-4b": (3.0e9, 5.5e9),
+        "qwen3-32b": (28e9, 36e9),
+        "llama4-maverick-400b-a17b": (350e9, 450e9),
+        "phi3.5-moe-42b-a6.6b": (38e9, 46e9),
+        "jamba-v0.1-52b": (45e9, 60e9),
+        "mamba2-370m": (0.30e9, 0.45e9),
+        "paligemma-3b": (2.0e9, 3.2e9),
+        "qwen2-0.5b": (0.3e9, 0.7e9),
+        "qwen3-1.7b": (1.2e9, 2.2e9),
+        "musicgen-large": (2.5e9, 4.5e9),
+    }
+    for name, (lo, hi) in expect.items():
+        n = get_config(name).param_count()
+        assert lo <= n <= hi, f"{name}: {n/1e9:.2f}B outside [{lo/1e9},{hi/1e9}]B"
+
+
+def test_moe_active_params():
+    cfg = get_config("llama4-maverick-400b-a17b")
+    active = cfg.active_param_count()
+    assert 10e9 <= active <= 25e9, f"active {active/1e9:.1f}B"
+    cfg = get_config("phi3.5-moe-42b-a6.6b")
+    active = cfg.active_param_count()
+    assert 4e9 <= active <= 9e9, f"active {active/1e9:.1f}B"

@@ -1,0 +1,75 @@
+"""Optimizer: INT8-state Adam matches fp32 Adam on convergence; size wins."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.optim import (AdamWConfig, apply_updates, global_norm, init_state,
+                         lr_at, state_nbytes)
+
+
+def _train_quadratic(quantized: bool, steps: int = 300):
+    """Minimize ||W - W*||^2 with Adam; returns final loss."""
+    target = jax.random.normal(jax.random.PRNGKey(0), (64, 512))
+    params = {"w": jnp.zeros((64, 512))}
+    cfg = AdamWConfig(lr=3e-2, warmup_steps=5, total_steps=steps,
+                      weight_decay=0.0, quantized_state=quantized)
+    state = init_state(params, cfg)
+
+    @jax.jit
+    def step(params, state):
+        loss, grads = jax.value_and_grad(
+            lambda p: jnp.mean((p["w"] - target) ** 2))(params)
+        params, state, metrics = apply_updates(params, grads, state, cfg)
+        return params, state, loss
+
+    for _ in range(steps):
+        params, state, loss = step(params, state)
+    return float(loss), state
+
+
+def test_fp32_adam_converges():
+    loss, _ = _train_quadratic(False)
+    assert loss < 1e-2, loss
+
+
+def test_int8_adam_matches_fp32():
+    loss_q, state_q = _train_quadratic(True)
+    loss_f, state_f = _train_quadratic(False)
+    assert loss_q < 3 * loss_f + 1e-3, (loss_q, loss_f)
+    # memory win: int8 m/v < half of fp32 m/v
+    assert state_nbytes(state_q) < 0.5 * state_nbytes(state_f)
+
+
+def test_grad_clipping():
+    params = {"w": jnp.zeros((8,))}
+    cfg = AdamWConfig(lr=1e-2, grad_clip=1.0, warmup_steps=0)
+    state = init_state(params, cfg)
+    huge = {"w": jnp.full((8,), 1e6)}
+    p2, state, metrics = apply_updates(params, huge, state, cfg)
+    assert float(metrics["grad_norm"]) > 1e5
+    assert float(jnp.max(jnp.abs(p2["w"]))) < 1.0    # clipped update
+
+
+def test_lr_schedule_shape():
+    cfg = AdamWConfig(lr=1.0, warmup_steps=10, total_steps=100, min_lr_ratio=0.1)
+    lrs = [float(lr_at(jnp.asarray(s), cfg)) for s in range(0, 101, 10)]
+    assert lrs[0] < lrs[1]                       # warmup
+    assert lrs[-1] < lrs[2]                      # decay
+    assert lrs[-1] >= 0.099                      # floor
+
+
+def test_big_leaf_sliced_update_matches_direct():
+    """lax.map slice-wise update == whole-tensor update (numerics)."""
+    key = jax.random.PRNGKey(1)
+    big = jax.random.normal(key, (8, 1024, 1 << 15 >> 4))  # ndim 3 small for test
+    # force the slice path by monkeypatching threshold? instead compare two
+    # identical configs on ndim-3 vs reshaped ndim-2 leaves
+    g = jax.random.normal(jax.random.PRNGKey(2), big.shape)
+    cfg = AdamWConfig(lr=1e-2, warmup_steps=0, quantized_state=False)
+    s3 = init_state({"w": big}, cfg)
+    p3, _, _ = apply_updates({"w": big}, {"w": g}, s3, cfg)
+    flat = big.reshape(-1, big.shape[-1])
+    s2 = init_state({"w": flat}, cfg)
+    p2, _, _ = apply_updates({"w": flat}, {"w": g.reshape(flat.shape)}, s2, cfg)
+    np.testing.assert_allclose(np.asarray(p3["w"]).reshape(flat.shape),
+                               np.asarray(p2["w"]), rtol=1e-6, atol=1e-6)
