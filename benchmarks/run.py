@@ -19,6 +19,7 @@ BENCHES = [
     ("weight_dists_fig1", "benchmarks.bench_weight_dists"),
     ("scaling_fig8", "benchmarks.bench_scaling"),
     ("kernels", "benchmarks.bench_kernels"),
+    ("serving_paged", "benchmarks.bench_serving"),
 ]
 
 

@@ -2,8 +2,9 @@
 
 Trains a small LM briefly, statically quantizes it (SmoothQuant fold +
 symmetric W8A8), then serves a stream of batched requests through the
-continuous-batching engine with the SimQuant INT8 KV cache and online EMA
-scale tracking — the full LLMEasyQuant pipeline on one box.
+paged-cache engine — continuous batching, chunked prefill, SimQuant INT8 KV
+blocks and online EMA scale tracking: the full LLMEasyQuant pipeline on one
+box.  ``--dense`` falls back to the legacy slot-ring engine.
 
     PYTHONPATH=src python examples/serve_e2e.py [--requests 12] [--steps 60]
 """
@@ -21,7 +22,9 @@ from repro.launch.steps import make_train_step
 from repro.models import ModelConfig, forward_train, init_params
 from repro.models.config import LayerSpec
 from repro.optim import AdamWConfig, init_state
-from repro.serving.engine import EngineConfig, Request, ServeEngine
+from repro.serving.engine import (EngineConfig, PagedServeEngine, Request,
+                                  ServeEngine)
+from repro.serving.scheduler import SchedulerConfig
 
 
 def main():
@@ -29,6 +32,8 @@ def main():
     ap.add_argument("--steps", type=int, default=60)
     ap.add_argument("--requests", type=int, default=12)
     ap.add_argument("--new-tokens", type=int, default=24)
+    ap.add_argument("--dense", action="store_true",
+                    help="use the legacy dense slot-ring engine")
     args = ap.parse_args()
 
     cfg = ModelConfig(name="serve-demo", vocab_size=512, d_model=128,
@@ -66,8 +71,15 @@ def main():
           f"{tree_nbytes(qparams)/2**20:.2f} MiB")
 
     # 3) serve
-    print(f"[3/4] serving {args.requests} requests (4 slots, INT8 KV cache) ...")
-    eng = ServeEngine(qparams, cfg, EngineConfig(max_slots=4, smax=160))
+    if args.dense:
+        print(f"[3/4] serving {args.requests} requests (dense, 4 slots) ...")
+        eng = ServeEngine(qparams, cfg, EngineConfig(max_slots=4, smax=160))
+    else:
+        print(f"[3/4] serving {args.requests} requests "
+              f"(paged INT8 KV blocks, chunked prefill) ...")
+        eng = PagedServeEngine(qparams, cfg, SchedulerConfig(
+            block_size=16, num_blocks=48, max_batch=4, max_blocks_per_req=12,
+            prefill_chunk=32, token_budget=64))
     rng = np.random.default_rng(0)
     t0 = time.perf_counter()
     for i in range(args.requests):
@@ -85,6 +97,13 @@ def main():
           f"(continuous batching over {args.requests} requests / 4 slots)")
     print(f"      online EMA scale state: delta={float(eng.scale_state.delta):.3f} "
           f"after {int(eng.scale_state.step)} updates")
+    if not args.dense:
+        m = eng.metrics()
+        print(f"      TTFT avg {m['ttft_avg_s']*1e3:.0f} ms / max "
+              f"{m['ttft_max_s']*1e3:.0f} ms; cache util avg "
+              f"{m['cache_util_avg']:.0%} peak {m['cache_util_peak']:.0%}; "
+              f"preemptions {m['preemptions']}; "
+              f"pool {m['cache_nbytes']/2**20:.2f} MiB")
     for r in done[:3]:
         print(f"      req {r.uid}: prompt {len(r.prompt)} toks -> {r.generated[:8]}...")
 

@@ -18,7 +18,7 @@ from typing import Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
-from jax import shard_map
+from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.core.online import EmaScaleState
@@ -61,7 +61,7 @@ def make_synced_quant_step(mesh: Mesh, *, alpha: float = 0.9, bits: int = 8,
     out_spec = (P(axes), P())
 
     @partial(shard_map, mesh=mesh, in_specs=in_spec, out_specs=out_spec,
-             check_vma=False)
+             check_rep=False)
     def step(x, state):
         reduce_fn = lambda s: jax.lax.pmax(s, axes)
         q, new_state = async_quant_update(x, state, alpha=alpha, bits=bits,

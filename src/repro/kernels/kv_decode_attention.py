@@ -123,3 +123,123 @@ def kv_decode_attention(q: jax.Array,
         interpret=interpret,
     )(length, q_r, ks_r, kz_r, k_r, v_r, vs_r, vz_r)
     return out.reshape(b, h, d)
+
+
+# ---------------------------------------------------------------------------
+# Paged variant: gather-by-block-table (serving/paged_cache.py pool layout)
+# ---------------------------------------------------------------------------
+
+def _paged_kernel(bt_ref, len_ref, q_ref, ks_ref, kz_ref, k_ref, v_ref,
+                  vs_ref, vz_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                  n_blk: int, t: int, scale: float):
+    """Same online-softmax body as ``_kernel``; the grid's third dim walks a
+    request's *block table* instead of a contiguous sequence.  Dead table
+    lanes (m*T >= length) skip the compute entirely, and the index maps
+    clamp them to the last live block so the pipeline revisits an
+    already-resident tile instead of streaming trash blocks."""
+    b_idx = pl.program_id(0)
+    m_idx = pl.program_id(2)
+    length = len_ref[b_idx]
+
+    @pl.when(m_idx == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    @pl.when(m_idx * t < length)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32) * scale           # (G, D)
+        k_q = k_ref[0, 0].astype(jnp.float32)                 # (T, D)
+        k = (k_q - kz_ref[0, 0]) * ks_ref[0, 0]               # per-chan affine
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)  # (G, T)
+
+        pos = m_idx * t + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where(pos < length, s, NEG_INF)
+
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+
+        v_q = v_ref[0, 0].astype(jnp.float32)                 # (T, D)
+        v = (v_q - vz_ref[0, 0]) * vs_ref[0, 0]               # per-tok affine
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=-1, keepdims=True)
+        m_ref[...] = m_new
+
+    @pl.when(m_idx == n_blk - 1)
+    def _finish():
+        o_ref[0, 0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
+                       ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def paged_kv_decode_attention(q: jax.Array,
+                              k_vals: jax.Array, k_scale: jax.Array,
+                              k_zero: jax.Array, v_vals: jax.Array,
+                              v_scale: jax.Array, v_zero: jax.Array,
+                              block_tables: jax.Array, lengths: jax.Array, *,
+                              interpret: bool = False) -> jax.Array:
+    """Flash-decode over the paged INT8 pool.
+
+    q: (B, H, D); k_vals/v_vals: (N, T, KH, D) int8 block pool;
+    v_scale/v_zero: (N, T, KH, 1) f32; k_scale/k_zero: (B, KH, D) f32
+    per-slot frozen affine; block_tables: (B, M) int32 pool block ids
+    (dead table slots may point anywhere — masked by ``lengths``);
+    lengths: (B,) int32 -> (B, H, D) f32.
+    """
+    b, h, d = q.shape
+    t, kh = k_vals.shape[1], k_vals.shape[2]
+    m = block_tables.shape[1]
+    g = h // kh
+
+    q_r = q.reshape(b, kh, g, d)
+    k_r = k_vals.transpose(0, 2, 1, 3)                    # (N, KH, T, D)
+    v_r = v_vals.transpose(0, 2, 1, 3)
+    vs_r = v_scale.transpose(0, 2, 1, 3)                  # (N, KH, T, 1)
+    vz_r = v_zero.transpose(0, 2, 1, 3)
+    ks_r = k_scale[:, :, None, :]                         # (B, KH, 1, D)
+    kz_r = k_zero[:, :, None, :]
+
+    kernel = functools.partial(_paged_kernel, n_blk=m, t=t,
+                               scale=1.0 / (d ** 0.5))
+
+    def _blk(bb, mm, ln, bt):
+        # clamp dead table lanes to the last live block: consecutive grid
+        # steps then ask for the same tile and the pipeline skips the fetch
+        last = jnp.maximum(ln[bb] - 1, 0) // t
+        return bt[bb, jnp.minimum(mm, last)]
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,          # block_tables, lengths
+        grid=(b, kh, m),
+        in_specs=[
+            pl.BlockSpec((1, 1, g, d), lambda bb, hh, mm, bt, ln: (bb, hh, 0, 0)),
+            pl.BlockSpec((1, 1, 1, d), lambda bb, hh, mm, bt, ln: (bb, hh, 0, 0)),
+            pl.BlockSpec((1, 1, 1, d), lambda bb, hh, mm, bt, ln: (bb, hh, 0, 0)),
+            pl.BlockSpec((1, 1, t, d),
+                         lambda bb, hh, mm, bt, ln: (_blk(bb, mm, ln, bt), hh, 0, 0)),
+            pl.BlockSpec((1, 1, t, d),
+                         lambda bb, hh, mm, bt, ln: (_blk(bb, mm, ln, bt), hh, 0, 0)),
+            pl.BlockSpec((1, 1, t, 1),
+                         lambda bb, hh, mm, bt, ln: (_blk(bb, mm, ln, bt), hh, 0, 0)),
+            pl.BlockSpec((1, 1, t, 1),
+                         lambda bb, hh, mm, bt, ln: (_blk(bb, mm, ln, bt), hh, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, d),
+                               lambda bb, hh, mm, bt, ln: (bb, hh, 0, 0)),
+        scratch_shapes=[pltpu.VMEM((g, 1), jnp.float32),
+                        pltpu.VMEM((g, 1), jnp.float32),
+                        pltpu.VMEM((g, d), jnp.float32)],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, kh, g, d), jnp.float32),
+        interpret=interpret,
+    )(block_tables, lengths, q_r, ks_r, kz_r, k_r, v_r, vs_r, vz_r)
+    return out.reshape(b, h, d)

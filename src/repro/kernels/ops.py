@@ -24,7 +24,7 @@ from repro.core.qtensor import QTensor
 from . import ref
 from .fused_quant import fused_quant
 from .w8a8_matmul import w8a8_matmul
-from .kv_decode_attention import kv_decode_attention
+from .kv_decode_attention import kv_decode_attention, paged_kv_decode_attention
 
 
 def _use_pallas() -> Optional[dict]:
@@ -96,6 +96,21 @@ def decode_attention(q, k_vals, k_scale, k_zero, v_vals, v_scale, v_zero,
                                 v_vals, v_scale, v_zero, length, chunk=2048)
     return ref.kv_decode_attention_ref(q, k_vals, k_scale, k_zero,
                                        v_vals, v_scale, v_zero, length)
+
+
+def paged_decode_attention(q, k_vals, k_scale, k_zero, v_vals, v_scale, v_zero,
+                           block_tables, lengths):
+    """Paged-pool decode attention: Pallas gather-by-block-table kernel on
+    TPU, dense-gather oracle elsewhere (bit-identical float path to the
+    dense engine's oracle — golden-parity contract)."""
+    pk = _use_pallas()
+    if pk is not None:
+        return paged_kv_decode_attention(q, k_vals, k_scale, k_zero,
+                                         v_vals, v_scale, v_zero,
+                                         block_tables, lengths, **pk)
+    return ref.paged_kv_decode_attention_ref(q, k_vals, k_scale, k_zero,
+                                             v_vals, v_scale, v_zero,
+                                             block_tables, lengths)
 
 
 def flash_decode_ref(q, k_vals, k_scale, k_zero, v_vals, v_scale, v_zero,

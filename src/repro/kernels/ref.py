@@ -53,3 +53,25 @@ def kv_decode_attention_ref(q: jax.Array,
     from repro.models.attention import decode_attention_ref
     return decode_attention_ref(q, k_vals, k_scale, k_zero,
                                 v_vals, v_scale, v_zero, length)
+
+
+def paged_kv_decode_attention_ref(q: jax.Array,
+                                  k_vals: jax.Array, k_scale: jax.Array,
+                                  k_zero: jax.Array, v_vals: jax.Array,
+                                  v_scale: jax.Array, v_zero: jax.Array,
+                                  block_tables: jax.Array,
+                                  lengths: jax.Array) -> jax.Array:
+    """Paged-pool oracle: gather blocks into the dense layout, then reuse the
+    dense oracle (identical float path — the scheduler's golden-parity tests
+    rely on this).
+
+    q: (B,H,D); k_vals/v_vals: (N,T,KH,D) int8 pool; v_scale/v_zero:
+    (N,T,KH,1); k_scale/k_zero: (B,KH,D) per-slot; block_tables: (B,M);
+    lengths: (B,) -> (B,H,D).
+    """
+    b, m = block_tables.shape
+    t = k_vals.shape[1]
+    gather = lambda pool: pool[block_tables].reshape(b, m * t, *pool.shape[2:])
+    return kv_decode_attention_ref(
+        q, gather(k_vals), k_scale[:, None], k_zero[:, None],
+        gather(v_vals), gather(v_scale), gather(v_zero), lengths)

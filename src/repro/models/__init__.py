@@ -1,10 +1,12 @@
 """Model zoo: unified decoder LM covering all assigned architectures."""
 from .config import LayerSpec, ModelConfig, repeat_pattern
 from .transformer import (
-    init_params, forward_train, forward_prefill, forward_decode, lm_loss,
+    init_params, forward_train, forward_prefill, forward_decode,
+    forward_prefill_chunk, forward_decode_paged, lm_loss,
 )
 
 __all__ = [
     "LayerSpec", "ModelConfig", "repeat_pattern",
-    "init_params", "forward_train", "forward_prefill", "forward_decode", "lm_loss",
+    "init_params", "forward_train", "forward_prefill", "forward_decode",
+    "forward_prefill_chunk", "forward_decode_paged", "lm_loss",
 ]

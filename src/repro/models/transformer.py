@@ -26,6 +26,7 @@ from repro.distributed.sharding import constrain
 from repro.kernels import ops
 from repro.kernels.ops import qdot
 from repro.serving import kv_cache as kvc
+from repro.serving import paged_cache as pgc
 from .attention import attn_apply, attn_init, decode_attention_ref, flash_attention, qkv_project
 from .config import LayerSpec, ModelConfig
 from .layers import apply_rope, dense_init, embed_init, rms_norm, rms_norm_init, swiglu_apply, swiglu_init
@@ -351,6 +352,204 @@ def forward_decode(params, tokens_t, cache, cfg: ModelConfig):
     h = rms_norm(h, params["final_norm"], cfg.norm_eps)
     logits = logits_head(params, h[:, None, :], cfg)[:, 0]
     return logits, {"entries": new_entries, "length": length + 1}
+
+
+# ---------------------------------------------------------------------------
+# Paged-cache entry points (block-table path — serving/scheduler.py)
+# ---------------------------------------------------------------------------
+
+def _block_prefill_chunk(p_blk, h, pool_blk, cfg: ModelConfig, *, positions,
+                         slot, block_row, ctx, chunk_len, block_size: int,
+                         is_first: bool):
+    """One pattern repeat of a prefill *chunk* (B=1) against the block pool.
+
+    The chunk's queries attend to the request's cached prefix (gathered +
+    dequantized from the pool) plus the chunk itself — position-exact
+    right-aligned handling, no left-pad.  ``is_first`` (static) skips the
+    prefix gather and freezes the per-channel K scales.
+    """
+    new_pool: Dict[str, Any] = {}
+    pos1d = positions[0] if positions.ndim > 1 else positions
+    c = h.shape[1]
+    mt = block_row.shape[0] * block_size
+    # prefix kv positions: real 0..ctx-1; the rest pushed past any query pos
+    pre_pos = jnp.arange(mt)
+    pre_pos = jnp.where(pre_pos < ctx, pre_pos, 2**30)
+    # chunk kv positions: padding lanes sit after every valid query anyway
+    # (positions increase monotonically), so pos1d works unmodified.
+
+    for i, spec in enumerate(cfg.layer_pattern):
+        p = p_blk[f"p{i}"]
+        entry = pool_blk[f"p{i}"]
+        x = rms_norm(h, p["norm_mix"], cfg.norm_eps)
+        if spec.mixer == "attn":
+            q, k, v = qkv_project(p["attn"], x, cfg, positions)
+            entry = pgc.gqa_chunk_write(
+                entry, k[0], v[0], slot=slot, block_row=block_row, ctx=ctx,
+                chunk_len=chunk_len, block_size=block_size, is_first=is_first)
+            if is_first:
+                out = flash_attention(q, k, v, q_positions=pos1d,
+                                      kv_positions=pos1d, chunk=cfg.attn_chunk)
+            else:
+                k_pre, v_pre = pgc.gqa_gather_prefix(entry, block_row, slot,
+                                                     x.dtype)
+                k_cat = jnp.concatenate([k_pre[None], k], axis=1)
+                v_cat = jnp.concatenate([v_pre[None], v], axis=1)
+                out = flash_attention(q, k_cat, v_cat, q_positions=pos1d,
+                                      kv_positions=jnp.concatenate([pre_pos, pos1d]),
+                                      chunk=cfg.attn_chunk)
+            mix = qdot(out.reshape(1, c, -1), p["attn"]["wo"])
+        elif spec.mixer == "mla":
+            q_nope, q_rope = mla_queries(p["attn"], x, cfg, positions)
+            c_kv, k_rope = mla_latent(p["attn"], x, cfg, positions)
+            entry = pgc.mla_chunk_write(
+                entry, c_kv[0], k_rope[0], slot=slot, block_row=block_row,
+                ctx=ctx, chunk_len=chunk_len, block_size=block_size,
+                is_first=is_first)
+            h_heads = cfg.n_heads
+            dn, dr = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim
+            dv = cfg.v_head_dim
+            if is_first:
+                c_all, kr_all, kv_pos = c_kv, k_rope, pos1d
+            else:
+                c_pre, kr_pre = pgc.mla_gather_prefix(entry, block_row, slot,
+                                                      x.dtype)
+                c_all = jnp.concatenate([c_pre[None], c_kv], axis=1)
+                kr_all = jnp.concatenate([kr_pre[None], k_rope], axis=1)
+                kv_pos = jnp.concatenate([pre_pos, pos1d])
+            s_all = c_all.shape[1]
+            kv = qdot(c_all, p["attn"]["kv_b"]).reshape(1, s_all, h_heads, dn + dv)
+            k_nope, v_full = kv[..., :dn], kv[..., dn:]
+            k_cat = jnp.concatenate(
+                [k_nope, jnp.broadcast_to(kr_all[:, :, None, :],
+                                          (1, s_all, h_heads, dr))], axis=-1)
+            q_cat = jnp.concatenate([q_nope, q_rope], axis=-1)
+            out = flash_attention(q_cat, k_cat, v_full, q_positions=pos1d,
+                                  kv_positions=kv_pos, chunk=cfg.attn_chunk)
+            mix = qdot(out.reshape(1, c, h_heads * dv), p["attn"]["wo"])
+        else:
+            raise NotImplementedError(
+                "paged prefill does not support ssm mixers; "
+                "use the dense ServeEngine")
+        new_pool[f"p{i}"] = entry
+        h = h + mix
+        if spec.ffn != "none":
+            y = rms_norm(h, p["norm_ffn"], cfg.norm_eps)
+            if spec.ffn == "dense":
+                f = swiglu_apply(p["ffn"], y, cfg.act_fn)
+            else:
+                f, _ = moe_apply(p["moe"], y, cfg)
+            h = h + f
+    return h, new_pool
+
+
+def forward_prefill_chunk(params, tokens, pool, cfg: ModelConfig, *,
+                          slot, block_row, ctx, chunk_len, block_size: int,
+                          is_first: bool):
+    """One prefill chunk of a single request against the block pool.
+
+    tokens: (1, C) right-padded (or (1, K, C) MusicGen); positions are
+    ``ctx + arange(C)`` — position-exact, no left-pad.  Returns
+    (last-valid-token logits (1, V), new pool).
+    """
+    h, _ = embed_tokens(params, tokens, cfg)
+    b, s, _ = h.shape
+    positions = jnp.broadcast_to(ctx + jnp.arange(s)[None, :], (b, s))
+
+    block = partial(_block_prefill_chunk, cfg=cfg, positions=positions,
+                    slot=slot, block_row=block_row, ctx=ctx,
+                    chunk_len=chunk_len, block_size=block_size,
+                    is_first=is_first)
+
+    def body(h, xs):
+        p_blk, pool_blk = xs
+        return block(p_blk, h, pool_blk)
+
+    h, new_pool = jax.lax.scan(body, h, (params["layers"], pool))
+    h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+    last = jax.lax.dynamic_slice_in_dim(h, chunk_len - 1, 1, axis=1)
+    logits = logits_head(params, last, cfg)[:, 0]
+    return logits, new_pool
+
+
+def _block_decode_paged(p_blk, h, pool_blk, cfg: ModelConfig, *, block_tables,
+                        lengths, block_size: int):
+    """One-token pass over one pattern repeat against the block pool."""
+    new_pool: Dict[str, Any] = {}
+    b = h.shape[0]
+    positions = lengths[:, None]
+
+    for i, spec in enumerate(cfg.layer_pattern):
+        p = p_blk[f"p{i}"]
+        entry = pool_blk[f"p{i}"]
+        x = rms_norm(h, p["norm_mix"], cfg.norm_eps)
+        if spec.mixer == "attn":
+            q, k, v = qkv_project(p["attn"], x[:, None, :], cfg, positions)
+            entry = pgc.gqa_paged_append(entry, k[:, 0], v[:, 0],
+                                         block_tables, lengths,
+                                         block_size=block_size)
+            out = ops.paged_decode_attention(
+                q[:, 0], entry["k_vals"], entry["k_scale"], entry["k_zero"],
+                entry["v_vals"], entry["v_scale"], entry["v_zero"],
+                block_tables, lengths + 1)
+            mix = qdot(out.astype(x.dtype).reshape(b, -1), p["attn"]["wo"])
+        elif spec.mixer == "mla":
+            q_nope, q_rope = mla_queries(p["attn"], x[:, None, :], cfg, positions)
+            c_t, kr_t = mla_latent(p["attn"], x[:, None, :], cfg, positions)
+            entry = pgc.mla_paged_append(entry, c_t[:, 0], kr_t[:, 0],
+                                         block_tables, lengths,
+                                         block_size=block_size)
+            gath = pgc.mla_gather_batch(entry, block_tables)
+            w_uk, w_uv = mla_absorbed_weights(p["attn"], cfg)
+            out = mla_decode_ref(q_nope[:, 0], q_rope[:, 0],
+                                 gath["c_vals"], gath["c_scale"], gath["c_zero"],
+                                 gath["kr_vals"], gath["kr_scale"], gath["kr_zero"],
+                                 w_uk, w_uv, lengths + 1, cfg)
+            mix = qdot(out.astype(x.dtype).reshape(b, -1), p["attn"]["wo"])
+        else:
+            raise NotImplementedError(
+                "paged decode does not support ssm mixers; "
+                "use the dense ServeEngine")
+        new_pool[f"p{i}"] = entry
+        h = h + mix.astype(h.dtype)
+
+        if spec.ffn != "none":
+            y = rms_norm(h, p["norm_ffn"], cfg.norm_eps)
+            if spec.ffn == "dense":
+                f = swiglu_apply(p["ffn"], y[:, None, :], cfg.act_fn)[:, 0]
+            else:
+                f, _ = moe_apply(p["moe"], y[:, None, :], cfg)
+                f = f[:, 0]
+            h = h + f.astype(h.dtype)
+    return h, new_pool
+
+
+def forward_decode_paged(params, tokens_t, pool, block_tables, lengths,
+                         cfg: ModelConfig, *, block_size: int):
+    """One decode step over the block pool.  tokens_t: (B,) int32 (or (B,K));
+    block_tables: (B, M) int32 pool block ids; lengths: (B,) live token
+    counts (the new token is appended at position ``lengths[b]``).
+
+    -> (logits (B, V) / (B, K, V), new pool).
+    """
+    dt = cfg.compute_dtype
+    if cfg.n_codebooks:
+        h = sum(params["embed"][f"cb{i}"][tokens_t[:, i]]
+                for i in range(cfg.n_codebooks))
+    else:
+        h = params["embed"]["tok"][tokens_t]
+    h = h.astype(dt)                                       # (B, D)
+
+    def body(h, xs):
+        p_blk, pool_blk = xs
+        return _block_decode_paged(p_blk, h, pool_blk, cfg,
+                                   block_tables=block_tables, lengths=lengths,
+                                   block_size=block_size)
+
+    h, new_pool = jax.lax.scan(body, h, (params["layers"], pool))
+    h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+    logits = logits_head(params, h[:, None, :], cfg)[:, 0]
+    return logits, new_pool
 
 
 # ---------------------------------------------------------------------------

@@ -1,11 +1,22 @@
-"""Serving runtime: quantized KV cache + batched prefill/decode engine."""
+"""Serving runtime: quantized KV cache + batched prefill/decode engines.
+
+Two cache backends share the SimQuant INT8 quantization math:
+
+  * ``kv_cache``    — dense per-slot ring buffer (``max_slots x smax``),
+                      driven by ``engine.ServeEngine``.
+  * ``paged_cache`` — block-pool layout with a free-list allocator, driven by
+                      ``scheduler.Scheduler`` / ``engine.PagedServeEngine``
+                      (continuous batching + chunked prefill).
+"""
 from . import kv_cache
 
-__all__ = ["kv_cache", "engine"]
+__all__ = ["kv_cache", "paged_cache", "engine", "scheduler"]
 
 
-def __getattr__(name):            # lazy: engine imports models (heavier)
-    if name == "engine":
-        from . import engine as _engine
-        return _engine
+# lazy: paged_cache/engine/scheduler pull in the models package (heavier);
+# kv_cache only touches models.config, which the seed already paid for
+def __getattr__(name):
+    if name in ("paged_cache", "engine", "scheduler"):
+        import importlib
+        return importlib.import_module(f".{name}", __name__)
     raise AttributeError(name)

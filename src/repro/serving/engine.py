@@ -24,7 +24,7 @@ from __future__ import annotations
 import dataclasses
 import time
 from functools import partial
-from typing import Any, Dict, List, Optional
+from typing import Any, Callable, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -35,15 +35,41 @@ from repro.models import ModelConfig, forward_decode, forward_prefill
 from repro.models.transformer import embed_tokens  # noqa: F401 (re-export convenience)
 
 
+def sample_tokens(logits, temps: np.ndarray, rng, scale_state,
+                  alpha: float):
+    """Per-row temperature sampling shared by both engines.
+
+    logits: (B, V) or (B, K, V); temps: (B,) — rows with temp <= 0 take the
+    argmax.  RNG is consumed only when some row is hot, so all-greedy runs
+    stay bit-reproducible.  Also performs the Alg-1 EMA absmax update.
+    Returns (tokens, rng, scale_state).
+    """
+    from repro.core.online import async_quant_update
+    _, scale_state = async_quant_update(logits, scale_state, alpha=alpha)
+    greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    if not np.any(temps > 0.0):
+        return greedy, rng, scale_state
+    t = jnp.asarray(np.where(temps > 0.0, temps, 1.0), jnp.float32)
+    t = t.reshape((-1,) + (1,) * (logits.ndim - 2))
+    rng, sub = jax.random.split(rng)
+    sampled = jax.random.categorical(
+        sub, logits / t[..., None], axis=-1).astype(jnp.int32)
+    hot = jnp.asarray(temps > 0.0).reshape(t.shape)
+    return jnp.where(hot, sampled, greedy), rng, scale_state
+
+
 @dataclasses.dataclass
 class Request:
     uid: int
     prompt: np.ndarray                   # (S,) int32  (or (K,S) MusicGen)
     max_new_tokens: int = 32
     temperature: float = 0.0             # 0 = greedy
+    on_token: Optional[Callable] = None  # streaming callback: (req, token)
     # filled by the engine:
     generated: Optional[List[int]] = None
     prefill_s: float = 0.0
+    ttft_s: float = 0.0                  # first token latency from add_request
+    t_add: float = 0.0
     done: bool = False
 
 
@@ -54,6 +80,9 @@ class EngineConfig:
     eos_id: int = -1                     # -1 = never stop early
     ema_alpha: float = 0.9
     seed: int = 0
+    truncate_prompts: bool = False       # keep the last smax-max_new+1 tokens
+                                         # instead of rejecting oversized
+                                         # prompts
 
 
 class ServeEngine:
@@ -121,7 +150,26 @@ class ServeEngine:
 
     # -- public API -----------------------------------------------------------
     def add_request(self, req: Request):
+        s = int(np.asarray(req.prompt).shape[-1])
+        # the cache must hold the prompt plus every appended decode token
+        # (the final sampled token is never appended): s + max_new - 1 slots.
+        # Overflowing appends are silently dropped by jax scatter, corrupting
+        # the attended context — so validate up front.
+        keep = self.ecfg.smax - req.max_new_tokens + 1
+        if s > keep:
+            if not self.ecfg.truncate_prompts:
+                raise ValueError(
+                    f"request {req.uid}: prompt length {s} + max_new_tokens "
+                    f"{req.max_new_tokens} exceeds the cache capacity "
+                    f"smax={self.ecfg.smax}; truncate the prompt, raise smax, "
+                    f"or set EngineConfig(truncate_prompts=True)")
+            if keep <= 0:
+                raise ValueError(
+                    f"request {req.uid}: max_new_tokens {req.max_new_tokens} "
+                    f"alone exceeds the cache capacity smax={self.ecfg.smax}")
+            req.prompt = np.asarray(req.prompt)[..., -keep:]
         req.generated = []
+        req.t_add = time.perf_counter()
         self.queue.append(req)
 
     def _admit(self):
@@ -141,19 +189,26 @@ class ServeEngine:
             tok = self._sample(logits, req.temperature)
             self._tokens = self._tokens.at[slot].set(tok[0])
             req.prefill_s = time.perf_counter() - t0
-            req.generated.append(np.asarray(tok[0]).tolist())
+            req.ttft_s = time.perf_counter() - req.t_add
+            first = np.asarray(tok[0]).tolist()
+            req.generated.append(first)
+            if req.on_token is not None:
+                req.on_token(req, first)
             self.stats["prefill_tokens"] += int(np.prod(req.prompt.shape))
             self.active[slot] = req
 
     def _sample(self, logits, temperature: float):
-        # Alg-1 EMA tracking on the logits absmax (runtime adaptation probe).
-        from repro.core.online import async_quant_update
-        _, self.scale_state = async_quant_update(
-            logits, self.scale_state, alpha=self.ecfg.ema_alpha)
-        if temperature <= 0.0:
-            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
-        self._rng, sub = jax.random.split(self._rng)
-        return jax.random.categorical(sub, logits / temperature, axis=-1).astype(jnp.int32)
+        """Single-request sampling (prefill path); B=1 row of sample_tokens."""
+        toks, self._rng, self.scale_state = sample_tokens(
+            logits, np.asarray([temperature], np.float32), self._rng,
+            self.scale_state, self.ecfg.ema_alpha)
+        return toks
+
+    def _sample_batch(self, logits, temps: np.ndarray):
+        """Per-slot temperature sampling for the decode batch."""
+        toks, self._rng, self.scale_state = sample_tokens(
+            logits, temps, self._rng, self.scale_state, self.ecfg.ema_alpha)
+        return toks
 
     def step(self):
         """One engine iteration: admit -> decode -> retire."""
@@ -162,10 +217,15 @@ class ServeEngine:
             return False
         logits, self._cache = self._decode_fn(self.params, self._tokens, self._cache)
         self.stats["decode_steps"] += 1
-        new_tokens = self._sample(logits, 0.0)
+        temps = np.zeros((self.ecfg.max_slots,), np.float32)
+        for slot, req in self.active.items():
+            temps[slot] = req.temperature
+        new_tokens = self._sample_batch(logits, temps)
         for slot, req in list(self.active.items()):
             tok = np.asarray(new_tokens[slot]).tolist()
             req.generated.append(tok)
+            if req.on_token is not None:
+                req.on_token(req, tok)
             self.stats["decode_tokens"] += 1
             stop = (len(req.generated) >= req.max_new_tokens or
                     (self.ecfg.eos_id >= 0 and tok == self.ecfg.eos_id))
@@ -182,3 +242,51 @@ class ServeEngine:
             self.step()
             steps += 1
         return self.finished
+
+
+class PagedServeEngine:
+    """Serving frontend over the paged-cache scheduler.
+
+    Thin by design: all policy (continuous batching, chunked prefill,
+    admission, preemption) lives in :class:`repro.serving.scheduler.Scheduler`;
+    this class owns only the request-facing API — streaming ``on_token``
+    callbacks ride on :class:`Request`, and :meth:`metrics` surfaces TTFT,
+    throughput, cache utilization and preemption counts.
+
+    Compared to the dense :class:`ServeEngine`: KV memory scales with live
+    tokens (block pool) instead of ``max_slots * smax``, prefill is
+    position-exact (no left-pad RoPE shift), and long prompts are chunked so
+    they never stall in-flight decodes for more than one chunk.
+    """
+
+    def __init__(self, params, cfg: ModelConfig, scfg=None):
+        from repro.serving.scheduler import Scheduler, SchedulerConfig
+        self.scheduler = Scheduler(params, cfg, scfg or SchedulerConfig())
+
+    @property
+    def finished(self) -> List[Request]:
+        return self.scheduler.finished
+
+    @property
+    def stats(self):
+        return self.scheduler.stats
+
+    @property
+    def scale_state(self):
+        return self.scheduler.scale_state
+
+    def add_request(self, req: Request) -> None:
+        self.scheduler.add_request(req)
+
+    def step(self) -> bool:
+        return self.scheduler.step()
+
+    def run(self, max_steps: int = 10_000) -> List[Request]:
+        return self.scheduler.run(max_steps)
+
+    def metrics(self) -> Dict[str, Any]:
+        return self.scheduler.metrics()
+
+    def cache_nbytes(self) -> int:
+        from repro.serving.paged_cache import paged_cache_nbytes
+        return paged_cache_nbytes(self.scheduler.pool)

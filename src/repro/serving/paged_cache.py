@@ -1,0 +1,341 @@
+"""Paged SimQuant INT8 KV cache: block-pool storage + free-list allocator.
+
+The dense cache in ``kv_cache.py`` pre-allocates ``max_slots x smax`` tokens
+per layer — memory scales with the *configured* maximum, not with live
+traffic.  This module stores quantized KV entries in fixed-size token blocks
+(vLLM-style paged attention, arXiv:2309.06180) so memory scales with live
+tokens:
+
+  GQA:  k_vals  int8 (R, N+1, T, KH, D)   block pool (last block = trash)
+        v_vals  int8 (R, N+1, T, KH, D)
+        v_scale f32  (R, N+1, T, KH, 1)   per-token affine V (online)
+        v_zero  f32  (R, N+1, T, KH, 1)
+        k_scale f32  (R, B,   KH, D)      per-*slot* per-channel K affine,
+        k_zero  f32  (R, B,   KH, D)      frozen at the first prefill chunk
+  MLA:  c_vals  int8 (R, N+1, T, rkv) + per-slot scale/zero (R, B, rkv)
+        kr_vals int8 (R, N+1, T, dr)  + per-slot scale/zero (R, B, dr)
+
+``R`` is the scan-repeat axis (pattern positions nest inside, exactly like
+the dense cache); ``N`` is the shared block count, ``T`` the tokens/block,
+``B`` the decode-batch width.  A request owns a row of a host-side block
+table mapping its logical block index -> pool block id; block ``N`` is a
+write-off trash block that absorbs stores from padded / inactive lanes so the
+jitted step needs no scatter masking.
+
+Quantization math mirrors ``kv_cache.gqa_cache_entry`` / ``gqa_cache_append``
+op-for-op (same dtypes, same eps) so a single-chunk paged prefill produces
+bit-identical codes to the dense engine — the golden-parity contract the
+scheduler tests assert.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.qtensor import int_range
+from repro.models.config import ModelConfig
+
+TRASH = -1  # host-side marker; resolved to the pool's trash block id on use
+
+
+@dataclasses.dataclass(frozen=True)
+class PagedCacheConfig:
+    block_size: int = 16                 # T — tokens per block
+    num_blocks: int = 64                 # N — shared pool (excl. trash block)
+    max_batch: int = 8                   # B — decode-batch width (slots)
+    max_blocks_per_req: int = 16         # M — block-table row width
+
+    @property
+    def trash_block(self) -> int:
+        return self.num_blocks
+
+    @property
+    def tokens_per_req(self) -> int:
+        return self.max_blocks_per_req * self.block_size
+
+
+# ---------------------------------------------------------------------------
+# Pool allocation
+# ---------------------------------------------------------------------------
+
+def init_paged_cache(cfg: ModelConfig, pcfg: PagedCacheConfig) -> Dict[str, Any]:
+    """Zero-filled block pool pytree: {"p{i}": leaves (R, ...)} per pattern
+    position.  SSM mixers have no sequence axis to page — unsupported here
+    (the dense engine still serves them)."""
+    r = cfg.n_repeats
+    npool = pcfg.num_blocks + 1                     # + trash block
+    t, b = pcfg.block_size, pcfg.max_batch
+    entries: Dict[str, Any] = {}
+    for i, spec in enumerate(cfg.layer_pattern):
+        if spec.mixer == "attn":
+            kh, d = cfg.kv_heads, cfg.hd
+            entries[f"p{i}"] = {
+                "k_vals": jnp.zeros((r, npool, t, kh, d), jnp.int8),
+                "v_vals": jnp.zeros((r, npool, t, kh, d), jnp.int8),
+                "v_scale": jnp.zeros((r, npool, t, kh, 1), jnp.float32),
+                "v_zero": jnp.zeros((r, npool, t, kh, 1), jnp.float32),
+                "k_scale": jnp.ones((r, b, kh, d), jnp.float32),
+                "k_zero": jnp.zeros((r, b, kh, d), jnp.float32),
+            }
+        elif spec.mixer == "mla":
+            rkv, dr = cfg.kv_lora_rank, cfg.qk_rope_head_dim
+            entries[f"p{i}"] = {
+                "c_vals": jnp.zeros((r, npool, t, rkv), jnp.int8),
+                "c_scale": jnp.ones((r, b, rkv), jnp.float32),
+                "c_zero": jnp.zeros((r, b, rkv), jnp.float32),
+                "kr_vals": jnp.zeros((r, npool, t, dr), jnp.int8),
+                "kr_scale": jnp.ones((r, b, dr), jnp.float32),
+                "kr_zero": jnp.zeros((r, b, dr), jnp.float32),
+            }
+        else:
+            raise NotImplementedError(
+                f"paged cache does not support mixer={spec.mixer!r} "
+                f"(pattern position {i}); use the dense ServeEngine")
+    return entries
+
+
+class BlockAllocator:
+    """Host-side free-list over the shared block pool.
+
+    O(1) alloc/free; blocks are recycled LIFO so recently-freed (cache-warm)
+    blocks are handed out first.
+    """
+
+    def __init__(self, num_blocks: int):
+        self.num_blocks = num_blocks
+        self._free: List[int] = list(range(num_blocks - 1, -1, -1))
+
+    @property
+    def num_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def num_used(self) -> int:
+        return self.num_blocks - len(self._free)
+
+    @property
+    def utilization(self) -> float:
+        return self.num_used / max(self.num_blocks, 1)
+
+    def alloc(self, n: int = 1) -> Optional[List[int]]:
+        """Allocate ``n`` blocks, or None (all-or-nothing) if unavailable."""
+        if n > len(self._free):
+            return None
+        out = [self._free.pop() for _ in range(n)]
+        return out
+
+    def free(self, blocks) -> None:
+        for b in blocks:
+            if b == TRASH:
+                continue
+            assert 0 <= b < self.num_blocks, b
+            assert b not in self._free, f"double free of block {b}"
+            self._free.append(b)
+
+
+# ---------------------------------------------------------------------------
+# Scatter/gather helpers (pure, jit-traceable)
+# ---------------------------------------------------------------------------
+
+def _scatter_ids(block_row: jax.Array, start: jax.Array, count: jax.Array,
+                 length: int, block_size: int, trash: int):
+    """Pool block ids + in-block offsets for ``length`` consecutive tokens
+    starting at sequence position ``start``; lanes >= ``count`` -> trash."""
+    idx = jnp.arange(length)
+    pos = start + idx
+    safe = jnp.clip(pos // block_size, 0, block_row.shape[0] - 1)
+    bids = jnp.where(idx < count, block_row[safe], trash)
+    return bids, pos % block_size
+
+
+def gqa_chunk_write(entry: Dict[str, jax.Array], k: jax.Array, v: jax.Array, *,
+                    slot: jax.Array, block_row: jax.Array, ctx: jax.Array,
+                    chunk_len: jax.Array, block_size: int, is_first: bool):
+    """Quantize one prefill chunk's K/V (C, KH, D) into the block pool.
+
+    ``is_first`` (static): the first chunk computes the per-channel K range
+    over its valid tokens and freezes it into the slot's scale row (KVQuant-
+    style); later chunks quantize with the frozen affine, exactly like the
+    decode append path.  V always gets fresh per-token scales.
+    """
+    c = k.shape[0]
+    qmin, qmax = int_range(8)
+    valid = (jnp.arange(c) < chunk_len)[:, None, None]
+    new = dict(entry)
+
+    if is_first:
+        # mirror quantize_keys()/minmax_scale_zero() op-for-op (same dtype
+        # promotion + eps) so single-chunk prefill == dense prefill codes
+        big = jnp.asarray(jnp.inf, k.dtype)
+        xmin = jnp.min(jnp.where(valid, k, big), axis=0)
+        xmax = jnp.max(jnp.where(valid, k, -big), axis=0)
+        delta = jnp.maximum((xmax - xmin) / (qmax - qmin), 1e-8)   # (KH,D)
+        zero = qmin - jnp.round(xmin / delta)
+        k_q = jnp.clip(jnp.round(k / delta) + zero, qmin, qmax).astype(jnp.int8)
+        new["k_scale"] = entry["k_scale"].at[slot].set(delta.astype(jnp.float32))
+        new["k_zero"] = entry["k_zero"].at[slot].set(zero.astype(jnp.float32))
+    else:
+        delta = entry["k_scale"][slot]                             # (KH,D) f32
+        zero = entry["k_zero"][slot]
+        k_q = jnp.clip(jnp.round(k.astype(jnp.float32) / delta) + zero,
+                       qmin, qmax).astype(jnp.int8)
+
+    # per-token V affine — mirrors quantize_values()
+    vmin = jnp.min(v, axis=-1, keepdims=True)
+    vmax = jnp.max(v, axis=-1, keepdims=True)
+    v_scale = jnp.maximum((vmax - vmin) / (qmax - qmin), 1e-8)     # (C,KH,1)
+    v_zero = qmin - jnp.round(vmin / v_scale)
+    v_q = jnp.clip(jnp.round(v / v_scale) + v_zero, qmin, qmax).astype(jnp.int8)
+
+    trash = entry["k_vals"].shape[0] - 1
+    bids, offs = _scatter_ids(block_row, ctx, chunk_len, c, block_size, trash)
+    new["k_vals"] = entry["k_vals"].at[bids, offs].set(k_q)
+    new["v_vals"] = entry["v_vals"].at[bids, offs].set(v_q)
+    new["v_scale"] = entry["v_scale"].at[bids, offs].set(v_scale.astype(jnp.float32))
+    new["v_zero"] = entry["v_zero"].at[bids, offs].set(v_zero.astype(jnp.float32))
+    return new
+
+
+def gqa_paged_append(entry: Dict[str, jax.Array], k_t: jax.Array, v_t: jax.Array,
+                     block_tables: jax.Array, lengths: jax.Array, *,
+                     block_size: int):
+    """Decode append: one token's K/V (B, KH, D) at position ``lengths[b]``.
+
+    f32 math mirrors ``kv_cache.gqa_cache_append`` exactly; slots whose
+    block-table entry is the trash block write harmlessly off to the side.
+    """
+    b = k_t.shape[0]
+    qmin, qmax = int_range(8)
+    k_scale, k_zero = entry["k_scale"], entry["k_zero"]            # (B,KH,D)
+    k_q = jnp.clip(jnp.round(k_t.astype(jnp.float32) / k_scale) + k_zero,
+                   qmin, qmax).astype(jnp.int8)
+
+    vmin = jnp.min(v_t, axis=-1, keepdims=True).astype(jnp.float32)
+    vmax = jnp.max(v_t, axis=-1, keepdims=True).astype(jnp.float32)
+    v_scale = jnp.maximum((vmax - vmin) / (qmax - qmin), 1e-8)
+    v_zero = qmin - jnp.round(vmin / v_scale)
+    v_q = jnp.clip(jnp.round(v_t.astype(jnp.float32) / v_scale) + v_zero,
+                   qmin, qmax).astype(jnp.int8)
+
+    bidx = jnp.arange(b)
+    safe = jnp.clip(lengths // block_size, 0, block_tables.shape[1] - 1)
+    bids = block_tables[bidx, safe]
+    offs = lengths % block_size
+    new = dict(entry)
+    new["k_vals"] = entry["k_vals"].at[bids, offs].set(k_q)
+    new["v_vals"] = entry["v_vals"].at[bids, offs].set(v_q)
+    new["v_scale"] = entry["v_scale"].at[bids, offs].set(v_scale)
+    new["v_zero"] = entry["v_zero"].at[bids, offs].set(v_zero)
+    return new
+
+
+def gqa_gather_prefix(entry: Dict[str, jax.Array], block_row: jax.Array,
+                      slot: jax.Array, dtype):
+    """Dequantize one request's cached prefix: -> k, v (M*T, KH, D)."""
+    k_q = entry["k_vals"][block_row]                 # (M,T,KH,D)
+    v_q = entry["v_vals"][block_row]
+    vs = entry["v_scale"][block_row]
+    vz = entry["v_zero"][block_row]
+    m, t = k_q.shape[0], k_q.shape[1]
+    ks = entry["k_scale"][slot]                      # (KH,D)
+    kz = entry["k_zero"][slot]
+    k = ((k_q.astype(jnp.float32) - kz) * ks).reshape(m * t, *k_q.shape[2:])
+    v = ((v_q.astype(jnp.float32) - vz) * vs).reshape(m * t, *v_q.shape[2:])
+    return k.astype(dtype), v.astype(dtype)
+
+
+# -- MLA latent pool ---------------------------------------------------------
+
+def mla_chunk_write(entry: Dict[str, jax.Array], c_kv: jax.Array, kr: jax.Array, *,
+                    slot: jax.Array, block_row: jax.Array, ctx: jax.Array,
+                    chunk_len: jax.Array, block_size: int, is_first: bool):
+    """Quantize one chunk's latent (C, rkv) + rope key (C, dr) into the pool."""
+    cl = c_kv.shape[0]
+    qmin, qmax = int_range(8)
+    valid = (jnp.arange(cl) < chunk_len)[:, None]
+    trash = entry["c_vals"].shape[0] - 1
+    bids, offs = _scatter_ids(block_row, ctx, chunk_len, cl, block_size, trash)
+    new = dict(entry)
+    for name, x in (("c", c_kv), ("kr", kr)):
+        if is_first:
+            big = jnp.asarray(jnp.inf, x.dtype)
+            xmin = jnp.min(jnp.where(valid, x, big), axis=0)
+            xmax = jnp.max(jnp.where(valid, x, -big), axis=0)
+            delta = jnp.maximum((xmax - xmin) / (qmax - qmin), 1e-8)
+            zero = qmin - jnp.round(xmin / delta)
+            q = jnp.clip(jnp.round(x / delta) + zero, qmin, qmax).astype(jnp.int8)
+            new[f"{name}_scale"] = entry[f"{name}_scale"].at[slot].set(
+                delta.astype(jnp.float32))
+            new[f"{name}_zero"] = entry[f"{name}_zero"].at[slot].set(
+                zero.astype(jnp.float32))
+        else:
+            delta = entry[f"{name}_scale"][slot]
+            zero = entry[f"{name}_zero"][slot]
+            q = jnp.clip(jnp.round(x.astype(jnp.float32) / delta) + zero,
+                         qmin, qmax).astype(jnp.int8)
+        new[f"{name}_vals"] = entry[f"{name}_vals"].at[bids, offs].set(q)
+    return new
+
+
+def mla_paged_append(entry: Dict[str, jax.Array], c_t: jax.Array, kr_t: jax.Array,
+                     block_tables: jax.Array, lengths: jax.Array, *,
+                     block_size: int):
+    """Decode append of one token's latent (B, rkv) + rope key (B, dr)."""
+    qmin, qmax = int_range(8)
+    b = c_t.shape[0]
+    bidx = jnp.arange(b)
+    safe = jnp.clip(lengths // block_size, 0, block_tables.shape[1] - 1)
+    bids = block_tables[bidx, safe]
+    offs = lengths % block_size
+    new = dict(entry)
+    for name, x_t in (("c", c_t), ("kr", kr_t)):
+        scale = entry[f"{name}_scale"]               # (B, dim)
+        zero = entry[f"{name}_zero"]
+        q = jnp.clip(jnp.round(x_t.astype(jnp.float32) / scale) + zero,
+                     qmin, qmax).astype(jnp.int8)
+        new[f"{name}_vals"] = entry[f"{name}_vals"].at[bids, offs].set(q)
+    return new
+
+
+def mla_gather_prefix(entry: Dict[str, jax.Array], block_row: jax.Array,
+                      slot: jax.Array, dtype):
+    """Dequantize one request's cached latent prefix -> c (M*T, rkv), kr (M*T, dr)."""
+    out = []
+    for name in ("c", "kr"):
+        q = entry[f"{name}_vals"][block_row]         # (M,T,dim)
+        m, t, dim = q.shape
+        scale = entry[f"{name}_scale"][slot]
+        zero = entry[f"{name}_zero"][slot]
+        x = ((q.astype(jnp.float32) - zero) * scale).reshape(m * t, dim)
+        out.append(x.astype(dtype))
+    return tuple(out)
+
+
+def mla_gather_batch(entry: Dict[str, jax.Array], block_tables: jax.Array):
+    """Batched gather for decode: block pool -> dense (B, M*T, ...) views plus
+    per-slot scales shaped for ``mla_decode_ref``."""
+    b, m = block_tables.shape
+    out = {}
+    for name in ("c", "kr"):
+        q = entry[f"{name}_vals"][block_tables]      # (B,M,T,dim)
+        out[f"{name}_vals"] = q.reshape(b, m * q.shape[2], q.shape[3])
+        out[f"{name}_scale"] = entry[f"{name}_scale"][:, None]   # (B,1,dim)
+        out[f"{name}_zero"] = entry[f"{name}_zero"][:, None]
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Accounting
+# ---------------------------------------------------------------------------
+
+def paged_cache_nbytes(pool) -> int:
+    """Allocated pool bytes (compare against the dense cache's nbytes)."""
+    total = 0
+    for leaf in jax.tree_util.tree_leaves(pool):
+        if hasattr(leaf, "nbytes"):
+            total += leaf.nbytes
+    return total

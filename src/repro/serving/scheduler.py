@@ -1,0 +1,466 @@
+"""Continuous-batching scheduler with chunked prefill over the paged cache.
+
+The paper's Distributed Controller Layer serves batched traffic; this module
+is its single-controller scheduling core, replacing the dense engine's
+synchronous slot loop:
+
+  * **continuous batching** — a fixed decode-batch width B; requests stream
+    through slots, a finishing request frees its slot (and blocks) at once.
+  * **chunked prefill** — waiting prompts are split into fixed-size chunks
+    and co-scheduled with decode in one jitted step, so a long prompt never
+    stalls in-flight decodes for more than one chunk's latency (Sarathi-style
+    stall-free batching).  Chunks are position-exact and right-aligned: the
+    dense engine's left-pad RoPE shift is gone.
+  * **admission / preemption under a token budget** — each step spends at
+    most ``token_budget`` tokens (decodes first, prefill fills the rest).
+    When the block pool runs dry the youngest running request is preempted
+    (blocks freed, request re-queued for recompute), vLLM-style.
+
+The jitted step has three static shapes: decode width B, prefill-chunk
+bucket C, and the block-table width M — bounded recompilation, same
+philosophy as the dense engine's bucketed prefill.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from functools import partial
+from typing import Any, Deque, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.online import EmaScaleState
+from repro.models.config import ModelConfig
+from repro.models.transformer import forward_decode_paged, forward_prefill_chunk
+from repro.serving.paged_cache import (BlockAllocator, PagedCacheConfig,
+                                       init_paged_cache, paged_cache_nbytes)
+
+
+@dataclasses.dataclass(frozen=True)
+class SchedulerConfig:
+    block_size: int = 16                 # tokens per KV block
+    num_blocks: int = 64                 # shared pool size
+    max_batch: int = 8                   # decode-batch width (slots)
+    max_blocks_per_req: int = 16         # block-table row width
+    prefill_chunk: int = 64              # max tokens prefilled per step
+    token_budget: int = 128              # decode + prefill tokens per step
+    eos_id: int = -1                     # -1 = never stop early
+    ema_alpha: float = 0.9
+    seed: int = 0
+
+    @property
+    def paged(self) -> PagedCacheConfig:
+        return PagedCacheConfig(block_size=self.block_size,
+                                num_blocks=self.num_blocks,
+                                max_batch=self.max_batch,
+                                max_blocks_per_req=self.max_blocks_per_req)
+
+
+class _Run:
+    """One admitted request's scheduling state."""
+
+    __slots__ = ("req", "slot", "ctx", "target", "pending", "resume_pending",
+                 "state", "order", "t_add")
+
+    def __init__(self, req, order: int):
+        self.req = req
+        self.slot = -1
+        self.ctx = 0                       # tokens currently in the cache
+        self.target = np.asarray(req.prompt)   # tokens to prefill
+        self.pending = None                # sampled token awaiting decode
+        self.resume_pending = None         # pending token across a preemption
+        self.state = "prefill"
+        self.order = order                 # arrival sequence (FCFS priority)
+        self.t_add = time.perf_counter()   # for TTFT accounting
+
+
+def _step_impl(params, pool, dec_tokens, dec_bt, dec_lens,
+               pf_tokens, pf_slot, pf_row, pf_ctx, pf_len, *,
+               cfg: ModelConfig, block_size: int,
+               do_prefill: bool, do_decode: bool, pf_first: bool):
+    """One engine iteration: prefill chunk + decode batch, fused in one jit.
+
+    The prefill request and the decode slots are disjoint, so ordering inside
+    the step is arbitrary; both write the (donated) pool.
+    """
+    pf_logits: Any = ()
+    dec_logits: Any = ()
+    if do_prefill:
+        pf_logits, pool = forward_prefill_chunk(
+            params, pf_tokens, pool, cfg, slot=pf_slot, block_row=pf_row,
+            ctx=pf_ctx, chunk_len=pf_len, block_size=block_size,
+            is_first=pf_first)
+    if do_decode:
+        dec_logits, pool = forward_decode_paged(
+            params, dec_tokens, pool, dec_bt, dec_lens, cfg,
+            block_size=block_size)
+    return pf_logits, dec_logits, pool
+
+
+def _chunk_bucket(c: int, cap: int) -> int:
+    """Pad a chunk length to a power-of-two bucket (bounded recompilation)."""
+    b = 16
+    while b < c:
+        b *= 2
+    return min(b, max(cap, c))
+
+
+class Scheduler:
+    """Paged continuous-batching scheduler (host-side control plane)."""
+
+    def __init__(self, params, cfg: ModelConfig, scfg: SchedulerConfig):
+        for i, spec in enumerate(cfg.layer_pattern):
+            if spec.mixer == "ssm":
+                raise NotImplementedError(
+                    f"paged serving does not support ssm mixers (pattern "
+                    f"position {i}); use the dense ServeEngine")
+        if cfg.n_img_patches:
+            raise NotImplementedError(
+                "paged serving does not support prefix-LM image prefixes")
+        self.params = params
+        self.cfg = cfg
+        self.scfg = scfg
+        self.pcfg = scfg.paged
+        self.trash = self.pcfg.trash_block
+        self.pool = init_paged_cache(cfg, self.pcfg)
+        self.alloc = BlockAllocator(scfg.num_blocks)
+        self.block_tables = np.full(
+            (scfg.max_batch, scfg.max_blocks_per_req), self.trash, np.int32)
+        self.slots: List[Optional[_Run]] = [None] * scfg.max_batch
+        self.waiting: Deque[_Run] = deque()
+        self.finished: List[Any] = []
+        self._order = 0
+        self._rng = jax.random.PRNGKey(scfg.seed)
+        self.scale_state = EmaScaleState.init()
+        self._step_fn = jax.jit(
+            partial(_step_impl, cfg=cfg, block_size=scfg.block_size),
+            static_argnames=("do_prefill", "do_decode", "pf_first"),
+            donate_argnums=(1,))
+        self.stats = {"prefill_tokens": 0, "prefill_chunks": 0,
+                      "decode_steps": 0, "decode_tokens": 0,
+                      "preemptions": 0, "steps": 0}
+        self._util_sum = 0.0
+        self._util_peak = 0.0
+        self._t_start: Optional[float] = None
+        self._t_last = 0.0
+
+    # -- public API -----------------------------------------------------------
+    def add_request(self, req) -> None:
+        s = int(np.asarray(req.prompt).shape[-1])
+        # the final sampled token is never appended to the cache, so the
+        # request occupies at most s + max_new - 1 slots (same contract as
+        # the dense engine)
+        need = s + req.max_new_tokens - 1
+        cap = min(self.pcfg.tokens_per_req,
+                  self.scfg.num_blocks * self.scfg.block_size)
+        if need > cap:
+            raise ValueError(
+                f"request {req.uid}: prompt ({s}) + max_new_tokens "
+                f"({req.max_new_tokens}) needs {need} cache slots, exceeding "
+                f"the paged cache capacity per request ({cap} = "
+                f"min(max_blocks_per_req * block_size, num_blocks * "
+                f"block_size)); shorten the prompt or grow the pool")
+        if req.generated is None:
+            req.generated = []
+        run = _Run(req, self._order)
+        if hasattr(req, "t_add"):
+            req.t_add = run.t_add
+        self._order += 1
+        self.waiting.append(run)
+
+    def step(self) -> bool:
+        """One iteration: admit -> schedule decode + one prefill chunk ->
+        run the fused jitted step -> sample/retire."""
+        if self._t_start is None:
+            self._t_start = time.perf_counter()
+        self._admit()
+        dec_slots = self._schedule_decode()
+        pf = self._schedule_prefill(len(dec_slots))
+        if not dec_slots and pf is None:
+            return False
+        self.stats["steps"] += 1
+        self._util_sum += self.alloc.utilization
+        self._util_peak = max(self._util_peak, self.alloc.utilization)
+
+        args = self._build_args(dec_slots, pf)
+        pf_logits, dec_logits, self.pool = self._step_fn(
+            self.params, self.pool, *args["device"],
+            do_prefill=pf is not None, do_decode=bool(dec_slots),
+            pf_first=(pf is None or pf[1] == 0))
+
+        if dec_slots:
+            self._consume_decode(dec_slots, dec_logits)
+        if pf is not None:
+            self._consume_prefill(pf, pf_logits)
+        self._t_last = time.perf_counter()
+        return True
+
+    def run(self, max_steps: int = 10_000):
+        steps = 0
+        while (self.waiting or any(self.slots)) and steps < max_steps:
+            self.step()
+            steps += 1
+        return self.finished
+
+    @property
+    def has_work(self) -> bool:
+        return bool(self.waiting or any(self.slots))
+
+    def metrics(self) -> Dict[str, float]:
+        done = [r for r in self.finished]
+        wall = max(self._t_last - (self._t_start or 0.0), 1e-9)
+        gen = self.stats["decode_tokens"] + len(done)      # + prefill samples
+        steps = max(self.stats["steps"], 1)
+        return {
+            "requests_finished": len(done),
+            "ttft_avg_s": (float(np.mean([r.ttft_s for r in done]))
+                           if done else 0.0),
+            "ttft_max_s": (float(np.max([r.ttft_s for r in done]))
+                           if done else 0.0),
+            "tokens_per_s": gen / wall,
+            "cache_util_avg": self._util_sum / steps,
+            "cache_util_peak": self._util_peak,
+            "cache_nbytes": paged_cache_nbytes(self.pool),
+            "preemptions": self.stats["preemptions"],
+            "decode_steps": self.stats["decode_steps"],
+            "prefill_chunks": self.stats["prefill_chunks"],
+        }
+
+    # -- admission / scheduling ----------------------------------------------
+    def _admit(self) -> None:
+        free = [s for s in range(self.scfg.max_batch) if self.slots[s] is None]
+        while free and self.waiting:
+            slot = free.pop(0)
+            run = self.waiting.popleft()
+            run.slot = slot
+            self.block_tables[slot, :] = self.trash
+            self.slots[slot] = run
+
+    def _schedule_decode(self) -> List[int]:
+        """Ensure every decoding slot has a block for its next token,
+        preempting the youngest request when the pool is dry."""
+        order = sorted((s for s, r in enumerate(self.slots)
+                        if r is not None and r.state == "decode"),
+                       key=lambda s: self.slots[s].order)
+        out = []
+        for s in order:
+            run = self.slots[s]
+            if run is None or run.state != "decode":
+                continue                    # preempted by an earlier lap
+            bi = run.ctx // self.scfg.block_size
+            if run.ctx % self.scfg.block_size == 0 and \
+                    self.block_tables[s, bi] == self.trash:
+                got = self._alloc_or_preempt(1, protect=s)
+                if got is None:             # s itself was the victim
+                    continue
+                self.block_tables[s, bi] = got[0]
+            out.append(s)
+        return out
+
+    def _schedule_prefill(self, n_decode: int):
+        """Pick the oldest prefilling request and size its next chunk under
+        the token budget and block availability.  -> (slot, ctx, c, c_pad)"""
+        cand = sorted((s for s, r in enumerate(self.slots)
+                       if r is not None and r.state == "prefill"),
+                      key=lambda s: self.slots[s].order)
+        if not cand:
+            return None
+        s = cand[0]
+        run = self.slots[s]
+        remaining = run.target.shape[-1] - run.ctx
+        budget = self.scfg.token_budget - n_decode
+        if n_decode and budget <= 0:
+            return None                     # decodes ate the whole budget
+        # honor the budget even on prefill-only steps (clamped to >= 1 so a
+        # degenerate token_budget cannot deadlock the queue)
+        c = min(remaining, self.scfg.prefill_chunk, max(budget, 1))
+        c = self._fit_chunk_blocks(s, run, c, allow_preempt=(n_decode == 0))
+        if c <= 0:
+            return None
+        c_pad = _chunk_bucket(c, self.scfg.prefill_chunk)
+        return (s, run.ctx, c, c_pad)
+
+    def _fit_chunk_blocks(self, s: int, run: _Run, c: int,
+                          allow_preempt: bool) -> int:
+        """Shrink ``c`` to what the pool can back, allocating blocks for the
+        chunk's span.  With ``allow_preempt`` (nothing else is running this
+        step) the youngest other request is evicted to make room."""
+        t = self.scfg.block_size
+        while True:
+            partial_room = (t - run.ctx % t) % t    # space in current block
+            cap = partial_room + self.alloc.num_free * t
+            c_fit = min(c, cap)
+            if c_fit > 0:
+                lo = run.ctx // t
+                hi = (run.ctx + c_fit + t - 1) // t
+                need = [i for i in range(lo, hi)
+                        if self.block_tables[s, i] == self.trash]
+                got = self.alloc.alloc(len(need))
+                assert got is not None
+                for i, blk in zip(need, got):
+                    self.block_tables[s, i] = blk
+                return c_fit
+            if not allow_preempt:
+                return 0
+            victims = [(r.order, v) for v, r in enumerate(self.slots)
+                       if r is not None and v != s]
+            if not victims:
+                raise RuntimeError(
+                    f"paged cache pool exhausted: request {run.req.uid} "
+                    f"cannot obtain a block and nothing is left to preempt "
+                    f"(num_blocks={self.scfg.num_blocks})")
+            self._preempt(max(victims)[1])
+
+    def _alloc_or_preempt(self, n: int, protect: int):
+        while True:
+            got = self.alloc.alloc(n)
+            if got is not None:
+                return got
+            victims = [(r.order, s) for s, r in enumerate(self.slots)
+                       if r is not None]
+            if not victims:
+                raise RuntimeError("paged cache pool exhausted with no "
+                                   "running requests to preempt")
+            victim = max(victims)[1]
+            self._preempt(victim)
+            if victim == protect:
+                return None
+
+    def _preempt(self, s: int) -> None:
+        """Evict slot ``s``: free its blocks and re-queue it for recompute
+        (prefill over prompt + generated-so-far, vLLM recompute policy)."""
+        run = self.slots[s]
+        assert run is not None
+        self._free_row(s)
+        if run.pending is not None and run.req.generated:
+            # cached sequence = prompt + generated[:-1]; the pending token is
+            # generated[-1] and is re-fed through decode after the re-prefill
+            run.target = _with_generated(np.asarray(run.req.prompt),
+                                         run.req.generated[:-1])
+            run.resume_pending = run.req.generated[-1]
+        run.pending = None
+        run.ctx = 0
+        run.state = "prefill"
+        run.slot = -1
+        self.slots[s] = None
+        self.waiting.appendleft(run)
+        self.stats["preemptions"] += 1
+
+    def _free_row(self, s: int) -> None:
+        row = self.block_tables[s]
+        self.alloc.free([int(b) for b in row if b != self.trash])
+        self.block_tables[s, :] = self.trash
+
+    # -- device-step plumbing --------------------------------------------------
+    def _build_args(self, dec_slots: List[int], pf) -> Dict[str, Any]:
+        b = self.scfg.max_batch
+        m = self.scfg.max_blocks_per_req
+        tok_shape = (b, self.cfg.n_codebooks) if self.cfg.n_codebooks else (b,)
+        dec_toks = np.zeros(tok_shape, np.int32)
+        dec_bt = np.full((b, m), self.trash, np.int32)
+        dec_lens = np.zeros((b,), np.int32)
+        for s in dec_slots:
+            run = self.slots[s]
+            dec_toks[s] = run.pending
+            dec_bt[s] = self.block_tables[s]
+            dec_lens[s] = run.ctx
+
+        if pf is not None:
+            s, ctx, c, c_pad = pf
+            run = self.slots[s]
+            sl = run.target[..., ctx:ctx + c].astype(np.int32)
+            pad = c_pad - c
+            widths = [(0, 0)] * (sl.ndim - 1) + [(0, pad)]
+            pf_toks = np.pad(sl, widths)[None]
+            pf_slot, pf_row, pf_ctx, pf_len = s, self.block_tables[s], ctx, c
+        else:
+            width = (1, self.cfg.n_codebooks, 16) if self.cfg.n_codebooks \
+                else (1, 16)
+            pf_toks = np.zeros(width, np.int32)
+            pf_slot, pf_ctx, pf_len = 0, 0, 0
+            pf_row = np.full((m,), self.trash, np.int32)
+
+        device = (jnp.asarray(dec_toks), jnp.asarray(dec_bt),
+                  jnp.asarray(dec_lens), jnp.asarray(pf_toks),
+                  jnp.int32(pf_slot), jnp.asarray(pf_row, dtype=jnp.int32),
+                  jnp.int32(pf_ctx), jnp.int32(pf_len))
+        return {"device": device}
+
+    # -- sampling / retirement -------------------------------------------------
+    def _sample(self, logits, temps: np.ndarray):
+        """Greedy/temperature sampling per batch row (shared with the dense
+        engine — see engine.sample_tokens for the RNG/EMA contract)."""
+        from repro.serving.engine import sample_tokens
+        toks, self._rng, self.scale_state = sample_tokens(
+            logits, temps, self._rng, self.scale_state, self.scfg.ema_alpha)
+        return toks
+
+    def _emit(self, run: _Run, tok, first: bool) -> None:
+        req = run.req
+        req.generated.append(tok)
+        if first:
+            req.ttft_s = time.perf_counter() - run.t_add
+        if req.on_token is not None:
+            req.on_token(req, tok)
+
+    def _consume_decode(self, dec_slots: List[int], dec_logits) -> None:
+        temps = np.zeros((self.scfg.max_batch,), np.float32)
+        for s in dec_slots:
+            temps[s] = self.slots[s].req.temperature
+        toks = self._sample(dec_logits, temps)
+        toks_np = np.asarray(toks)
+        self.stats["decode_steps"] += 1
+        for s in dec_slots:
+            run = self.slots[s]
+            tok = toks_np[s].tolist()
+            run.ctx += 1
+            run.pending = tok
+            self._emit(run, tok, first=False)
+            self.stats["decode_tokens"] += 1
+            if self._stopped(run, tok):
+                self._finish(s)
+
+    def _consume_prefill(self, pf, pf_logits) -> None:
+        s, ctx, c, _ = pf
+        run = self.slots[s]
+        run.ctx += c
+        self.stats["prefill_tokens"] += c
+        self.stats["prefill_chunks"] += 1
+        if run.ctx < run.target.shape[-1]:
+            return                             # more chunks to go
+        run.state = "decode"
+        if run.resume_pending is not None:     # recompute after preemption:
+            run.pending = run.resume_pending   # re-feed the in-flight token
+            run.resume_pending = None
+            return
+        temps = np.asarray([run.req.temperature], np.float32)
+        tok = np.asarray(self._sample(pf_logits, temps))[0].tolist()
+        run.pending = tok
+        self._emit(run, tok, first=True)
+        if self._stopped(run, tok):
+            self._finish(s)
+
+    def _stopped(self, run: _Run, tok) -> bool:
+        if len(run.req.generated) >= run.req.max_new_tokens:
+            return True
+        return self.scfg.eos_id >= 0 and tok == self.scfg.eos_id
+
+    def _finish(self, s: int) -> None:
+        run = self.slots[s]
+        run.req.done = True
+        self.finished.append(run.req)
+        self._free_row(s)
+        self.slots[s] = None
+
+
+def _with_generated(prompt: np.ndarray, gen: list) -> np.ndarray:
+    """prompt (S,) or (K,S) ++ generated tokens -> the recompute target."""
+    if not gen:
+        return prompt
+    g = np.asarray(gen, dtype=prompt.dtype)
+    if prompt.ndim == 2:                       # MusicGen: gen rows are (K,)
+        g = g.T
+    return np.concatenate([prompt, g], axis=-1)

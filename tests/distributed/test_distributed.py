@@ -34,7 +34,7 @@ def test_scale_sync_consistency_8dev():
         import jax, jax.numpy as jnp, numpy as np
         from functools import partial
         from jax.sharding import Mesh, PartitionSpec as P
-        from jax import shard_map
+        from jax.experimental.shard_map import shard_map
         from repro.distributed.scale_sync import (global_absmax,
                                                   sync_scale_allgather,
                                                   make_synced_quant_step)
@@ -44,7 +44,7 @@ def test_scale_sync_consistency_8dev():
             jnp.arange(1, 65)[:, None]          # shard-dependent ranges
 
         @partial(shard_map, mesh=mesh, in_specs=P("data"), out_specs=P("data"),
-                 check_vma=False)
+                 check_rep=False)
         def both(xs):
             local = jnp.max(jnp.abs(xs))
             via_pmax = global_absmax(xs, ("data",))

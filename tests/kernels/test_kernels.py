@@ -9,7 +9,8 @@ from repro.core.methods.simquant import quantize_kv
 from repro.core.qtensor import quantize_symmetric
 from repro.kernels import ref
 from repro.kernels.fused_quant import fused_quant
-from repro.kernels.kv_decode_attention import kv_decode_attention
+from repro.kernels.kv_decode_attention import (kv_decode_attention,
+                                               paged_kv_decode_attention)
 from repro.kernels.w8a8_matmul import w8a8_matmul
 
 KEY = jax.random.PRNGKey(0)
@@ -68,6 +69,36 @@ def test_kv_decode_attention_sweep(b, s, h, kh, d, chunk):
                               chunk=chunk, interpret=True)
     outr = ref.kv_decode_attention_ref(q, qk.values, qk.scale, qk.zero,
                                        qv.values, qv.scale, qv.zero, length)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(outr),
+                               rtol=3e-5, atol=3e-5)
+
+
+@pytest.mark.parametrize("b,h,kh,d,n,t,m", [(2, 8, 4, 32, 10, 16, 4),
+                                            (3, 4, 1, 64, 6, 8, 3),
+                                            (1, 6, 2, 16, 5, 4, 5)])
+def test_paged_kv_decode_attention_sweep(b, h, kh, d, n, t, m):
+    """Gather-by-block-table Pallas kernel vs the dense-gather oracle."""
+    q = jax.random.normal(KEY, (b, h, d))
+    k_pool = jax.random.normal(jax.random.PRNGKey(1), (1, n * t, kh, d))
+    v_pool = jax.random.normal(jax.random.PRNGKey(2), (1, n * t, kh, d))
+    qk, qv = quantize_kv(k_pool, v_pool)
+    k_vals = qk.values.reshape(n, t, kh, d)
+    v_vals = qv.values.reshape(n, t, kh, d)
+    v_scale = qv.scale.reshape(n, t, kh, 1)
+    v_zero = qv.zero.reshape(n, t, kh, 1)
+    # per-slot frozen K affine (slightly different per batch row)
+    k_scale = (jnp.broadcast_to(qk.scale[0], (b, kh, d))
+               * jnp.linspace(0.9, 1.1, b)[:, None, None])
+    k_zero = jnp.broadcast_to(qk.zero[0], (b, kh, d))
+    rs = np.random.RandomState(0)
+    tables = jnp.asarray(rs.randint(0, n, size=(b, m)), jnp.int32)
+    lengths = jnp.asarray(rs.randint(1, m * t + 1, size=(b,)), jnp.int32)
+    out = paged_kv_decode_attention(q, k_vals, k_scale, k_zero,
+                                    v_vals, v_scale, v_zero,
+                                    tables, lengths, interpret=True)
+    outr = ref.paged_kv_decode_attention_ref(q, k_vals, k_scale, k_zero,
+                                             v_vals, v_scale, v_zero,
+                                             tables, lengths)
     np.testing.assert_allclose(np.asarray(out), np.asarray(outr),
                                rtol=3e-5, atol=3e-5)
 

@@ -1,0 +1,175 @@
+"""Paged KV cache: allocator, pool layout, and quantization-parity units."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import ModelConfig
+from repro.models.config import LayerSpec
+from repro.serving.kv_cache import gqa_cache_entry
+from repro.serving.paged_cache import (BlockAllocator, PagedCacheConfig,
+                                       gqa_chunk_write, gqa_gather_prefix,
+                                       gqa_paged_append, init_paged_cache,
+                                       paged_cache_nbytes)
+
+KEY = jax.random.PRNGKey(0)
+CFG = ModelConfig(name="t", vocab_size=128, d_model=64, n_layers=2, n_heads=4,
+                  n_kv_heads=2, d_ff=128)
+
+
+# ---------------------------------------------------------------------------
+# BlockAllocator
+# ---------------------------------------------------------------------------
+
+def test_allocator_alloc_free_reuse():
+    a = BlockAllocator(4)
+    got = a.alloc(3)
+    assert sorted(got) == [0, 1, 2]
+    assert a.num_free == 1 and a.num_used == 3
+    a.free([1])
+    # LIFO recycling: the just-freed block is handed out first
+    assert a.alloc(1) == [1]
+    a.free([0, 1, 2])
+    assert a.num_free == 4
+    assert a.utilization == 0.0
+
+
+def test_allocator_all_or_nothing_oom():
+    a = BlockAllocator(2)
+    assert a.alloc(3) is None          # refused outright, nothing leaked
+    assert a.num_free == 2
+    first = a.alloc(2)
+    assert a.alloc(1) is None
+    a.free(first)
+    assert a.alloc(2) is not None
+
+
+def test_allocator_double_free_rejected():
+    a = BlockAllocator(2)
+    blk = a.alloc(1)
+    a.free(blk)
+    with pytest.raises(AssertionError):
+        a.free(blk)
+
+
+# ---------------------------------------------------------------------------
+# Pool layout
+# ---------------------------------------------------------------------------
+
+def test_pool_shapes_and_trash_block():
+    pcfg = PagedCacheConfig(block_size=8, num_blocks=6, max_batch=3,
+                            max_blocks_per_req=4)
+    pool = init_paged_cache(CFG, pcfg)
+    ent = pool["p0"]
+    r = CFG.n_repeats
+    assert ent["k_vals"].shape == (r, 7, 8, 2, 16)     # num_blocks + trash
+    assert ent["k_vals"].dtype == jnp.int8
+    assert ent["v_scale"].shape == (r, 7, 8, 2, 1)
+    assert ent["k_scale"].shape == (r, 3, 2, 16)       # per-slot frozen affine
+    assert pcfg.trash_block == 6
+    assert pcfg.tokens_per_req == 32
+
+
+def test_pool_rejects_ssm():
+    cfg = ModelConfig(name="s", vocab_size=64, d_model=64, n_layers=1,
+                      n_heads=4, d_ff=128, ssm_state=16,
+                      layer_pattern=(LayerSpec("ssm", "none"),))
+    with pytest.raises(NotImplementedError):
+        init_paged_cache(cfg, PagedCacheConfig())
+
+
+def test_pool_scales_with_blocks_not_slots():
+    """The dense layout pays max_slots * smax regardless of load; the pool
+    pays num_blocks * block_size."""
+    small = init_paged_cache(CFG, PagedCacheConfig(block_size=8, num_blocks=4,
+                                                   max_batch=8))
+    big = init_paged_cache(CFG, PagedCacheConfig(block_size=8, num_blocks=32,
+                                                 max_batch=8))
+    assert paged_cache_nbytes(small) < paged_cache_nbytes(big) / 4
+
+
+# ---------------------------------------------------------------------------
+# Quantization parity with the dense cache
+# ---------------------------------------------------------------------------
+
+def _entry0(pool):
+    """Strip the repeat axis of pattern position 0 (as lax.scan does)."""
+    return jax.tree_util.tree_map(lambda a: a[0], pool["p0"])
+
+
+def test_chunk_write_matches_dense_prefill_codes():
+    """A single full-prompt chunk must produce bit-identical int8 codes and
+    scales to the dense gqa_cache_entry path (golden-parity contract)."""
+    s, kh, d, t = 16, 2, 16, 8
+    k = jax.random.normal(KEY, (1, s, kh, d), jnp.bfloat16)
+    v = jax.random.normal(jax.random.PRNGKey(1), (1, s, kh, d), jnp.bfloat16)
+    dense = gqa_cache_entry(k, v, smax=s)
+
+    pcfg = PagedCacheConfig(block_size=t, num_blocks=4, max_batch=2,
+                            max_blocks_per_req=2)
+    entry = _entry0(init_paged_cache(CFG, pcfg))
+    block_row = jnp.asarray([0, 1], jnp.int32)
+    entry = gqa_chunk_write(entry, k[0], v[0], slot=jnp.int32(0),
+                            block_row=block_row, ctx=jnp.int32(0),
+                            chunk_len=jnp.int32(s), block_size=t,
+                            is_first=True)
+    got_k = np.asarray(entry["k_vals"][block_row]).reshape(s, kh, d)
+    got_v = np.asarray(entry["v_vals"][block_row]).reshape(s, kh, d)
+    np.testing.assert_array_equal(got_k, np.asarray(dense["k_vals"][0]))
+    np.testing.assert_array_equal(got_v, np.asarray(dense["v_vals"][0]))
+    np.testing.assert_array_equal(np.asarray(entry["k_scale"][0]),
+                                  np.asarray(dense["k_scale"][0, 0]))
+    np.testing.assert_array_equal(np.asarray(entry["k_zero"][0]),
+                                  np.asarray(dense["k_zero"][0, 0]))
+    got_vs = np.asarray(entry["v_scale"][block_row]).reshape(s, kh, 1)
+    np.testing.assert_array_equal(got_vs, np.asarray(dense["v_scale"][0]))
+
+
+def test_chunk_write_pad_lanes_go_to_trash():
+    """Padding lanes of a short chunk land in the trash block, and the
+    frozen K range is computed over valid tokens only."""
+    s, c, kh, d, t = 5, 8, 2, 16, 4
+    k = jax.random.normal(KEY, (c, kh, d))
+    v = jax.random.normal(jax.random.PRNGKey(1), (c, kh, d))
+    # plant a huge outlier in a padding lane: must NOT blow up the K range
+    k = k.at[s + 1].set(1000.0)
+    pcfg = PagedCacheConfig(block_size=t, num_blocks=3, max_batch=1,
+                            max_blocks_per_req=3)
+    entry = _entry0(init_paged_cache(CFG, pcfg))
+    row = jnp.asarray([0, 1, pcfg.trash_block], jnp.int32)
+    entry = gqa_chunk_write(entry, k, v, slot=jnp.int32(0), block_row=row,
+                            ctx=jnp.int32(0), chunk_len=jnp.int32(s),
+                            block_size=t, is_first=True)
+    assert float(jnp.max(entry["k_scale"][0])) < 1.0   # outlier excluded
+    # valid tokens 0..4 occupy block 0 fully + block 1 token 0
+    assert int(jnp.sum(jnp.abs(entry["k_vals"][1, 1:]))) == 0
+
+
+def test_append_then_gather_roundtrip():
+    """Decode-append a token, gather the prefix back, check dequantization."""
+    kh, d, t = 2, 16, 4
+    pcfg = PagedCacheConfig(block_size=t, num_blocks=4, max_batch=2,
+                            max_blocks_per_req=2)
+    entry = _entry0(init_paged_cache(CFG, pcfg))
+    # freeze scales with a first chunk of 3 tokens
+    k0 = jax.random.normal(KEY, (4, kh, d))
+    v0 = jax.random.normal(jax.random.PRNGKey(1), (4, kh, d))
+    row = jnp.asarray([0, 1], jnp.int32)
+    entry = gqa_chunk_write(entry, k0, v0, slot=jnp.int32(0), block_row=row,
+                            ctx=jnp.int32(0), chunk_len=jnp.int32(3),
+                            block_size=t, is_first=True)
+    # append token 3, clamped into the frozen per-channel range (out-of-range
+    # values clip by design — paper Eq. 1, same contract as the dense cache)
+    tables = jnp.asarray([[0, 1], [2, pcfg.trash_block]], jnp.int32)
+    lengths = jnp.asarray([3, 0], jnp.int32)
+    kmin = (-128.0 - entry["k_zero"][0]) * entry["k_scale"][0]
+    kmax = (127.0 - entry["k_zero"][0]) * entry["k_scale"][0]
+    k_t = jnp.clip(jax.random.normal(jax.random.PRNGKey(2), (2, kh, d)),
+                   kmin, kmax)
+    v_t = jax.random.normal(jax.random.PRNGKey(3), (2, kh, d))
+    entry = gqa_paged_append(entry, k_t, v_t, tables, lengths, block_size=t)
+    k_re, v_re = gqa_gather_prefix(entry, row, jnp.int32(0), jnp.float32)
+    np.testing.assert_allclose(np.asarray(v_re[3]), np.asarray(v_t[0]),
+                               atol=0.02)
+    np.testing.assert_allclose(np.asarray(k_re[3]), np.asarray(k_t[0]),
+                               atol=0.1)

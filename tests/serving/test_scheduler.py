@@ -1,0 +1,209 @@
+"""Paged scheduler: golden parity vs the dense engine, chunked prefill,
+preemption, sampling and engine-frontend behaviour."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import ModelConfig, init_params
+from repro.models.config import LayerSpec
+from repro.serving.engine import (EngineConfig, PagedServeEngine, Request,
+                                  ServeEngine)
+from repro.serving.kv_cache import cache_nbytes
+from repro.serving.scheduler import SchedulerConfig, _chunk_bucket
+
+CFG = ModelConfig(name="t", vocab_size=128, d_model=64, n_layers=2, n_heads=4,
+                  n_kv_heads=2, d_ff=128, attn_chunk=16)
+KEY = jax.random.PRNGKey(0)
+PARAMS = init_params(CFG, KEY)
+
+# bucket-exact lengths: the dense engine's left-pad hack is a no-op there,
+# so dense and paged must agree token-for-token
+GOLDEN_PROMPTS = [(np.arange(16, dtype=np.int32) * 3) % 128,
+                  (np.arange(32, dtype=np.int32) * 7) % 128,
+                  (np.arange(64, dtype=np.int32) * 5) % 128,
+                  (np.arange(16, dtype=np.int32) * 11) % 128]
+
+
+def _dense(max_slots=4, smax=128):
+    return ServeEngine(PARAMS, CFG, EngineConfig(max_slots=max_slots, smax=smax))
+
+
+def _paged(**kw):
+    defaults = dict(block_size=16, num_blocks=24, max_batch=4,
+                    max_blocks_per_req=8, prefill_chunk=64, token_budget=128)
+    defaults.update(kw)
+    return PagedServeEngine(PARAMS, CFG, SchedulerConfig(**defaults))
+
+
+def test_golden_paged_matches_dense_greedy():
+    """Mixed-length batch: greedy outputs identical token-for-token, while
+    the paged pool allocates fewer KV bytes than the dense max_slots*smax
+    layout (the tentpole acceptance criterion)."""
+    dense = _dense()
+    paged = _paged()
+    for i, p in enumerate(GOLDEN_PROMPTS):
+        dense.add_request(Request(uid=i, prompt=p.copy(), max_new_tokens=8))
+        paged.add_request(Request(uid=i, prompt=p.copy(), max_new_tokens=8))
+    dense.run()
+    paged.run()
+    d = {r.uid: r.generated for r in dense.finished}
+    g = {r.uid: r.generated for r in paged.finished}
+    assert d == g
+    assert cache_nbytes(dense._cache) > paged.cache_nbytes()
+
+
+def test_chunked_prefill_completes_and_is_bounded():
+    """A 48-token prompt over 16-token chunks: 3 chunks, full generation,
+    and bounded divergence vs a single-chunk run (K scales freeze at chunk 1
+    instead of over the whole prompt)."""
+    p48 = (np.arange(48, dtype=np.int32) * 11) % 128
+    multi = _paged(block_size=8, num_blocks=32, max_batch=2,
+                   max_blocks_per_req=10, prefill_chunk=16, token_budget=32)
+    multi.add_request(Request(uid=0, prompt=p48.copy(), max_new_tokens=8))
+    multi.run()
+    single = _paged(block_size=8, num_blocks=32, max_batch=2,
+                    max_blocks_per_req=10, prefill_chunk=64, token_budget=128)
+    single.add_request(Request(uid=0, prompt=p48.copy(), max_new_tokens=8))
+    single.run()
+    assert multi.stats["prefill_chunks"] == 3
+    a = multi.finished[0].generated
+    b = single.finished[0].generated
+    assert len(a) == len(b) == 8
+    # bounded divergence, not equality: an untrained random model amplifies
+    # the frozen-scale delta, so only demand the streams stay correlated
+    agree = sum(int(x == y) for x, y in zip(a, b)) / len(a)
+    assert agree >= 0.25, (a, b)
+
+
+def test_chunked_prefill_coscheduled_with_decode():
+    """While one request decodes, another's prompt prefills chunk-by-chunk —
+    the decode stream must not stall for the whole prompt."""
+    eng = _paged(block_size=8, num_blocks=32, max_batch=2,
+                 max_blocks_per_req=10, prefill_chunk=16, token_budget=24)
+    eng.add_request(Request(uid=0, prompt=GOLDEN_PROMPTS[0].copy(),
+                            max_new_tokens=12))
+    # step until request 0 is decoding, then enqueue a long prompt
+    while not any(r is not None and r.state == "decode"
+                  for r in eng.scheduler.slots):
+        eng.step()
+    tokens_before = len(eng.scheduler.slots[0].req.generated)
+    p48 = (np.arange(48, dtype=np.int32) * 13) % 128
+    eng.add_request(Request(uid=1, prompt=p48, max_new_tokens=4))
+    eng.step()                       # one fused step: chunk + decode together
+    assert eng.stats["prefill_chunks"] >= 1
+    assert len(eng.scheduler.slots[0].req.generated) == tokens_before + 1
+    done = eng.run()
+    assert sorted(len(r.generated) for r in done) == [4, 12]
+
+
+def test_preemption_under_tiny_pool():
+    """Pool too small for all requests at once: the youngest is preempted
+    (recompute) and every request still finishes with full output length."""
+    eng = _paged(block_size=8, num_blocks=8, max_batch=3,
+                 max_blocks_per_req=6, prefill_chunk=16, token_budget=64)
+    for i in range(3):
+        eng.add_request(Request(
+            uid=i, prompt=((np.arange(16) + i) % 128).astype(np.int32),
+            max_new_tokens=12))
+    done = eng.run()
+    m = eng.metrics()
+    assert len(done) == 3
+    assert all(len(r.generated) == 12 for r in done)
+    assert m["preemptions"] >= 1
+    # every block returned to the pool at the end
+    assert eng.scheduler.alloc.num_free == 8
+
+
+def test_oversized_request_rejected_with_clear_error():
+    eng = _paged(block_size=8, num_blocks=8, max_batch=2,
+                 max_blocks_per_req=4)           # 32 tokens/request cap
+    with pytest.raises(ValueError, match="paged cache capacity"):
+        eng.add_request(Request(uid=0, prompt=np.arange(40, dtype=np.int32) % 128,
+                                max_new_tokens=8))
+
+
+def test_streaming_callback_and_metrics():
+    seen = []
+    eng = _paged()
+    eng.add_request(Request(uid=0, prompt=GOLDEN_PROMPTS[0].copy(),
+                            max_new_tokens=6,
+                            on_token=lambda req, tok: seen.append(tok)))
+    eng.run()
+    assert seen == eng.finished[0].generated
+    m = eng.metrics()
+    assert m["requests_finished"] == 1
+    assert m["ttft_avg_s"] > 0
+    assert m["tokens_per_s"] > 0
+    assert 0 < m["cache_util_peak"] <= 1
+    assert eng.finished[0].ttft_s > 0
+
+
+def test_paged_mla_matches_dense():
+    """MLA latent pool path agrees with the dense engine token-for-token."""
+    cfg = ModelConfig(name="mla", vocab_size=128, d_model=64, n_layers=2,
+                      n_heads=4, d_ff=128, q_lora_rank=32, kv_lora_rank=16,
+                      qk_nope_head_dim=16, qk_rope_head_dim=8, v_head_dim=16,
+                      layer_pattern=(LayerSpec("mla", "dense"),),
+                      attn_chunk=16)
+    params = init_params(cfg, jax.random.PRNGKey(1))
+    prompt = (np.arange(16, dtype=np.int32) * 3) % 128
+    dense = ServeEngine(params, cfg, EngineConfig(max_slots=2, smax=64))
+    paged = PagedServeEngine(params, cfg, SchedulerConfig(
+        block_size=16, num_blocks=8, max_batch=2, max_blocks_per_req=4,
+        prefill_chunk=16, token_budget=64))
+    for e in (dense, paged):
+        e.add_request(Request(uid=0, prompt=prompt.copy(), max_new_tokens=6))
+        e.run()
+    assert dense.finished[0].generated == paged.finished[0].generated
+
+
+def test_paged_rejects_ssm_patterns():
+    cfg = ModelConfig(name="s", vocab_size=64, d_model=64, n_layers=1,
+                      n_heads=4, d_ff=128, ssm_state=16,
+                      layer_pattern=(LayerSpec("ssm", "none"),))
+    params = {}                                  # never reached
+    with pytest.raises(NotImplementedError, match="ssm"):
+        PagedServeEngine(params, cfg, SchedulerConfig())
+
+
+def test_chunk_bucket():
+    assert _chunk_bucket(1, 64) == 16
+    assert _chunk_bucket(16, 64) == 16
+    assert _chunk_bucket(17, 64) == 32
+    assert _chunk_bucket(60, 64) == 64
+    assert _chunk_bucket(60, 48) == 60           # cap never truncates c
+
+
+# -- dense-engine satellite fixes -------------------------------------------
+
+def test_dense_per_request_temperature():
+    """Greedy and hot requests co-batched: the greedy one must match a solo
+    greedy run (regression: decode ignored per-request temperature)."""
+    prompt = (np.arange(16, dtype=np.int32) * 3) % 128
+    both = _dense(max_slots=2, smax=64)
+    both.add_request(Request(uid=0, prompt=prompt.copy(), max_new_tokens=12,
+                             temperature=0.0))
+    both.add_request(Request(uid=1, prompt=prompt.copy(), max_new_tokens=12,
+                             temperature=5.0))
+    both.run()
+    solo = _dense(max_slots=2, smax=64)
+    solo.add_request(Request(uid=0, prompt=prompt.copy(), max_new_tokens=12))
+    solo.run()
+    outs = {r.uid: r.generated for r in both.finished}
+    assert outs[0] == solo.finished[0].generated
+    assert outs[1] != outs[0]
+
+
+def test_dense_oversized_prompt():
+    eng = _dense(max_slots=2, smax=64)
+    with pytest.raises(ValueError, match="exceeds the cache capacity"):
+        eng.add_request(Request(uid=0, prompt=np.arange(65, dtype=np.int32) % 128))
+    trunc = ServeEngine(PARAMS, CFG, EngineConfig(max_slots=2, smax=64,
+                                                  truncate_prompts=True))
+    trunc.add_request(Request(uid=0, prompt=np.arange(100, dtype=np.int32) % 128,
+                              max_new_tokens=4))
+    # truncation reserves room for every appended decode token: smax-max_new+1
+    assert trunc.queue[-1].prompt.shape[-1] == 61
+    done = trunc.run()
+    assert len(done[0].generated) == 4
