@@ -1,4 +1,4 @@
-"""Serving-path benchmark: offered-load sweep over the paged engine.
+"""Serving-path benchmark: offered-load + shared-prefix sweeps, paged engine.
 
 For each offered load (requests injected per engine step) the sweep drives
 the paged scheduler end-to-end and reports TTFT, decode throughput, cache
@@ -7,7 +7,14 @@ latency tables, giving the paged/chunked-prefill stack a perf trajectory
 across PRs.  A dense-engine row at the same traffic anchors the comparison
 (memory column = allocated KV-cache bytes).
 
-Run directly:  PYTHONPATH=src python -m benchmarks.bench_serving
+The shared-prefix sweep replays the many-users-one-system-prompt regime:
+every request shares a common prefix, run once with the prefix cache off
+(cold) and once on (warm) — the warm row's ``prefix_hit_rate`` and the TTFT
+delta are the prefix-caching win.
+
+Run directly:  PYTHONPATH=src python -m benchmarks.bench_serving [--smoke]
+``--smoke`` shrinks traffic so the whole bench finishes in well under 30 s
+(tier-1-loop friendly).
 """
 from __future__ import annotations
 
@@ -37,14 +44,26 @@ SCFG = SchedulerConfig(block_size=16, num_blocks=24, max_batch=4,
                                                 # the dense 4*128=512
 
 
-def _requests(rng):
+def _requests(rng, n, max_new):
     """Mixed-length prompt batch (8..64 tokens)."""
     out = []
-    for i in range(N_REQUESTS):
+    for i in range(n):
         s = int(rng.integers(8, 65))
         out.append(Request(uid=i,
                            prompt=rng.integers(0, 512, size=s).astype(np.int32),
-                           max_new_tokens=MAX_NEW))
+                           max_new_tokens=max_new))
+    return out
+
+
+def _shared_prefix_requests(rng, n, max_new, prefix_len=48):
+    """Every request = one shared system prefix + a short unique tail."""
+    prefix = rng.integers(0, 512, size=prefix_len).astype(np.int32)
+    out = []
+    for i in range(n):
+        tail = rng.integers(0, 512, size=int(rng.integers(4, 17)))
+        out.append(Request(
+            uid=i, prompt=np.concatenate([prefix, tail.astype(np.int32)]),
+            max_new_tokens=max_new))
     return out
 
 
@@ -69,48 +88,76 @@ def _drive(eng, reqs, per_step: float):
     return time.perf_counter() - t0
 
 
-def run():
+def _paged_row(point, eng, wall):
+    m = eng.metrics()
+    return {
+        "point": point,
+        "ttft_ms": round(m["ttft_avg_s"] * 1e3, 2),
+        "ttft_max_ms": round(m["ttft_max_s"] * 1e3, 2),
+        "tokens_per_s": round(m["tokens_per_s"], 2),
+        "cache_util_avg": round(m["cache_util_avg"], 3),
+        "cache_util_peak": round(m["cache_util_peak"], 3),
+        "preemptions": m["preemptions"],
+        "prefix_hit_tokens": m["prefix_hit_tokens"],
+        "prefix_hit_rate": round(m["prefix_hit_rate"], 3),
+        "prefill_chunks": m["prefill_chunks"],
+        "cache_bytes": m["cache_nbytes"],
+        "wall_s": round(wall, 2),
+    }
+
+
+def run(smoke: bool = False):
     params = init_params(SERVE_CFG, jax.random.PRNGKey(0))
+    n = 4 if smoke else N_REQUESTS
+    max_new = 4 if smoke else MAX_NEW
+    loads = [("high_4rps", 4.0)] if smoke else [("low_0.5rps", 0.5),
+                                                ("high_4rps", 4.0)]
     rows = []
-    for load_name, per_step in [("low_0.5rps", 0.5), ("high_4rps", 4.0)]:
+    for load_name, per_step in loads:
         rng = np.random.default_rng(7)
         eng = PagedServeEngine(params, SERVE_CFG, SCFG)
-        wall = _drive(eng, _requests(rng), per_step)
-        m = eng.metrics()
+        wall = _drive(eng, _requests(rng, n, max_new), per_step)
+        rows.append(_paged_row(f"paged_{load_name}", eng, wall))
+
+    # shared-prefix sweep: identical traffic, cache off (cold) vs on (warm)
+    import dataclasses
+    for tag, cached in [("cold", False), ("warm", True)]:
+        rng = np.random.default_rng(11)
+        scfg = dataclasses.replace(SCFG, prefix_cache=cached)
+        eng = PagedServeEngine(params, SERVE_CFG, scfg)
+        wall = _drive(eng, _shared_prefix_requests(rng, n, max_new), 2.0)
+        rows.append(_paged_row(f"shared_prefix_{tag}", eng, wall))
+
+    if not smoke:
+        # dense anchor at the high load point
+        rng = np.random.default_rng(7)
+        eng = ServeEngine(params, SERVE_CFG,
+                          EngineConfig(max_slots=SCFG.max_batch, smax=SMAX))
+        wall = _drive(eng, _requests(rng, n, max_new), 4.0)
+        gen = eng.stats["decode_tokens"] + len(eng.finished)
+        done = eng.finished
         rows.append({
-            "point": f"paged_{load_name}",
-            "ttft_ms": round(m["ttft_avg_s"] * 1e3, 2),
-            "ttft_max_ms": round(m["ttft_max_s"] * 1e3, 2),
-            "tokens_per_s": round(m["tokens_per_s"], 2),
-            "cache_util_avg": round(m["cache_util_avg"], 3),
-            "cache_util_peak": round(m["cache_util_peak"], 3),
-            "preemptions": m["preemptions"],
-            "cache_bytes": m["cache_nbytes"],
+            "point": "dense_high_4rps",
+            "ttft_ms": round(float(np.mean([r.ttft_s for r in done])) * 1e3, 2),
+            "ttft_max_ms": round(float(np.max([r.ttft_s for r in done])) * 1e3, 2),
+            "tokens_per_s": round(gen / max(wall, 1e-9), 2),
+            "cache_util_avg": 1.0,       # dense pays full allocation always
+            "cache_util_peak": 1.0,
+            "preemptions": 0,
+            "prefix_hit_tokens": 0,
+            "prefix_hit_rate": 0.0,
+            "prefill_chunks": 0,
+            "cache_bytes": cache_nbytes(eng._cache),
             "wall_s": round(wall, 2),
         })
-
-    # dense anchor at the high load point
-    rng = np.random.default_rng(7)
-    eng = ServeEngine(params, SERVE_CFG,
-                      EngineConfig(max_slots=SCFG.max_batch, smax=SMAX))
-    wall = _drive(eng, _requests(rng), 4.0)
-    gen = eng.stats["decode_tokens"] + len(eng.finished)
-    done = eng.finished
-    rows.append({
-        "point": "dense_high_4rps",
-        "ttft_ms": round(float(np.mean([r.ttft_s for r in done])) * 1e3, 2),
-        "ttft_max_ms": round(float(np.max([r.ttft_s for r in done])) * 1e3, 2),
-        "tokens_per_s": round(gen / max(wall, 1e-9), 2),
-        "cache_util_avg": 1.0,           # dense pays full allocation always
-        "cache_util_peak": 1.0,
-        "preemptions": 0,
-        "cache_bytes": cache_nbytes(eng._cache),
-        "wall_s": round(wall, 2),
-    })
     emit(rows, "experiments/bench/serving.csv")
     return rows
 
 
 if __name__ == "__main__":
-    for r in run():
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny traffic, finishes in <30s")
+    for r in run(smoke=ap.parse_args().smoke):
         print(r)

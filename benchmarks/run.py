@@ -7,6 +7,7 @@ under experiments/bench/.
 from __future__ import annotations
 
 import argparse
+import inspect
 import sys
 import time
 import traceback
@@ -26,6 +27,9 @@ BENCHES = [
 def main() -> None:
     p = argparse.ArgumentParser()
     p.add_argument("--only", default=None)
+    p.add_argument("--smoke", action="store_true",
+                   help="pass smoke=True to benches that support it "
+                        "(tiny workloads, tier-1-loop friendly)")
     args = p.parse_args()
 
     print("name,us_per_call,derived")
@@ -36,7 +40,10 @@ def main() -> None:
         t0 = time.time()
         try:
             mod = __import__(module, fromlist=["run"])
-            rows = mod.run()
+            kwargs = {}
+            if args.smoke and "smoke" in inspect.signature(mod.run).parameters:
+                kwargs["smoke"] = True
+            rows = mod.run(**kwargs)
             dt = (time.time() - t0) * 1e6
             derived = ";".join(
                 f"{r.get('method', r.get('kernel', r.get('point', '?')))}="

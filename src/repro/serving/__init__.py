@@ -4,9 +4,10 @@ Two cache backends share the SimQuant INT8 quantization math:
 
   * ``kv_cache``    — dense per-slot ring buffer (``max_slots x smax``),
                       driven by ``engine.ServeEngine``.
-  * ``paged_cache`` — block-pool layout with a free-list allocator, driven by
+  * ``paged_cache`` — block-pool layout with a refcounted allocator (prefix
+                      caching + copy-on-write), driven by
                       ``scheduler.Scheduler`` / ``engine.PagedServeEngine``
-                      (continuous batching + chunked prefill).
+                      (continuous batching + chunked prefill + priorities).
 """
 from . import kv_cache
 

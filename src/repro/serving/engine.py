@@ -64,6 +64,8 @@ class Request:
     prompt: np.ndarray                   # (S,) int32  (or (K,S) MusicGen)
     max_new_tokens: int = 32
     temperature: float = 0.0             # 0 = greedy
+    priority: int = 0                    # higher admitted first; preemption
+                                         # evicts lowest priority (paged only)
     on_token: Optional[Callable] = None  # streaming callback: (req, token)
     # filled by the engine:
     generated: Optional[List[int]] = None
@@ -255,8 +257,11 @@ class PagedServeEngine:
 
     Compared to the dense :class:`ServeEngine`: KV memory scales with live
     tokens (block pool) instead of ``max_slots * smax``, prefill is
-    position-exact (no left-pad RoPE shift), and long prompts are chunked so
-    they never stall in-flight decodes for more than one chunk.
+    position-exact (no left-pad RoPE shift), long prompts are chunked so
+    they never stall in-flight decodes for more than one chunk, shared
+    prompt prefixes are served from the refcounted prefix cache (see
+    ``metrics()['prefix_hit_tokens']``), and scheduling honors
+    ``Request.priority``.
     """
 
     def __init__(self, params, cfg: ModelConfig, scfg=None):

@@ -1,4 +1,4 @@
-"""Paged SimQuant INT8 KV cache: block-pool storage + free-list allocator.
+"""Paged SimQuant INT8 KV cache: block-pool storage + refcounted allocator.
 
 The dense cache in ``kv_cache.py`` pre-allocates ``max_slots x smax`` tokens
 per layer — memory scales with the *configured* maximum, not with live
@@ -26,10 +26,21 @@ Quantization math mirrors ``kv_cache.gqa_cache_entry`` / ``gqa_cache_append``
 op-for-op (same dtypes, same eps) so a single-chunk paged prefill produces
 bit-identical codes to the dense engine — the golden-parity contract the
 scheduler tests assert.
+
+Ownership is *shared*, not exclusive: :class:`BlockAllocator` refcounts every
+block, keeps a content-hash index over published full prefix blocks, and
+parks unreferenced-but-published blocks on an LRU cached list that is
+reclaimed under pressure.  One physical block can back many block tables
+(prefix sharing); a writer that would mutate a shared or published block
+copies it first (``copy_pool_block``).  Because the K affine is frozen
+per *slot*, a prefix hit also restores the publisher's scale rows into the
+matcher's slot (``snapshot_slot_scales`` / ``restore_slot_scales``) — shared
+int8 codes then dequantize bit-identically to the donor's run.
 """
 from __future__ import annotations
 
 import dataclasses
+from collections import OrderedDict
 from typing import Any, Dict, List, Optional
 
 import jax
@@ -40,6 +51,14 @@ from repro.core.qtensor import int_range
 from repro.models.config import ModelConfig
 
 TRASH = -1  # host-side marker; resolved to the pool's trash block id on use
+
+# leaf-name partition of a pool entry: BLOCK_LEAVES are indexed by pool block
+# id on axis 1 (copied on CoW, shared on a prefix hit); SLOT_SCALE_LEAVES are
+# indexed by decode slot on axis 1 (snapshotted at publish / restored on hit,
+# since the frozen K affine travels with the request, not the block)
+BLOCK_LEAVES = ("k_vals", "v_vals", "v_scale", "v_zero", "c_vals", "kr_vals")
+SLOT_SCALE_LEAVES = ("k_scale", "k_zero", "c_scale", "c_zero",
+                     "kr_scale", "kr_zero")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -98,43 +117,214 @@ def init_paged_cache(cfg: ModelConfig, pcfg: PagedCacheConfig) -> Dict[str, Any]
     return entries
 
 
-class BlockAllocator:
-    """Host-side free-list over the shared block pool.
+class BlockPoolError(RuntimeError):
+    """Raised on allocator misuse: double free, negative refcount, or an
+    operation against a block in the wrong lifecycle state."""
 
-    O(1) alloc/free; blocks are recycled LIFO so recently-freed (cache-warm)
-    blocks are handed out first.
+
+@dataclasses.dataclass
+class PrefixEntry:
+    """One published full block in the content-hash prefix index.
+
+    ``tag`` identifies the scale-freeze epoch of the publisher: blocks hold
+    int8 codes quantized with the publisher's frozen per-slot K affine, so a
+    chain match must stay within one tag — mixing donors would dequantize
+    some blocks with the wrong scales.  ``meta`` carries the publisher's
+    slot-scale snapshot (restored into the matcher's slot on a hit).
     """
+    block: int
+    tag: int
+    meta: Any = None
+
+
+class BlockAllocator:
+    """Refcounted pool over the shared blocks, with a prefix-cache index.
+
+    Block lifecycle (all transitions O(1)):
+
+      FREE --alloc--> ACTIVE(ref=1) --incref/acquire--> ACTIVE(ref=n)
+      ACTIVE --decref to 0, published--> CACHED (LRU, reclaimable)
+      ACTIVE --decref to 0, unpublished--> FREE
+      CACHED --acquire--> ACTIVE(ref=1)     (prefix hit revives it)
+      CACHED --alloc under pressure--> ACTIVE (LRU entry evicted + recycled)
+
+    ``free`` is decref: a block is only recycled when its last reference
+    drops, so one physical block can back many block-table rows (prefix
+    sharing).  Published blocks outlive their references as CACHED entries
+    until memory pressure reclaims them, giving an LRU prefix cache for free.
+
+    Conservation invariant (checked by ``check()`` and the property tests):
+    ``num_free + num_cached + num_active == num_blocks``.
+    """
+
+    FREE, ACTIVE, CACHED = 0, 1, 2
 
     def __init__(self, num_blocks: int):
         self.num_blocks = num_blocks
         self._free: List[int] = list(range(num_blocks - 1, -1, -1))
+        self._ref: List[int] = [0] * num_blocks
+        self._state: List[int] = [self.FREE] * num_blocks
+        self._key_of: List[Optional[bytes]] = [None] * num_blocks
+        self._cached: "OrderedDict[int, bytes]" = OrderedDict()  # LRU: old first
+        self._index: Dict[bytes, PrefixEntry] = {}
+        self.cache_evictions = 0          # cached blocks reclaimed by alloc()
 
+    # -- accounting -----------------------------------------------------------
     @property
     def num_free(self) -> int:
         return len(self._free)
 
     @property
+    def num_cached(self) -> int:
+        return len(self._cached)
+
+    @property
+    def num_available(self) -> int:
+        """Blocks an alloc() can hand out: free + reclaimable cached."""
+        return len(self._free) + len(self._cached)
+
+    @property
     def num_used(self) -> int:
-        return self.num_blocks - len(self._free)
+        """Live (referenced) blocks — excludes reclaimable cached blocks."""
+        return self.num_blocks - self.num_available
 
     @property
     def utilization(self) -> float:
         return self.num_used / max(self.num_blocks, 1)
 
+    @property
+    def cached_frac(self) -> float:
+        return len(self._cached) / max(self.num_blocks, 1)
+
+    def refcount(self, b: int) -> int:
+        return self._ref[b]
+
+    def is_shared(self, b: int) -> bool:
+        return self._ref[b] > 1
+
+    def is_published(self, b: int) -> bool:
+        key = self._key_of[b]
+        e = self._index.get(key) if key is not None else None
+        return e is not None and e.block == b
+
+    # -- alloc / refcounting --------------------------------------------------
     def alloc(self, n: int = 1) -> Optional[List[int]]:
-        """Allocate ``n`` blocks, or None (all-or-nothing) if unavailable."""
-        if n > len(self._free):
+        """Allocate ``n`` blocks at refcount 1, or None (all-or-nothing).
+
+        Free blocks are recycled LIFO (cache-warm first); under pressure the
+        least-recently-cached prefix blocks are evicted from the index and
+        reused.
+        """
+        if n > self.num_available:
             return None
-        out = [self._free.pop() for _ in range(n)]
+        out = []
+        for _ in range(n):
+            if self._free:
+                b = self._free.pop()
+            else:
+                b, key = self._cached.popitem(last=False)   # LRU victim
+                del self._index[key]
+                self._key_of[b] = None
+                self.cache_evictions += 1
+            self._state[b] = self.ACTIVE
+            self._ref[b] = 1
+            out.append(b)
         return out
 
-    def free(self, blocks) -> None:
-        for b in blocks:
-            if b == TRASH:
-                continue
-            assert 0 <= b < self.num_blocks, b
-            assert b not in self._free, f"double free of block {b}"
+    def incref(self, b: int) -> None:
+        if self._state[b] != self.ACTIVE:
+            raise BlockPoolError(f"incref of non-active block {b}")
+        self._ref[b] += 1
+
+    def decref(self, b: int) -> None:
+        """Drop one reference; at zero the block becomes CACHED if published
+        (still matchable, reclaimable LRU) else FREE."""
+        if b == TRASH:
+            return
+        if not 0 <= b < self.num_blocks:
+            raise BlockPoolError(f"decref of out-of-range block {b}")
+        if self._state[b] != self.ACTIVE or self._ref[b] <= 0:
+            raise BlockPoolError(
+                f"double free / negative refcount on block {b} "
+                f"(state={self._state[b]}, ref={self._ref[b]})")
+        self._ref[b] -= 1
+        if self._ref[b] > 0:
+            return
+        key = self._key_of[b]
+        if key is not None and self._index.get(key, None) is not None \
+                and self._index[key].block == b:
+            self._state[b] = self.CACHED
+            self._cached[b] = key            # newest at the MRU end
+        else:
+            self._state[b] = self.FREE
+            self._key_of[b] = None
             self._free.append(b)
+
+    def free(self, blocks) -> None:
+        """Decref a batch (compat shim for the pre-refcount call sites)."""
+        for b in blocks:
+            self.decref(b)
+
+    # -- prefix index ---------------------------------------------------------
+    def publish(self, b: int, key: bytes, tag: int, meta: Any = None) -> bool:
+        """Register a *full, immutable* block under its content-chain key.
+
+        First publisher wins: if ``key`` is already indexed, or ``b`` is
+        already published under another key, the call is a no-op (an existing
+        entry may be quantized with different frozen scales — see
+        ``PrefixEntry.tag``).  Returns True if indexed.
+        """
+        if self._state[b] != self.ACTIVE:
+            raise BlockPoolError(f"publish of non-active block {b}")
+        if key in self._index or self._key_of[b] is not None:
+            return False
+        self._index[key] = PrefixEntry(block=b, tag=tag, meta=meta)
+        self._key_of[b] = key
+        return True
+
+    def lookup(self, key: bytes) -> Optional[PrefixEntry]:
+        return self._index.get(key)
+
+    def acquire(self, key: bytes) -> Optional[int]:
+        """Take a reference on the indexed block for ``key`` (prefix hit):
+        revives a CACHED block to ACTIVE(ref=1), increfs an ACTIVE one."""
+        e = self._index.get(key)
+        if e is None:
+            return None
+        b = e.block
+        if self._state[b] == self.CACHED:
+            del self._cached[b]
+            self._state[b] = self.ACTIVE
+            self._ref[b] = 1
+        else:
+            self._ref[b] += 1
+        return b
+
+    # -- invariants -----------------------------------------------------------
+    def check(self) -> None:
+        """Assert the conservation invariant and internal consistency (used
+        by the property tests; cheap enough to call after every op)."""
+        active = [b for b in range(self.num_blocks)
+                  if self._state[b] == self.ACTIVE]
+        if len(self._free) + len(self._cached) + len(active) != self.num_blocks:
+            raise BlockPoolError(
+                f"conservation violated: free={len(self._free)} "
+                f"cached={len(self._cached)} active={len(active)} "
+                f"!= {self.num_blocks}")
+        for b in self._free:
+            if self._state[b] != self.FREE or self._ref[b] != 0:
+                raise BlockPoolError(f"free-list block {b} in bad state")
+        for b, key in self._cached.items():
+            if self._state[b] != self.CACHED or self._ref[b] != 0:
+                raise BlockPoolError(f"cached block {b} in bad state")
+            if self._index.get(key, None) is None or self._index[key].block != b:
+                raise BlockPoolError(f"cached block {b} not indexed")
+        for b in active:
+            if self._ref[b] <= 0:
+                raise BlockPoolError(f"active block {b} with ref 0")
+        for key, e in self._index.items():
+            if self._key_of[e.block] != key:
+                raise BlockPoolError(f"index entry {key!r} not back-linked")
 
 
 # ---------------------------------------------------------------------------
@@ -325,6 +515,48 @@ def mla_gather_batch(entry: Dict[str, jax.Array], block_tables: jax.Array):
         out[f"{name}_vals"] = q.reshape(b, m * q.shape[2], q.shape[3])
         out[f"{name}_scale"] = entry[f"{name}_scale"][:, None]   # (B,1,dim)
         out[f"{name}_zero"] = entry[f"{name}_zero"][:, None]
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Copy-on-write / prefix-hit device plumbing
+# ---------------------------------------------------------------------------
+
+def copy_pool_block(pool, src, dst):
+    """Copy block ``src`` -> ``dst`` across every block-indexed leaf of every
+    pattern entry (the device half of copy-on-write).  Slot-scale leaves are
+    untouched — the frozen affine belongs to the request, not the block."""
+    out = {}
+    for pkey, entry in pool.items():
+        new = dict(entry)
+        for name in BLOCK_LEAVES:
+            if name in entry:
+                new[name] = entry[name].at[:, dst].set(entry[name][:, src])
+        out[pkey] = new
+    return out
+
+
+def snapshot_slot_scales(pool, slot: int) -> Dict[str, Dict[str, jax.Array]]:
+    """Capture slot ``slot``'s frozen scale rows (one small (R, ...) array per
+    scale leaf per entry) — stored with a published prefix chain so a future
+    hit can dequantize the donor's codes."""
+    snap: Dict[str, Dict[str, jax.Array]] = {}
+    for pkey, entry in pool.items():
+        snap[pkey] = {name: entry[name][:, slot]
+                      for name in SLOT_SCALE_LEAVES if name in entry}
+    return snap
+
+
+def restore_slot_scales(pool, slot: int, snap) -> Dict[str, Any]:
+    """Write a snapshot back into slot ``slot``'s scale rows (prefix hit:
+    the matcher adopts the donor's frozen affine, so shared int8 blocks and
+    its own suffix chunks dequantize/quantize identically)."""
+    out = dict(pool)
+    for pkey, leaves in snap.items():
+        new = dict(out[pkey])
+        for name, row in leaves.items():
+            new[name] = new[name].at[:, slot].set(row)
+        out[pkey] = new
     return out
 
 

@@ -1,20 +1,33 @@
-"""Continuous-batching scheduler with chunked prefill over the paged cache.
+"""Continuous-batching scheduler: chunked prefill, prefix caching, priorities.
 
 The paper's Distributed Controller Layer serves batched traffic; this module
 is its single-controller scheduling core, replacing the dense engine's
 synchronous slot loop:
 
   * **continuous batching** — a fixed decode-batch width B; requests stream
-    through slots, a finishing request frees its slot (and blocks) at once.
+    through slots, a finishing request frees its slot (and block references)
+    at once.
   * **chunked prefill** — waiting prompts are split into fixed-size chunks
     and co-scheduled with decode in one jitted step, so a long prompt never
     stalls in-flight decodes for more than one chunk's latency (Sarathi-style
     stall-free batching).  Chunks are position-exact and right-aligned: the
     dense engine's left-pad RoPE shift is gone.
+  * **prefix caching** — full prompt blocks are published into the
+    allocator's content-hash index as they complete; admission matches a new
+    prompt's block chain against the index and maps hits straight into the
+    request's block table, skipping those prefill chunks entirely (``ctx``
+    starts at the matched boundary).  Matched blocks are refcount-shared;
+    the donor's frozen K scales are restored into the matcher's slot so the
+    shared int8 codes dequantize bit-identically (see paged_cache docstring).
+    Writes into a shared or published block copy-on-write to a fresh block.
   * **admission / preemption under a token budget** — each step spends at
     most ``token_budget`` tokens (decodes first, prefill fills the rest).
-    When the block pool runs dry the youngest running request is preempted
-    (blocks freed, request re-queued for recompute), vLLM-style.
+    Admission is priority-aware (higher ``Request.priority`` first, FCFS
+    within a priority); when the block pool runs dry the lowest-priority —
+    then youngest — running request is preempted (references dropped,
+    request re-queued for recompute), vLLM-style.  A preempted request's
+    published blocks survive as cached entries, so its recompute usually
+    re-matches them instead of re-prefilling.
 
 The jitted step has three static shapes: decode width B, prefill-chunk
 bucket C, and the block-table width M — bounded recompilation, same
@@ -23,6 +36,7 @@ philosophy as the dense engine's bucketed prefill.
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 import time
 from collections import deque
 from functools import partial
@@ -36,7 +50,9 @@ from repro.core.online import EmaScaleState
 from repro.models.config import ModelConfig
 from repro.models.transformer import forward_decode_paged, forward_prefill_chunk
 from repro.serving.paged_cache import (BlockAllocator, PagedCacheConfig,
-                                       init_paged_cache, paged_cache_nbytes)
+                                       copy_pool_block, init_paged_cache,
+                                       paged_cache_nbytes, restore_slot_scales,
+                                       snapshot_slot_scales)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -50,6 +66,7 @@ class SchedulerConfig:
     eos_id: int = -1                     # -1 = never stop early
     ema_alpha: float = 0.9
     seed: int = 0
+    prefix_cache: bool = True            # publish/match full prompt blocks
 
     @property
     def paged(self) -> PagedCacheConfig:
@@ -59,11 +76,29 @@ class SchedulerConfig:
                                 max_blocks_per_req=self.max_blocks_per_req)
 
 
+def _prefix_keys(target: np.ndarray, block_size: int) -> List[bytes]:
+    """Chain digests for every *full* block of ``target``: key j commits to
+    tokens [0, (j+1)*block_size), so equal keys imply equal full prefixes.
+    Exact token bytes feed the chain — no truncation collisions.  Tokens are
+    canonicalized to int32 (the device dtype) first, so the same sequence
+    submitted as a list / int64 array still matches."""
+    target = np.asarray(target, dtype=np.int32)
+    n = target.shape[-1] // block_size
+    keys: List[bytes] = []
+    d = b""
+    for j in range(n):
+        blk = np.ascontiguousarray(target[..., j * block_size:(j + 1) * block_size])
+        d = hashlib.blake2b(d + blk.tobytes(), digest_size=16).digest()
+        keys.append(d)
+    return keys
+
+
 class _Run:
     """One admitted request's scheduling state."""
 
     __slots__ = ("req", "slot", "ctx", "target", "pending", "resume_pending",
-                 "state", "order", "t_add")
+                 "state", "order", "priority", "t_add", "chain",
+                 "published_upto", "scale_tag", "snapshot")
 
     def __init__(self, req, order: int):
         self.req = req
@@ -73,8 +108,13 @@ class _Run:
         self.pending = None                # sampled token awaiting decode
         self.resume_pending = None         # pending token across a preemption
         self.state = "prefill"
-        self.order = order                 # arrival sequence (FCFS priority)
+        self.order = order                 # arrival sequence (FCFS tiebreak)
+        self.priority = int(getattr(req, "priority", 0))
         self.t_add = time.perf_counter()   # for TTFT accounting
+        self.chain: List[bytes] = []       # prefix keys over target's blocks
+        self.published_upto = 0            # blocks of target already indexed
+        self.scale_tag: Optional[int] = None   # scale-freeze epoch id
+        self.snapshot = None               # slot-scale rows for publishing
 
 
 def _step_impl(params, pool, dec_tokens, dec_bt, dec_lens,
@@ -133,17 +173,22 @@ class Scheduler:
         self.waiting: Deque[_Run] = deque()
         self.finished: List[Any] = []
         self._order = 0
+        self._scale_tag = 0                # scale-freeze epoch counter
         self._rng = jax.random.PRNGKey(scfg.seed)
         self.scale_state = EmaScaleState.init()
         self._step_fn = jax.jit(
             partial(_step_impl, cfg=cfg, block_size=scfg.block_size),
             static_argnames=("do_prefill", "do_decode", "pf_first"),
             donate_argnums=(1,))
+        self._cow_fn = jax.jit(copy_pool_block, donate_argnums=(0,))
         self.stats = {"prefill_tokens": 0, "prefill_chunks": 0,
                       "decode_steps": 0, "decode_tokens": 0,
-                      "preemptions": 0, "steps": 0}
+                      "preemptions": 0, "steps": 0, "failed_alloc": 0,
+                      "prefix_hits": 0, "prefix_hit_tokens": 0,
+                      "prefix_query_tokens": 0, "cow_copies": 0}
         self._util_sum = 0.0
         self._util_peak = 0.0
+        self._cached_sum = 0.0
         self._t_start: Optional[float] = None
         self._t_last = 0.0
 
@@ -184,6 +229,7 @@ class Scheduler:
         self.stats["steps"] += 1
         self._util_sum += self.alloc.utilization
         self._util_peak = max(self._util_peak, self.alloc.utilization)
+        self._cached_sum += self.alloc.cached_frac
 
         args = self._build_args(dec_slots, pf)
         pf_logits, dec_logits, self.pool = self._step_fn(
@@ -225,26 +271,85 @@ class Scheduler:
             "cache_util_peak": self._util_peak,
             "cache_nbytes": paged_cache_nbytes(self.pool),
             "preemptions": self.stats["preemptions"],
+            "failed_alloc": self.stats["failed_alloc"],
             "decode_steps": self.stats["decode_steps"],
             "prefill_chunks": self.stats["prefill_chunks"],
+            # prefix cache: tokens whose prefill was skipped via the index,
+            # the fraction of admitted prompt tokens they cover, and how much
+            # of the pool holds reclaimable cached blocks
+            "prefix_hits": self.stats["prefix_hits"],
+            "prefix_hit_tokens": self.stats["prefix_hit_tokens"],
+            "prefix_hit_rate": (self.stats["prefix_hit_tokens"] /
+                                max(self.stats["prefix_query_tokens"], 1)),
+            "cached_blocks": self.alloc.num_cached,
+            "cached_frac_avg": self._cached_sum / steps,
+            "cow_copies": self.stats["cow_copies"],
         }
 
     # -- admission / scheduling ----------------------------------------------
     def _admit(self) -> None:
         free = [s for s in range(self.scfg.max_batch) if self.slots[s] is None]
+        if not free or not self.waiting:
+            return
+        # priority-aware: highest priority first, FCFS (arrival order) within
+        self.waiting = deque(sorted(self.waiting,
+                                    key=lambda r: (-r.priority, r.order)))
         while free and self.waiting:
             slot = free.pop(0)
             run = self.waiting.popleft()
             run.slot = slot
             self.block_tables[slot, :] = self.trash
             self.slots[slot] = run
+            self._match_prefix(slot, run)
+
+    def _match_prefix(self, slot: int, run: _Run) -> None:
+        """Map the longest indexed chain of ``run.target``'s full blocks into
+        the block table and start ``ctx`` past them.  The match is capped one
+        token short of the target so the final chunk always runs (its logits
+        seed the first sampled token), and stays within one scale tag so
+        every shared block dequantizes with the restored donor scales."""
+        run.ctx = 0
+        run.published_upto = 0
+        run.scale_tag = None
+        run.snapshot = None
+        run.chain = []
+        self.stats["prefix_query_tokens"] += int(run.target.shape[-1])
+        if not self.scfg.prefix_cache:
+            return
+        bs = self.scfg.block_size
+        run.chain = _prefix_keys(run.target, bs)
+        limit = min(len(run.chain), (int(run.target.shape[-1]) - 1) // bs,
+                    self.scfg.max_blocks_per_req)
+        matched: List[int] = []
+        tag, meta = None, None
+        for j in range(limit):
+            e = self.alloc.lookup(run.chain[j])
+            if e is None or (tag is not None and e.tag != tag):
+                break
+            if tag is None:
+                tag, meta = e.tag, e.meta
+            matched.append(self.alloc.acquire(run.chain[j]))
+        if not matched:
+            return
+        for j, b in enumerate(matched):
+            self.block_tables[slot, j] = b
+        run.ctx = len(matched) * bs
+        run.published_upto = len(matched)
+        run.scale_tag = tag
+        run.snapshot = meta
+        if meta is not None:
+            self.pool = restore_slot_scales(self.pool, slot, meta)
+        self.stats["prefix_hits"] += 1
+        self.stats["prefix_hit_tokens"] += run.ctx
 
     def _schedule_decode(self) -> List[int]:
-        """Ensure every decoding slot has a block for its next token,
-        preempting the youngest request when the pool is dry."""
+        """Ensure every decoding slot has a writable block for its next
+        token, preempting the lowest-priority/youngest request when the pool
+        is dry and copy-on-writing shared tail blocks."""
         order = sorted((s for s, r in enumerate(self.slots)
                         if r is not None and r.state == "decode"),
-                       key=lambda s: self.slots[s].order)
+                       key=lambda s: (-self.slots[s].priority,
+                                      self.slots[s].order))
         out = []
         for s in order:
             run = self.slots[s]
@@ -257,15 +362,19 @@ class Scheduler:
                 if got is None:             # s itself was the victim
                     continue
                 self.block_tables[s, bi] = got[0]
+            elif not self._ensure_writable(s, bi):
+                continue                    # CoW failed: s was preempted
             out.append(s)
         return out
 
     def _schedule_prefill(self, n_decode: int):
-        """Pick the oldest prefilling request and size its next chunk under
-        the token budget and block availability.  -> (slot, ctx, c, c_pad)"""
+        """Pick the highest-priority (then oldest) prefilling request and
+        size its next chunk under the token budget and block availability.
+        -> (slot, ctx, c, c_pad)"""
         cand = sorted((s for s, r in enumerate(self.slots)
                        if r is not None and r.state == "prefill"),
-                      key=lambda s: self.slots[s].order)
+                      key=lambda s: (-self.slots[s].priority,
+                                     self.slots[s].order))
         if not cand:
             return None
         s = cand[0]
@@ -287,14 +396,17 @@ class Scheduler:
                           allow_preempt: bool) -> int:
         """Shrink ``c`` to what the pool can back, allocating blocks for the
         chunk's span.  With ``allow_preempt`` (nothing else is running this
-        step) the youngest other request is evicted to make room."""
+        step) the lowest-priority/youngest other request is evicted to make
+        room."""
         t = self.scfg.block_size
         while True:
             partial_room = (t - run.ctx % t) % t    # space in current block
-            cap = partial_room + self.alloc.num_free * t
+            cap = partial_room + self.alloc.num_available * t
             c_fit = min(c, cap)
             if c_fit > 0:
                 lo = run.ctx // t
+                if run.ctx % t != 0 and not self._ensure_writable(s, lo):
+                    return 0                # CoW failed: s was preempted
                 hi = (run.ctx + c_fit + t - 1) // t
                 need = [i for i in range(lo, hi)
                         if self.block_tables[s, i] == self.trash]
@@ -305,33 +417,61 @@ class Scheduler:
                 return c_fit
             if not allow_preempt:
                 return 0
-            victims = [(r.order, v) for v, r in enumerate(self.slots)
+            victims = [(r.priority, -r.order, v)
+                       for v, r in enumerate(self.slots)
                        if r is not None and v != s]
             if not victims:
                 raise RuntimeError(
                     f"paged cache pool exhausted: request {run.req.uid} "
                     f"cannot obtain a block and nothing is left to preempt "
                     f"(num_blocks={self.scfg.num_blocks})")
-            self._preempt(max(victims)[1])
+            self._preempt(min(victims)[2])
 
     def _alloc_or_preempt(self, n: int, protect: int):
+        """Allocate ``n`` blocks, preempting lowest-priority/youngest
+        requests until it fits.  If the protected slot itself becomes the
+        victim, return None and charge a ``failed_alloc``: any requests
+        already evicted this call lost their work for nothing."""
         while True:
             got = self.alloc.alloc(n)
             if got is not None:
                 return got
-            victims = [(r.order, s) for s, r in enumerate(self.slots)
-                       if r is not None]
+            victims = [(r.priority, -r.order, s)
+                       for s, r in enumerate(self.slots) if r is not None]
             if not victims:
                 raise RuntimeError("paged cache pool exhausted with no "
                                    "running requests to preempt")
-            victim = max(victims)[1]
+            victim = min(victims)[2]
             self._preempt(victim)
             if victim == protect:
+                self.stats["failed_alloc"] += 1
                 return None
 
+    def _ensure_writable(self, s: int, bi: int) -> bool:
+        """Copy-on-write guard before appending into block-table entry
+        ``(s, bi)``: a block that is shared (refcount > 1) or published
+        (its codes are matchable cache content) must not be mutated, so the
+        writer gets a private copy.  Returns False if the copy's allocation
+        preempted ``s`` itself."""
+        blk = int(self.block_tables[s, bi])
+        if blk == self.trash:
+            return True
+        if not (self.alloc.is_shared(blk) or self.alloc.is_published(blk)):
+            return True
+        got = self._alloc_or_preempt(1, protect=s)
+        if got is None:
+            return False
+        self.pool = self._cow_fn(self.pool, jnp.int32(blk), jnp.int32(got[0]))
+        self.alloc.decref(blk)
+        self.block_tables[s, bi] = got[0]
+        self.stats["cow_copies"] += 1
+        return True
+
     def _preempt(self, s: int) -> None:
-        """Evict slot ``s``: free its blocks and re-queue it for recompute
-        (prefill over prompt + generated-so-far, vLLM recompute policy)."""
+        """Evict slot ``s``: drop its block references and re-queue it for
+        recompute (prefill over prompt + generated-so-far, vLLM recompute
+        policy).  Published blocks survive as cached prefix entries, so the
+        recompute usually re-matches them at re-admission."""
         run = self.slots[s]
         assert run is not None
         self._free_row(s)
@@ -343,6 +483,7 @@ class Scheduler:
             run.resume_pending = run.req.generated[-1]
         run.pending = None
         run.ctx = 0
+        run.published_upto = 0
         run.state = "prefill"
         run.slot = -1
         self.slots[s] = None
@@ -426,9 +567,16 @@ class Scheduler:
     def _consume_prefill(self, pf, pf_logits) -> None:
         s, ctx, c, _ = pf
         run = self.slots[s]
+        if ctx == 0:
+            # this chunk froze a fresh per-slot K affine on device: new scale
+            # epoch; any blocks published from here carry the new snapshot
+            self._scale_tag += 1
+            run.scale_tag = self._scale_tag
+            run.snapshot = None
         run.ctx += c
         self.stats["prefill_tokens"] += c
         self.stats["prefill_chunks"] += 1
+        self._publish_full_blocks(s, run)
         if run.ctx < run.target.shape[-1]:
             return                             # more chunks to go
         run.state = "decode"
@@ -442,6 +590,22 @@ class Scheduler:
         self._emit(run, tok, first=True)
         if self._stopped(run, tok):
             self._finish(s)
+
+    def _publish_full_blocks(self, s: int, run: _Run) -> None:
+        """Index every newly-completed full block of the prefill target.
+        Blocks are immutable from here on (writes CoW away), so a future
+        request with the same token prefix can map them directly."""
+        if not self.scfg.prefix_cache:
+            return
+        full = min(run.ctx // self.scfg.block_size, len(run.chain))
+        if full <= run.published_upto:
+            return
+        if run.snapshot is None:
+            run.snapshot = snapshot_slot_scales(self.pool, s)
+        for j in range(run.published_upto, full):
+            self.alloc.publish(int(self.block_tables[s, j]), run.chain[j],
+                               run.scale_tag, run.snapshot)
+        run.published_upto = full
 
     def _stopped(self, run: _Run, tok) -> bool:
         if len(run.req.generated) >= run.req.max_new_tokens:

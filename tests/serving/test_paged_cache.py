@@ -7,7 +7,8 @@ import pytest
 from repro.models import ModelConfig
 from repro.models.config import LayerSpec
 from repro.serving.kv_cache import gqa_cache_entry
-from repro.serving.paged_cache import (BlockAllocator, PagedCacheConfig,
+from repro.serving.paged_cache import (BlockAllocator, BlockPoolError,
+                                       PagedCacheConfig, copy_pool_block,
                                        gqa_chunk_write, gqa_gather_prefix,
                                        gqa_paged_append, init_paged_cache,
                                        paged_cache_nbytes)
@@ -18,7 +19,7 @@ CFG = ModelConfig(name="t", vocab_size=128, d_model=64, n_layers=2, n_heads=4,
 
 
 # ---------------------------------------------------------------------------
-# BlockAllocator
+# BlockAllocator: refcounted pool + prefix index
 # ---------------------------------------------------------------------------
 
 def test_allocator_alloc_free_reuse():
@@ -32,6 +33,7 @@ def test_allocator_alloc_free_reuse():
     a.free([0, 1, 2])
     assert a.num_free == 4
     assert a.utilization == 0.0
+    a.check()
 
 
 def test_allocator_all_or_nothing_oom():
@@ -45,11 +47,192 @@ def test_allocator_all_or_nothing_oom():
 
 
 def test_allocator_double_free_rejected():
+    """Double free / negative refcount raises in O(1) (no free-list scan)."""
     a = BlockAllocator(2)
     blk = a.alloc(1)
     a.free(blk)
-    with pytest.raises(AssertionError):
+    with pytest.raises(BlockPoolError, match="double free"):
         a.free(blk)
+    with pytest.raises(BlockPoolError):
+        a.decref(99)                    # out of range
+
+
+def test_allocator_refcount_sharing():
+    a = BlockAllocator(4)
+    [b] = a.alloc(1)
+    a.incref(b)
+    assert a.refcount(b) == 2 and a.is_shared(b)
+    a.decref(b)
+    assert a.refcount(b) == 1 and not a.is_shared(b)
+    assert a.num_free == 3              # still held by the last reference
+    a.decref(b)
+    assert a.num_free == 4
+    with pytest.raises(BlockPoolError):
+        a.incref(b)                     # incref of a free block
+    a.check()
+
+
+def test_allocator_publish_cache_acquire():
+    """A published block survives its last decref as a CACHED prefix entry,
+    is revived by acquire(), and only then counts as used again."""
+    a = BlockAllocator(4)
+    [b] = a.alloc(1)
+    assert a.publish(b, b"k1", tag=1, meta="snap")
+    assert a.is_published(b)
+    a.decref(b)
+    assert a.num_cached == 1 and a.num_free == 3
+    assert a.num_available == 4         # cached blocks are reclaimable
+    assert a.num_used == 0
+    e = a.lookup(b"k1")
+    assert e.block == b and e.tag == 1 and e.meta == "snap"
+    got = a.acquire(b"k1")
+    assert got == b and a.refcount(b) == 1 and a.num_cached == 0
+    assert a.acquire(b"k1") == b and a.refcount(b) == 2   # active incref
+    assert a.acquire(b"missing") is None
+    a.check()
+
+
+def test_allocator_publish_first_wins():
+    a = BlockAllocator(4)
+    b1, b2 = a.alloc(2)
+    assert a.publish(b1, b"k", tag=1)
+    assert not a.publish(b2, b"k", tag=2)    # key taken: no-op
+    assert a.lookup(b"k").block == b1
+    a.free([b1, b2])
+    assert a.num_cached == 1 and a.num_free == 3   # b2 was never indexed
+    a.check()
+
+
+def test_allocator_lru_eviction_under_pressure():
+    """alloc() reclaims the least-recently-cached block (and its index
+    entry) when the free list runs dry."""
+    a = BlockAllocator(3)
+    blocks = a.alloc(3)
+    for i, b in enumerate(blocks):
+        a.publish(b, bytes([i]), tag=0)
+    a.free(blocks)                      # all cached, LRU order 0,1,2
+    assert (a.num_free, a.num_cached) == (0, 3)
+    got = a.alloc(2)                    # evicts the two oldest entries
+    assert got == [blocks[0], blocks[1]]
+    assert a.lookup(bytes([0])) is None and a.lookup(bytes([1])) is None
+    assert a.lookup(bytes([2])).block == blocks[2]
+    assert a.cache_evictions == 2
+    a.check()
+
+
+# ---------------------------------------------------------------------------
+# Allocator invariant property tests
+# ---------------------------------------------------------------------------
+
+def _apply_ops(num_blocks: int, ops):
+    """Drive an allocator through an op stream, mirroring scheduler usage:
+    tables = writable views (refs), published = index lifecycle.  After every
+    op the conservation invariant ``free + cached + active == num_blocks``
+    and all internal bookkeeping must hold (allocator.check()), and no block
+    may be writable (ref == 1, unpublished) from two tables at once."""
+    a = BlockAllocator(num_blocks)
+    tables = []                          # list of lists: refs held per table
+    next_key = 0
+    for kind, arg in ops:
+        if kind == "alloc":
+            got = a.alloc(arg % 3 + 1)
+            if got is not None:
+                tables.append(got)
+        elif kind == "share" and tables:
+            src = tables[arg % len(tables)]
+            if src:
+                b = src[arg % len(src)]
+                a.incref(b)
+                tables.append([b])
+        elif kind == "publish" and tables:
+            src = tables[arg % len(tables)]
+            if src:
+                a.publish(src[arg % len(src)], bytes([next_key % 256, 7]),
+                          tag=next_key)
+                next_key += 1
+        elif kind == "acquire" and next_key:
+            b = a.acquire(bytes([arg % max(next_key, 1) % 256, 7]))
+            if b is not None:
+                tables.append([b])
+        elif kind == "cow" and tables:
+            # copy-on-write: a table holding a shared/published block swaps
+            # it for a fresh private copy
+            ti = arg % len(tables)
+            if tables[ti]:
+                bi = arg % len(tables[ti])
+                old = tables[ti][bi]
+                if a.is_shared(old) or a.is_published(old):
+                    got = a.alloc(1)
+                    if got is not None:
+                        a.decref(old)
+                        tables[ti][bi] = got[0]
+        elif kind == "free" and tables:
+            for b in tables.pop(arg % len(tables)):
+                a.decref(b)
+        a.check()
+        # every block reachable from >1 table must be refcounted accordingly,
+        # so no two tables ever see the same *writable* (ref==1) block
+        seen = {}
+        for t in tables:
+            for b in t:
+                seen[b] = seen.get(b, 0) + 1
+        for b, n in seen.items():
+            assert a.refcount(b) == n, (b, n, a.refcount(b))
+            assert n == 1 or a.is_shared(b)
+    for t in tables:
+        for b in t:
+            a.decref(b)
+    a.check()
+    assert a.num_free + a.num_cached == num_blocks   # nothing leaked
+
+
+def test_allocator_property_seeded_walk():
+    """Deterministic random-walk version of the hypothesis property (runs
+    even without hypothesis installed)."""
+    rng = np.random.default_rng(0)
+    kinds = ["alloc", "share", "publish", "acquire", "cow", "free"]
+    for _ in range(25):
+        ops = [(kinds[int(rng.integers(len(kinds)))], int(rng.integers(1000)))
+               for _ in range(60)]
+        _apply_ops(int(rng.integers(2, 12)), ops)
+
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=60, deadline=None)
+    @given(num_blocks=st.integers(2, 12),
+           ops=st.lists(st.tuples(
+               st.sampled_from(["alloc", "share", "publish", "acquire",
+                                "cow", "free"]),
+               st.integers(0, 999)), max_size=80))
+    def test_allocator_property_hypothesis(num_blocks, ops):
+        _apply_ops(num_blocks, ops)
+except ImportError:                      # pragma: no cover - optional dep
+    pass
+
+
+# ---------------------------------------------------------------------------
+# Copy-on-write device copy
+# ---------------------------------------------------------------------------
+
+def test_copy_pool_block_copies_codes_not_scales():
+    pcfg = PagedCacheConfig(block_size=4, num_blocks=4, max_batch=2,
+                            max_blocks_per_req=2)
+    pool = init_paged_cache(CFG, pcfg)
+    ent = dict(pool["p0"])
+    ent["k_vals"] = ent["k_vals"].at[:, 1].set(7)
+    ent["v_scale"] = ent["v_scale"].at[:, 1].set(0.5)
+    ent["k_scale"] = ent["k_scale"].at[:, 1].set(3.0)   # slot row, not block
+    pool["p0"] = ent
+    out = copy_pool_block(pool, 1, 2)
+    assert int(jnp.sum(out["p0"]["k_vals"][:, 2] != 7)) == 0
+    assert float(jnp.min(out["p0"]["v_scale"][:, 2])) == 0.5
+    # slot-scale rows untouched by a block copy
+    np.testing.assert_array_equal(np.asarray(out["p0"]["k_scale"]),
+                                  np.asarray(pool["p0"]["k_scale"]))
+    # source block unchanged
+    assert int(jnp.sum(out["p0"]["k_vals"][:, 1] != 7)) == 0
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,230 @@
+"""Prefix caching, copy-on-write, and priority-aware scheduling.
+
+Golden contract (ISSUE 2 acceptance): a request whose prompt shares a
+>= 1-block prefix with a previously served request must perform strictly
+fewer prefill chunks (``metrics()["prefix_hit_tokens"] > 0``) while
+producing token-for-token identical greedy output to the cold run — the
+shared int8 blocks are physically the donor's, and the donor's frozen K
+scales are restored into the matcher's slot, so the quantized state is
+bit-identical.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.models import ModelConfig, init_params
+from repro.models.config import LayerSpec
+from repro.serving.engine import PagedServeEngine, Request
+from repro.serving.scheduler import SchedulerConfig, _prefix_keys
+
+CFG = ModelConfig(name="t", vocab_size=128, d_model=64, n_layers=2, n_heads=4,
+                  n_kv_heads=2, d_ff=128, attn_chunk=16)
+PARAMS = init_params(CFG, jax.random.PRNGKey(0))
+
+MLA_CFG = ModelConfig(name="mla", vocab_size=128, d_model=64, n_layers=2,
+                      n_heads=4, d_ff=128, q_lora_rank=32, kv_lora_rank=16,
+                      qk_nope_head_dim=16, qk_rope_head_dim=8, v_head_dim=16,
+                      layer_pattern=(LayerSpec("mla", "dense"),),
+                      attn_chunk=16)
+MLA_PARAMS = init_params(MLA_CFG, jax.random.PRNGKey(1))
+
+PROMPT48 = (np.arange(48, dtype=np.int32) * 5) % 128
+
+
+def _engine(params=PARAMS, cfg=CFG, **kw):
+    # prefill_chunk == block_size keeps chunk and block boundaries aligned,
+    # so a hit request's suffix chunks coincide with the cold run's chunks
+    defaults = dict(block_size=16, num_blocks=24, max_batch=4,
+                    max_blocks_per_req=8, prefill_chunk=16, token_budget=128)
+    defaults.update(kw)
+    return PagedServeEngine(params, cfg, SchedulerConfig(**defaults))
+
+
+def _golden_prefix_hit(params, cfg):
+    eng = _engine(params, cfg)
+    eng.add_request(Request(uid=0, prompt=PROMPT48.copy(), max_new_tokens=8))
+    eng.run()
+    cold_chunks = eng.stats["prefill_chunks"]
+    assert cold_chunks == 3 and eng.metrics()["prefix_hit_tokens"] == 0
+    assert eng.metrics()["cached_blocks"] >= 3     # prompt blocks retained
+
+    eng.add_request(Request(uid=1, prompt=PROMPT48.copy(), max_new_tokens=8))
+    eng.run()
+    m = eng.metrics()
+    # 48-token prompt, 2 of 3 blocks matched (the match is capped one token
+    # short so the final chunk still runs): exactly one warm prefill chunk
+    assert m["prefix_hit_tokens"] == 32
+    assert eng.stats["prefill_chunks"] == cold_chunks + 1
+    assert m["prefix_hits"] == 1
+    assert 0 < m["prefix_hit_rate"] < 1
+    out = {r.uid: r.generated for r in eng.finished}
+    assert out[1] == out[0], "prefix-hit output diverged from cold run"
+    eng.scheduler.alloc.check()
+
+
+def test_golden_prefix_hit_gqa():
+    _golden_prefix_hit(PARAMS, CFG)
+
+
+def test_golden_prefix_hit_mla():
+    _golden_prefix_hit(MLA_PARAMS, MLA_CFG)
+
+
+def test_prefix_hit_shares_physical_blocks():
+    """While donor and matcher are both live, the matched blocks are the
+    same physical ids at refcount 2 — storage is shared, not copied."""
+    eng = _engine()
+    sched = eng.scheduler
+    eng.add_request(Request(uid=0, prompt=PROMPT48.copy(), max_new_tokens=8))
+    eng.run()
+    eng.add_request(Request(uid=1, prompt=PROMPT48.copy(), max_new_tokens=8))
+    eng.add_request(Request(uid=2, prompt=PROMPT48.copy(), max_new_tokens=8))
+    eng.step()
+    rows = [sched.block_tables[s] for s, r in enumerate(sched.slots)
+            if r is not None]
+    assert len(rows) == 2
+    shared = [int(b) for b in rows[0][:2]]
+    assert shared == [int(b) for b in rows[1][:2]]
+    assert all(sched.alloc.refcount(b) == 2 for b in shared)
+    eng.run()
+    outs = {r.uid: r.generated for r in eng.finished}
+    assert outs[1] == outs[0] and outs[2] == outs[0]
+    sched.alloc.check()
+
+
+def test_divergent_prompt_reuses_common_prefix_only():
+    """A prompt sharing only the first block matches 16 tokens; the suffix
+    is prefilled normally and generation completes."""
+    eng = _engine()
+    eng.add_request(Request(uid=0, prompt=PROMPT48.copy(), max_new_tokens=6))
+    eng.run()
+    other = PROMPT48.copy()
+    other[20:] = (other[20:] + 1) % 128           # diverge inside block 1
+    eng.add_request(Request(uid=1, prompt=other, max_new_tokens=6))
+    eng.run()
+    m = eng.metrics()
+    assert m["prefix_hit_tokens"] == 16
+    assert all(len(r.generated) == 6 for r in eng.finished)
+    eng.scheduler.alloc.check()
+
+
+def test_prefix_cache_disabled():
+    eng = _engine(prefix_cache=False)
+    for uid in range(2):
+        eng.add_request(Request(uid=uid, prompt=PROMPT48.copy(),
+                                max_new_tokens=6))
+        eng.run()
+    m = eng.metrics()
+    assert m["prefix_hit_tokens"] == 0 and m["cached_blocks"] == 0
+    assert eng.stats["prefill_chunks"] == 6       # 3 cold chunks each
+
+
+def test_cow_on_write_into_published_block():
+    """_ensure_writable gives the writer a private copy of a published
+    block: same codes, fresh id, donor entry still cached/indexed."""
+    eng = _engine(block_size=8, num_blocks=12, max_blocks_per_req=6)
+    sched = eng.scheduler
+    p16 = (np.arange(16, dtype=np.int32) * 7) % 128
+    eng.add_request(Request(uid=0, prompt=p16, max_new_tokens=4))
+    eng.run()
+    eng.add_request(Request(uid=1, prompt=p16.copy(), max_new_tokens=4))
+    eng.step()                                    # admit + first warm chunk
+    slot = next(s for s, r in enumerate(sched.slots) if r is not None)
+    old = int(sched.block_tables[slot, 0])
+    assert sched.alloc.is_published(old)
+    before = np.asarray(sched.pool["p0"]["k_vals"][:, old])
+    assert sched._ensure_writable(slot, 0)
+    new = int(sched.block_tables[slot, 0])
+    assert new != old
+    assert sched.stats["cow_copies"] == 1
+    np.testing.assert_array_equal(
+        np.asarray(sched.pool["p0"]["k_vals"][:, new]), before)
+    assert sched.alloc.refcount(new) == 1 and not sched.alloc.is_published(new)
+    # the donor's codes survive in the index for future matches
+    assert sched.alloc.lookup(sched.slots[slot].chain[0]).block == old
+    eng.run()
+    assert all(len(r.generated) == 4 for r in eng.finished)
+    sched.alloc.check()
+
+
+# ---------------------------------------------------------------------------
+# Priority-aware scheduling
+# ---------------------------------------------------------------------------
+
+def test_priority_admission_order():
+    """With one slot, a later high-priority request jumps the queue."""
+    eng = _engine(max_batch=1, num_blocks=8, max_blocks_per_req=4,
+                  prefix_cache=False)
+    p = (np.arange(16, dtype=np.int32) * 3) % 128
+    eng.add_request(Request(uid=0, prompt=p.copy(), max_new_tokens=4))
+    eng.add_request(Request(uid=1, prompt=(p + 1) % 128, max_new_tokens=4,
+                            priority=5))
+    eng.run()
+    assert [r.uid for r in eng.finished] == [1, 0]
+
+
+def test_priority_preemption_victim():
+    """Preemption evicts the lowest-priority, then youngest request — the
+    high-priority run is never the victim."""
+    eng = _engine(block_size=8, num_blocks=8, max_batch=3,
+                  max_blocks_per_req=6, prefill_chunk=16, token_budget=64,
+                  prefix_cache=False)
+    sched = eng.scheduler
+    preempted = []
+    orig = sched._preempt
+
+    def spy(s):
+        preempted.append(sched.slots[s].req.uid)
+        orig(s)
+
+    sched._preempt = spy
+    for i, prio in enumerate([0, 0, 5]):
+        eng.add_request(Request(
+            uid=i, prompt=((np.arange(16) + i) % 128).astype(np.int32),
+            max_new_tokens=12, priority=prio))
+    done = eng.run()
+    assert len(done) == 3 and all(len(r.generated) == 12 for r in done)
+    assert preempted and 2 not in preempted
+    # among equal-priority victims the youngest goes first
+    assert preempted[0] == 1
+    sched.alloc.check()
+
+
+def test_failed_alloc_accounted():
+    """When the protected decode slot itself becomes the preemption victim,
+    the wasted allocation attempt is counted and surfaced in metrics()."""
+    eng = _engine(block_size=8, num_blocks=4, max_batch=2,
+                  max_blocks_per_req=4, prefill_chunk=64, token_budget=128,
+                  prefix_cache=False)
+    eng.add_request(Request(uid=0, prompt=(np.arange(16, dtype=np.int32) * 3)
+                            % 128, max_new_tokens=9))
+    eng.add_request(Request(uid=1, prompt=(np.arange(8, dtype=np.int32) * 7)
+                            % 128, max_new_tokens=8))
+    done = eng.run()
+    m = eng.metrics()
+    assert m["failed_alloc"] >= 1
+    assert len(done) == 2
+    assert sorted(len(r.generated) for r in done) == [8, 9]
+
+
+# ---------------------------------------------------------------------------
+# Chain keys
+# ---------------------------------------------------------------------------
+
+def test_prefix_keys_chain_semantics():
+    t = np.arange(48, dtype=np.int32)
+    keys = _prefix_keys(t, 16)
+    assert len(keys) == 3
+    # same prefix -> same chain; divergence in block j changes keys >= j
+    other = t.copy()
+    other[40] += 1
+    keys2 = _prefix_keys(other, 16)
+    assert keys2[:2] == keys[:2] and keys2[2] != keys[2]
+    # partial trailing block is never keyed
+    assert len(_prefix_keys(t[:47], 16)) == 2
+    # dtype-canonical: the same tokens as list / int64 still match int32
+    assert _prefix_keys(t.astype(np.int64), 16) == keys
+    assert _prefix_keys(np.asarray(t.tolist()), 16) == keys
+    # 2-D (codebook) prompts hash all rows
+    two = np.stack([t, t + 1])
+    assert _prefix_keys(two, 16)[0] != keys[0]
