@@ -1,4 +1,4 @@
-"""Serving-path benchmark: offered-load + shared-prefix sweeps, paged engine.
+"""Serving-path benchmark: offered-load, shared-prefix and replica sweeps.
 
 For each offered load (requests injected per engine step) the sweep drives
 the paged scheduler end-to-end and reports TTFT, decode throughput, cache
@@ -12,12 +12,23 @@ every request shares a common prefix, run once with the prefix cache off
 (cold) and once on (warm) — the warm row's ``prefix_hit_rate`` and the TTFT
 delta are the prefix-caching win.
 
+The replica sweep drives ``ReplicatedServeEngine`` at a fixed offered load
+for replica counts {1, 2} (plus 4 in full mode) and reports aggregate and
+per-replica tokens/s and prefix-hit-rate — the data-parallel scaling
+trajectory (paper Thm 4 regime).  A cold-vs-warm routing pair at 2 replicas
+contrasts ``round_robin`` (shared-prefix traffic scattered across pools)
+with ``prefix_affinity`` (same chain digest as the prefix index, so shared
+prefixes land on the replica that already published them).
+
 Run directly:  PYTHONPATH=src python -m benchmarks.bench_serving [--smoke]
-``--smoke`` shrinks traffic so the whole bench finishes in well under 30 s
-(tier-1-loop friendly).
+``--smoke`` shrinks traffic so the whole bench — replica sweep included —
+finishes in ~30 s (tier-1-loop friendly; scheduler step compiles are shared
+across engines via the module-level jit cache, so extra engines cost
+traffic, not recompiles).
 """
 from __future__ import annotations
 
+import dataclasses
 import time
 
 import jax
@@ -55,14 +66,19 @@ def _requests(rng, n, max_new):
     return out
 
 
-def _shared_prefix_requests(rng, n, max_new, prefix_len=48):
-    """Every request = one shared system prefix + a short unique tail."""
-    prefix = rng.integers(0, 512, size=prefix_len).astype(np.int32)
+def _shared_prefix_requests(rng, n, max_new, prefix_len=48, groups=1):
+    """Requests round-robined over ``groups`` shared system prefixes, each
+    plus a short unique tail.  ``groups=1`` is the classic one-system-prompt
+    regime; more groups is the regime where prefix-affinity routing
+    concentrates each group's traffic (and its cache hits) on one replica."""
+    prefixes = [rng.integers(0, 512, size=prefix_len).astype(np.int32)
+                for _ in range(groups)]
     out = []
     for i in range(n):
         tail = rng.integers(0, 512, size=int(rng.integers(4, 17)))
         out.append(Request(
-            uid=i, prompt=np.concatenate([prefix, tail.astype(np.int32)]),
+            uid=i,
+            prompt=np.concatenate([prefixes[i % groups], tail.astype(np.int32)]),
             max_new_tokens=max_new))
     return out
 
@@ -70,6 +86,8 @@ def _shared_prefix_requests(rng, n, max_new, prefix_len=48):
 def _has_work(eng) -> bool:
     if isinstance(eng, PagedServeEngine):
         return eng.scheduler.has_work
+    if hasattr(eng, "has_work"):
+        return eng.has_work
     return bool(eng.queue or eng.active)
 
 
@@ -120,7 +138,6 @@ def run(smoke: bool = False):
         rows.append(_paged_row(f"paged_{load_name}", eng, wall))
 
     # shared-prefix sweep: identical traffic, cache off (cold) vs on (warm)
-    import dataclasses
     for tag, cached in [("cold", False), ("warm", True)]:
         rng = np.random.default_rng(11)
         scfg = dataclasses.replace(SCFG, prefix_cache=cached)
@@ -134,7 +151,7 @@ def run(smoke: bool = False):
         eng = ServeEngine(params, SERVE_CFG,
                           EngineConfig(max_slots=SCFG.max_batch, smax=SMAX))
         wall = _drive(eng, _requests(rng, n, max_new), 4.0)
-        gen = eng.stats["decode_tokens"] + len(eng.finished)
+        gen = eng.stats["decode_tokens"] + eng.stats["first_tokens"]
         done = eng.finished
         rows.append({
             "point": "dense_high_4rps",
@@ -150,7 +167,55 @@ def run(smoke: bool = False):
             "cache_bytes": cache_nbytes(eng._cache),
             "wall_s": round(wall, 2),
         })
-    emit(rows, "experiments/bench/serving.csv")
+    emit(rows, "experiments/bench/serving.csv")   # before the replica sweep:
+    rep_rows = _replica_sweep(params, smoke)      # its failure must not
+    emit(rep_rows, "experiments/bench/serving_replicas.csv")  # discard these
+    return rows + rep_rows
+
+
+def _replica_row(point, eng, wall):
+    m = eng.metrics()
+    per_tps = ";".join(f"{p['tokens_per_s']:.1f}" for p in m["per_replica"])
+    per_hit = ";".join(f"{p['prefix_hit_rate']:.3f}" for p in m["per_replica"])
+    return {
+        "point": point,
+        "replicas": m["replicas"],
+        "tokens_per_s": round(m["tokens_per_s"], 2),
+        "per_replica_tokens_per_s": per_tps,
+        "prefix_hit_rate": round(m["prefix_hit_rate"], 3),
+        "per_replica_hit_rate": per_hit,
+        "ttft_ms": round(m["ttft_avg_s"] * 1e3, 2),
+        "preemptions": m["preemptions"],
+        "scale_syncs": m["scale_syncs"],
+        "wall_s": round(wall, 2),
+    }
+
+
+def _replica_sweep(params, smoke):
+    """Fixed offered load, replica counts {1,2[,4]}: per-replica tokens/s +
+    prefix-hit-rate, then a cold-vs-warm routing pair at 2 replicas."""
+    from repro.serving.replica import ReplicaConfig, ReplicatedServeEngine
+    # the 48-block global budget shards evenly over every replica count
+    scfg = dataclasses.replace(SCFG, num_blocks=48)
+    n = 8 if smoke else 24
+    max_new = 4 if smoke else MAX_NEW
+    rows = []
+    for nrep in ([1, 2] if smoke else [1, 2, 4]):
+        rng = np.random.default_rng(13)
+        eng = ReplicatedServeEngine(
+            params, SERVE_CFG, scfg,
+            ReplicaConfig(n_replicas=nrep, policy="prefix_affinity"))
+        wall = _drive(eng, _shared_prefix_requests(rng, n, max_new,
+                                                   prefix_len=32, groups=4),
+                      4.0)
+        rows.append(_replica_row(f"replicas_{nrep}_affinity", eng, wall))
+    for tag, policy in [("cold_round_robin", "round_robin"),
+                        ("warm_affinity", "prefix_affinity")]:
+        rng = np.random.default_rng(17)
+        eng = ReplicatedServeEngine(
+            params, SERVE_CFG, scfg, ReplicaConfig(n_replicas=2, policy=policy))
+        wall = _drive(eng, _shared_prefix_requests(rng, n, max_new), 1.0)
+        rows.append(_replica_row(f"routing_{tag}", eng, wall))
     return rows
 
 

@@ -54,6 +54,11 @@ def main() -> None:
             failures += 1
             traceback.print_exc()
             print(f"{name},-1,FAILED")
+    if failures:
+        # stdout is the CSV contract (often piped to a file): repeat the
+        # verdict on stderr so a red run is visible there too, and exit
+        # nonzero so CI never mistakes a raising bench for a pass
+        print(f"benchmarks.run: {failures} bench(es) FAILED", file=sys.stderr)
     sys.exit(1 if failures else 0)
 
 

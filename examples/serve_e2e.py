@@ -4,7 +4,9 @@ Trains a small LM briefly, statically quantizes it (SmoothQuant fold +
 symmetric W8A8), then serves a stream of batched requests through the
 paged-cache engine — continuous batching, chunked prefill, SimQuant INT8 KV
 blocks and online EMA scale tracking: the full LLMEasyQuant pipeline on one
-box.  ``--dense`` falls back to the legacy slot-ring engine.
+box.  ``--dense`` falls back to the legacy slot-ring engine; ``--replicas N``
+serves through N data-parallel scheduler replicas with prefix-affinity
+routing and synced EMA scales (the paper's multi-worker regime, host-side).
 
     PYTHONPATH=src python examples/serve_e2e.py [--requests 12] [--steps 60]
 """
@@ -34,7 +36,13 @@ def main():
     ap.add_argument("--new-tokens", type=int, default=24)
     ap.add_argument("--dense", action="store_true",
                     help="use the legacy dense slot-ring engine")
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="serve through N data-parallel scheduler replicas "
+                         "(prefix-affinity routing, synced EMA scales)")
     args = ap.parse_args()
+    if args.dense and args.replicas > 1:
+        ap.error("--dense and --replicas are mutually exclusive (the dense "
+                 "slot-ring engine has no replica frontend)")
 
     cfg = ModelConfig(name="serve-demo", vocab_size=512, d_model=128,
                       n_layers=2, n_heads=4, n_kv_heads=2, d_ff=512,
@@ -71,15 +79,22 @@ def main():
           f"{tree_nbytes(qparams)/2**20:.2f} MiB")
 
     # 3) serve
+    scfg = SchedulerConfig(
+        block_size=16, num_blocks=48 * max(args.replicas, 1), max_batch=4,
+        max_blocks_per_req=12, prefill_chunk=32, token_budget=64)
     if args.dense:
         print(f"[3/4] serving {args.requests} requests (dense, 4 slots) ...")
         eng = ServeEngine(qparams, cfg, EngineConfig(max_slots=4, smax=160))
+    elif args.replicas > 1:
+        from repro.serving.replica import ReplicaConfig, ReplicatedServeEngine
+        print(f"[3/4] serving {args.requests} requests "
+              f"({args.replicas} replicas, prefix-affinity routing) ...")
+        eng = ReplicatedServeEngine(qparams, cfg, scfg,
+                                    ReplicaConfig(n_replicas=args.replicas))
     else:
         print(f"[3/4] serving {args.requests} requests "
               f"(paged INT8 KV blocks, chunked prefill) ...")
-        eng = PagedServeEngine(qparams, cfg, SchedulerConfig(
-            block_size=16, num_blocks=48, max_batch=4, max_blocks_per_req=12,
-            prefill_chunk=32, token_budget=64))
+        eng = PagedServeEngine(qparams, cfg, scfg)
     rng = np.random.default_rng(0)
     t0 = time.perf_counter()
     for i in range(args.requests):
@@ -90,14 +105,25 @@ def main():
     dt = time.perf_counter() - t0
 
     # 4) report
-    toks = eng.stats["decode_tokens"] + len(done)
+    if args.replicas > 1:
+        eng.sync_scales()              # final shared (delta, z) on all replicas
+    toks = eng.stats["decode_tokens"] + eng.stats.get("first_tokens", len(done))
     print(f"[4/4] served {len(done)} requests, {toks} tokens in {dt:.1f}s "
           f"({toks/dt:.1f} tok/s)")
+    slots = 4 * args.replicas if args.replicas > 1 else 4
     print(f"      decode steps: {eng.stats['decode_steps']} "
-          f"(continuous batching over {args.requests} requests / 4 slots)")
+          f"(continuous batching over {args.requests} requests / "
+          f"{slots} slots)")
     print(f"      online EMA scale state: delta={float(eng.scale_state.delta):.3f} "
           f"after {int(eng.scale_state.step)} updates")
-    if not args.dense:
+    if args.replicas > 1:
+        m = eng.metrics()
+        per = "; ".join(
+            f"r{i}: {p['tokens_per_s']:.1f} tok/s, hit {p['prefix_hit_rate']:.0%}"
+            for i, p in enumerate(m["per_replica"]))
+        print(f"      {m['replicas']} replicas, {m['scale_syncs']} scale "
+              f"syncs, {m['preemptions']} preemptions; {per}")
+    elif not args.dense:
         m = eng.metrics()
         print(f"      TTFT avg {m['ttft_avg_s']*1e3:.0f} ms / max "
               f"{m['ttft_max_s']*1e3:.0f} ms; cache util avg "

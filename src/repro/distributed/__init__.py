@@ -5,10 +5,12 @@ from .sharding import (
     param_spec, param_logical_axes, tree_param_shardings, DEFAULT_RULES,
 )
 from .elastic import RemeshPlan, plan_remesh, build_mesh
+from .scale_sync import reduce_ema_states
 from .watchdog import Watchdog, StepRecord
 
 __all__ = [
     "axis_rules", "constrain", "spec", "resolve", "active_mesh",
     "param_spec", "param_logical_axes", "tree_param_shardings", "DEFAULT_RULES",
     "RemeshPlan", "plan_remesh", "build_mesh", "Watchdog", "StepRecord",
+    "reduce_ema_states",
 ]

@@ -14,10 +14,11 @@ collective reduce -> shared EMA update.
 from __future__ import annotations
 
 from functools import partial
-from typing import Sequence, Tuple
+from typing import Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, PartitionSpec as P
 
@@ -46,6 +47,44 @@ def sync_scale_allgather(delta_local: jax.Array, axis_name: str) -> jax.Array:
     identical results (tests/distributed assert this)."""
     gathered = jax.lax.all_gather(delta_local, axis_name)     # (P, ...)
     return jnp.max(gathered, axis=0)
+
+
+def reduce_ema_states(states: Sequence[EmaScaleState], *,
+                      mesh: Optional[Mesh] = None,
+                      axis: str = "data") -> EmaScaleState:
+    """Reduce N replicas' EMA scale states to one shared state.
+
+    The entry point usable *outside* ``shard_map`` — the serving layer's
+    replica controller calls it with one :class:`EmaScaleState` per engine
+    replica.  Reductions follow Eq. 7-8: ``delta`` takes the max (exact
+    global absmax — the same strictly-stronger-than-gather consistency as
+    :func:`global_absmax`), ``mu`` the mean, ``step`` the max.
+
+    With a live mesh whose ``axis`` size equals ``len(states)`` the
+    reduction runs as the ``pmax``/``pmean`` collective inside ``shard_map``
+    (Thm 4 fast path: deterministic collectives, bit-identical result on all
+    shards).  Otherwise — the host-side replica case, e.g. a single-device
+    test process — a numpy max/mean-reduce produces the same values.
+    """
+    if not states:
+        raise ValueError("reduce_ema_states needs at least one state")
+    if len(states) == 1:
+        return states[0]
+    d = jnp.stack([jnp.asarray(s.delta) for s in states])      # (N, ...)
+    m = jnp.stack([jnp.asarray(s.mu) for s in states])
+    if mesh is not None and mesh.shape.get(axis, 1) == len(states):
+        @partial(shard_map, mesh=mesh, in_specs=(P(axis), P(axis)),
+                 out_specs=(P(), P()), check_rep=False)
+        def _reduce(dl, ml):
+            return jax.lax.pmax(dl[0], axis), jax.lax.pmean(ml[0], axis)
+
+        delta, mu = _reduce(d, m)
+    else:
+        delta = jnp.asarray(np.max(np.asarray(d), axis=0))
+        mu = jnp.asarray(np.mean(np.asarray(m), axis=0))
+    step = max(int(np.asarray(s.step)) for s in states)
+    return EmaScaleState(delta=delta, mu=mu,
+                         step=jnp.asarray(step, jnp.int32))
 
 
 def make_synced_quant_step(mesh: Mesh, *, alpha: float = 0.9, bits: int = 8,

@@ -8,16 +8,21 @@ Two cache backends share the SimQuant INT8 quantization math:
                       caching + copy-on-write), driven by
                       ``scheduler.Scheduler`` / ``engine.PagedServeEngine``
                       (continuous batching + chunked prefill + priorities).
+
+``replica`` scales the paged stack out: ``ReplicatedServeEngine`` runs N
+scheduler replicas over sharded block pools with pluggable request routing
+(round-robin / least-loaded / prefix-affinity) and periodically synced EMA
+quantization scales (distributed/scale_sync).
 """
 from . import kv_cache
 
-__all__ = ["kv_cache", "paged_cache", "engine", "scheduler"]
+__all__ = ["kv_cache", "paged_cache", "engine", "scheduler", "replica"]
 
 
-# lazy: paged_cache/engine/scheduler pull in the models package (heavier);
-# kv_cache only touches models.config, which the seed already paid for
+# lazy: paged_cache/engine/scheduler/replica pull in the models package
+# (heavier); kv_cache only touches models.config, which the seed already paid
 def __getattr__(name):
-    if name in ("paged_cache", "engine", "scheduler"):
+    if name in ("paged_cache", "engine", "scheduler", "replica"):
         import importlib
         return importlib.import_module(f".{name}", __name__)
     raise AttributeError(name)

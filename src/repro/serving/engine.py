@@ -58,6 +58,20 @@ def sample_tokens(logits, temps: np.ndarray, rng, scale_state,
     return jnp.where(hot, sampled, greedy), rng, scale_state
 
 
+def eos_hit(tok, eos_id: int) -> bool:
+    """EOS policy shared by both engines.  ``tok`` is an int for ordinary
+    LMs and a per-codebook list for MusicGen-pattern models; the stream stops
+    when **codebook 0** emits EOS (the first codebook carries the coarsest
+    EnCodec stage, the delay-pattern end marker).  Comparing the raw list to
+    the int — the old behaviour — could never be true, so multi-codebook
+    requests ignored ``eos_id`` entirely."""
+    if eos_id < 0:
+        return False
+    if isinstance(tok, list):
+        return bool(tok and tok[0] == eos_id)
+    return tok == eos_id
+
+
 @dataclasses.dataclass
 class Request:
     uid: int
@@ -102,7 +116,8 @@ class ServeEngine:
         self._prefill_fns: Dict[int, Any] = {}       # bucketed jits
         self._decode_fn = jax.jit(partial(forward_decode, cfg=cfg))
         self._insert_fn = jax.jit(self._insert, donate_argnums=(0,))
-        self.stats = {"prefill_tokens": 0, "decode_steps": 0, "decode_tokens": 0}
+        self.stats = {"prefill_tokens": 0, "decode_steps": 0,
+                      "decode_tokens": 0, "first_tokens": 0}
 
     # -- cache slot plumbing --------------------------------------------------
     @staticmethod
@@ -194,9 +209,16 @@ class ServeEngine:
             req.ttft_s = time.perf_counter() - req.t_add
             first = np.asarray(tok[0]).tolist()
             req.generated.append(first)
+            self.stats["first_tokens"] += 1
             if req.on_token is not None:
                 req.on_token(req, first)
             self.stats["prefill_tokens"] += int(np.prod(req.prompt.shape))
+            if (len(req.generated) >= req.max_new_tokens or
+                    eos_hit(first, self.ecfg.eos_id)):
+                req.done = True            # EOS (or budget) on the first token
+                self.finished.append(req)
+                free.insert(0, slot)
+                continue
             self.active[slot] = req
 
     def _sample(self, logits, temperature: float):
@@ -230,7 +252,7 @@ class ServeEngine:
                 req.on_token(req, tok)
             self.stats["decode_tokens"] += 1
             stop = (len(req.generated) >= req.max_new_tokens or
-                    (self.ecfg.eos_id >= 0 and tok == self.ecfg.eos_id))
+                    eos_hit(tok, self.ecfg.eos_id))
             if stop:
                 req.done = True
                 self.finished.append(req)

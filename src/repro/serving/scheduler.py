@@ -148,6 +148,31 @@ def _chunk_bucket(c: int, cap: int) -> int:
     return min(b, max(cap, c))
 
 
+# one jitted fused step per (cfg, block_size) and one CoW copy, shared by
+# every Scheduler instance: N replicas of the same model reuse a single
+# compilation cache instead of paying the identical compile per engine
+_STEP_FN_CACHE: Dict[Any, Any] = {}
+_COW_FN: Any = None
+
+
+def _step_fn_for(cfg: ModelConfig, block_size: int):
+    key = (cfg, block_size)
+    fn = _STEP_FN_CACHE.get(key)
+    if fn is None:
+        fn = jax.jit(partial(_step_impl, cfg=cfg, block_size=block_size),
+                     static_argnames=("do_prefill", "do_decode", "pf_first"),
+                     donate_argnums=(1,))
+        _STEP_FN_CACHE[key] = fn
+    return fn
+
+
+def _shared_cow_fn():
+    global _COW_FN
+    if _COW_FN is None:
+        _COW_FN = jax.jit(copy_pool_block, donate_argnums=(0,))
+    return _COW_FN
+
+
 class Scheduler:
     """Paged continuous-batching scheduler (host-side control plane)."""
 
@@ -176,13 +201,10 @@ class Scheduler:
         self._scale_tag = 0                # scale-freeze epoch counter
         self._rng = jax.random.PRNGKey(scfg.seed)
         self.scale_state = EmaScaleState.init()
-        self._step_fn = jax.jit(
-            partial(_step_impl, cfg=cfg, block_size=scfg.block_size),
-            static_argnames=("do_prefill", "do_decode", "pf_first"),
-            donate_argnums=(1,))
-        self._cow_fn = jax.jit(copy_pool_block, donate_argnums=(0,))
+        self._step_fn = _step_fn_for(cfg, scfg.block_size)
+        self._cow_fn = _shared_cow_fn()
         self.stats = {"prefill_tokens": 0, "prefill_chunks": 0,
-                      "decode_steps": 0, "decode_tokens": 0,
+                      "decode_steps": 0, "decode_tokens": 0, "first_tokens": 0,
                       "preemptions": 0, "steps": 0, "failed_alloc": 0,
                       "prefix_hits": 0, "prefix_hit_tokens": 0,
                       "prefix_query_tokens": 0, "cow_copies": 0}
@@ -222,8 +244,10 @@ class Scheduler:
         if self._t_start is None:
             self._t_start = time.perf_counter()
         self._admit()
-        dec_slots = self._schedule_decode()
+        dec_slots = self._live_decode(self._schedule_decode())
         pf = self._schedule_prefill(len(dec_slots))
+        # prefill scheduling can also preempt (CoW allocation), so re-filter
+        dec_slots = self._live_decode(dec_slots)
         if not dec_slots and pf is None:
             return False
         self.stats["steps"] += 1
@@ -251,14 +275,62 @@ class Scheduler:
             steps += 1
         return self.finished
 
+    def _live_decode(self, dec_slots: List[int]) -> List[int]:
+        """Drop slots that were preempted after being scheduled: victim
+        selection is a global min over ``(priority, -order)``, so a later
+        slot's multi-eviction loop can vacate an earlier-scheduled slot;
+        ``_build_args`` must never dereference the ``None`` left behind."""
+        return [s for s in dec_slots
+                if self.slots[s] is not None
+                and self.slots[s].state == "decode"]
+
     @property
     def has_work(self) -> bool:
         return bool(self.waiting or any(self.slots))
 
+    @property
+    def num_running(self) -> int:
+        """Occupied decode-batch slots (prefilling or decoding)."""
+        return sum(1 for r in self.slots if r is not None)
+
+    @property
+    def num_waiting(self) -> int:
+        return len(self.waiting)
+
+    @property
+    def live_tokens(self) -> int:
+        """Tokens this engine is responsible for right now: cached context of
+        every running request plus the not-yet-prefilled prompt tokens of the
+        queue — the load signal ``least_loaded`` routing balances on."""
+        live = sum(max(int(r.ctx), int(r.target.shape[-1]))
+                   for r in self.slots if r is not None)
+        live += sum(int(r.target.shape[-1]) for r in self.waiting)
+        return int(live)
+
+    @property
+    def occupancy(self) -> float:
+        """Fraction of pool blocks holding live (referenced) data."""
+        return self.alloc.utilization
+
+    def drain(self, max_steps: int = 10_000) -> List[Any]:
+        """Quiesce hook for the replica router: hand back every *pristine*
+        queued request (the caller re-routes them elsewhere) and run the
+        in-flight work to completion.  A preempted request awaiting recompute
+        already has emitted tokens and a resume state that only this engine
+        holds, so it stays and finishes locally."""
+        keep = deque(r for r in self.waiting if r.req.generated)
+        handed = [r.req for r in self.waiting if not r.req.generated]
+        self.waiting = keep
+        self.run(max_steps)
+        return handed
+
     def metrics(self) -> Dict[str, float]:
         done = [r for r in self.finished]
         wall = max(self._t_last - (self._t_start or 0.0), 1e-9)
-        gen = self.stats["decode_tokens"] + len(done)      # + prefill samples
+        # prefill-sampled first tokens are counted as they are emitted, so
+        # in-flight requests contribute theirs too (counting finished
+        # requests instead dropped them and dipped mid-flight throughput)
+        gen = self.stats["decode_tokens"] + self.stats["first_tokens"]
         steps = max(self.stats["steps"], 1)
         return {
             "requests_finished": len(done),
@@ -544,6 +616,7 @@ class Scheduler:
         req.generated.append(tok)
         if first:
             req.ttft_s = time.perf_counter() - run.t_add
+            self.stats["first_tokens"] += 1
         if req.on_token is not None:
             req.on_token(req, tok)
 
@@ -610,7 +683,8 @@ class Scheduler:
     def _stopped(self, run: _Run, tok) -> bool:
         if len(run.req.generated) >= run.req.max_new_tokens:
             return True
-        return self.scfg.eos_id >= 0 and tok == self.scfg.eos_id
+        from repro.serving.engine import eos_hit
+        return eos_hit(tok, self.scfg.eos_id)
 
     def _finish(self, s: int) -> None:
         run = self.slots[s]

@@ -65,6 +65,29 @@ def test_scale_sync_consistency_8dev():
     assert "SCALE_SYNC_OK" in out
 
 
+def test_reduce_ema_states_mesh_matches_host_8dev():
+    """The replica controller's EMA-state reduce: the shard_map pmax/pmean
+    fast path and the numpy host fallback agree bit-for-bit (Thm 4: the
+    shared (delta, z) is identical no matter where the reduce runs)."""
+    out = _run_subprocess("""
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.core.online import EmaScaleState
+        from repro.distributed.scale_sync import reduce_ema_states
+        mesh = jax.make_mesh((8,), ("data",))
+        states = [EmaScaleState(delta=jnp.asarray(1.0 + i),
+                                mu=jnp.asarray(float(i)),
+                                step=jnp.asarray(i + 1, jnp.int32))
+                  for i in range(8)]
+        a = reduce_ema_states(states, mesh=mesh)      # collective fast path
+        b = reduce_ema_states(states)                 # numpy fallback
+        assert float(a.delta) == float(b.delta) == 8.0   # max-reduce
+        assert float(a.mu) == float(b.mu) == 3.5          # mean
+        assert int(a.step) == int(b.step) == 8
+        print("REDUCE_EMA_OK")
+    """)
+    assert "REDUCE_EMA_OK" in out
+
+
 def test_int8_allreduce_8dev():
     out = _run_subprocess("""
         import jax, jax.numpy as jnp, numpy as np

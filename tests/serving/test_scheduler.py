@@ -178,6 +178,148 @@ def test_chunk_bucket():
     assert _chunk_bucket(60, 48) == 60           # cap never truncates c
 
 
+# -- scheduler bugfix regressions (ISSUE 3) ----------------------------------
+
+def test_preempted_decode_slot_filtered_before_device_step():
+    """A slot already scheduled for decode can be vacated before the device
+    step runs: victim selection is a global min over ``(priority, -order)``,
+    so a later slot's multi-eviction cascade can reach an earlier-scheduled
+    slot (tiny pool, three priorities).  The step must drop the vacated slot
+    from the decode batch instead of dereferencing ``None`` in _build_args —
+    the cascade is forced at its narrowest point here."""
+    eng = _paged(block_size=8, num_blocks=8, max_batch=3,
+                 max_blocks_per_req=6, prefill_chunk=16, token_budget=64)
+    sched = eng.scheduler
+    for i, prio in enumerate([2, 1, 0]):
+        eng.add_request(Request(
+            uid=i, prompt=((np.arange(16) + i) % 128).astype(np.int32),
+            max_new_tokens=6, priority=prio))
+    while sum(1 for r in sched.slots
+              if r is not None and r.state == "decode") < 2:
+        eng.step()
+    orig = sched._schedule_decode
+    fired = []
+
+    def cascade():
+        out = orig()
+        if not fired and len(out) >= 2:
+            fired.append(out[0])
+            sched._preempt(out[0])      # the eviction reaches a scheduled slot
+        return out
+
+    sched._schedule_decode = cascade
+    eng.step()                          # pre-fix: AttributeError on None slot
+    sched._schedule_decode = orig
+    assert fired
+    done = eng.run()
+    assert sorted(r.uid for r in done) == [0, 1, 2]
+    assert all(len(r.generated) == 6 for r in done)
+    sched.alloc.check()
+
+
+MG_CFG = ModelConfig(name="mg", vocab_size=128, d_model=64, n_layers=2,
+                     n_heads=4, n_kv_heads=4, d_ff=128, n_codebooks=4,
+                     act_fn="gelu", layer_pattern=(LayerSpec("attn", "dense"),),
+                     attn_chunk=16)
+MG_PARAMS = init_params(MG_CFG, jax.random.PRNGKey(2))
+MG_PROMPT = (np.arange(64, dtype=np.int32).reshape(4, 16) * 3) % 128
+
+
+def _mg_paged(eos_id):
+    return PagedServeEngine(MG_PARAMS, MG_CFG, SchedulerConfig(
+        block_size=16, num_blocks=16, max_batch=2, max_blocks_per_req=4,
+        prefill_chunk=16, token_budget=64, eos_id=eos_id))
+
+
+def test_multicodebook_eos_stops_paged_engine():
+    """Per-codebook tokens are lists; the old ``tok == eos_id`` compare was
+    always False, so MusicGen-pattern requests never stopped early.  Policy:
+    stop when codebook 0 emits EOS."""
+    ref = _mg_paged(-1)
+    ref.add_request(Request(uid=0, prompt=MG_PROMPT.copy(), max_new_tokens=8))
+    ref.run()
+    gen = ref.finished[0].generated
+    assert len(gen) == 8 and isinstance(gen[0], list)
+    eos = gen[3][0]                     # a token codebook 0 actually emits
+    expect = next(i for i, t in enumerate(gen) if t[0] == eos) + 1
+    assert expect < 8                   # early stop is really exercised
+    eng = _mg_paged(eos)
+    eng.add_request(Request(uid=0, prompt=MG_PROMPT.copy(), max_new_tokens=8))
+    eng.run()
+    assert eng.finished[0].generated == gen[:expect]
+
+
+def test_multicodebook_eos_stops_dense_engine():
+    ecfg = EngineConfig(max_slots=2, smax=32, eos_id=-1)
+    ref = ServeEngine(MG_PARAMS, MG_CFG, ecfg)
+    ref.add_request(Request(uid=0, prompt=MG_PROMPT.copy(), max_new_tokens=8))
+    ref.run()
+    gen = ref.finished[0].generated
+    assert len(gen) == 8 and isinstance(gen[0], list)
+    eos = gen[3][0]
+    expect = next(i for i, t in enumerate(gen) if t[0] == eos) + 1
+    assert expect < 8
+    eng = ServeEngine(MG_PARAMS, MG_CFG,
+                      EngineConfig(max_slots=2, smax=32, eos_id=eos))
+    eng.add_request(Request(uid=0, prompt=MG_PROMPT.copy(), max_new_tokens=8))
+    eng.run()
+    assert eng.finished[0].generated == gen[:expect]
+
+
+def test_tokens_per_s_counts_inflight_first_tokens():
+    """The throughput numerator must include the prefill-sampled first token
+    of still-running requests, not just finished ones."""
+    eng = _paged()
+    r0 = Request(uid=0, prompt=GOLDEN_PROMPTS[0].copy(), max_new_tokens=6)
+    eng.add_request(r0)
+    eng.run()
+    r1 = Request(uid=1, prompt=GOLDEN_PROMPTS[1].copy(), max_new_tokens=8)
+    eng.add_request(r1)
+    while not r1.generated:             # first token emitted, not finished
+        eng.step()
+    assert not r1.done
+    sched = eng.scheduler
+    m = eng.metrics()
+    wall = sched._t_last - sched._t_start
+    counted = m["tokens_per_s"] * wall
+    emitted = len(r0.generated) + len(r1.generated)
+    assert np.isclose(counted, emitted), (counted, emitted)
+    assert sched.stats["first_tokens"] == 2
+    eng.run()
+
+
+# -- router-facing accessors / drain hook ------------------------------------
+
+def test_live_token_and_occupancy_accessors():
+    eng = _paged()
+    sched = eng.scheduler
+    assert sched.live_tokens == 0 and sched.num_running == 0
+    eng.add_request(Request(uid=0, prompt=GOLDEN_PROMPTS[2].copy(),
+                            max_new_tokens=4))
+    assert sched.num_waiting == 1 and sched.live_tokens == 64
+    eng.step()
+    assert sched.num_running == 1 and sched.num_waiting == 0
+    assert sched.live_tokens >= 64
+    assert 0 < sched.occupancy <= 1
+    eng.run()
+    assert sched.live_tokens == 0 and sched.occupancy == 0.0
+
+
+def test_drain_hands_back_waiting_requests():
+    """drain() returns the not-yet-admitted queue (for re-routing) and runs
+    only the in-flight work to completion."""
+    eng = _paged(max_batch=1)
+    eng.add_request(Request(uid=0, prompt=GOLDEN_PROMPTS[0].copy(),
+                            max_new_tokens=3))
+    eng.add_request(Request(uid=1, prompt=GOLDEN_PROMPTS[3].copy(),
+                            max_new_tokens=3))
+    eng.step()                           # uid 0 admitted, uid 1 still queued
+    handed = eng.scheduler.drain()
+    assert [r.uid for r in handed] == [1]
+    assert not eng.scheduler.has_work
+    assert [r.uid for r in eng.finished] == [0]
+
+
 # -- dense-engine satellite fixes -------------------------------------------
 
 def test_dense_per_request_temperature():
