@@ -20,6 +20,12 @@ contrasts ``round_robin`` (shared-prefix traffic scattered across pools)
 with ``prefix_affinity`` (same chain digest as the prefix index, so shared
 prefixes land on the replica that already published them).
 
+The hybrid sweep (``experiments/bench/serving_hybrid.csv``) drives a
+Jamba-pattern (attention+SSM) config through the paged engine and the dense
+engine at the same traffic: tokens/s side by side, plus the memory column
+that motivates the state pool — allocated INT8 state-pool bytes vs the f32
+SSD layout the dense slot cache would have paid pre-quantization.
+
 Run directly:  PYTHONPATH=src python -m benchmarks.bench_serving [--smoke]
 ``--smoke`` shrinks traffic so the whole bench — replica sweep included —
 finishes in ~30 s (tier-1-loop friendly; scheduler step compiles are shared
@@ -167,10 +173,12 @@ def run(smoke: bool = False):
             "cache_bytes": cache_nbytes(eng._cache),
             "wall_s": round(wall, 2),
         })
-    emit(rows, "experiments/bench/serving.csv")   # before the replica sweep:
-    rep_rows = _replica_sweep(params, smoke)      # its failure must not
+    emit(rows, "experiments/bench/serving.csv")   # before the later sweeps:
+    rep_rows = _replica_sweep(params, smoke)      # their failure must not
     emit(rep_rows, "experiments/bench/serving_replicas.csv")  # discard these
-    return rows + rep_rows
+    hyb_rows = _hybrid_sweep(smoke)
+    emit(hyb_rows, "experiments/bench/serving_hybrid.csv")
+    return rows + rep_rows + hyb_rows
 
 
 def _replica_row(point, eng, wall):
@@ -216,6 +224,69 @@ def _replica_sweep(params, smoke):
             params, SERVE_CFG, scfg, ReplicaConfig(n_replicas=2, policy=policy))
         wall = _drive(eng, _shared_prefix_requests(rng, n, max_new), 1.0)
         rows.append(_replica_row(f"routing_{tag}", eng, wall))
+    return rows
+
+
+HYBRID_CFG = ModelConfig(
+    name="serve-bench-hybrid", vocab_size=512, d_model=128, n_layers=2,
+    n_heads=4, n_kv_heads=2, d_ff=512, ssm_state=16, ssm_head_dim=32,
+    ssm_chunk=32, attn_chunk=64,
+    layer_pattern=(LayerSpec("ssm", "dense"), LayerSpec("attn", "dense")))
+
+
+def _hybrid_sweep(smoke):
+    """Jamba-pattern traffic, paged (state pool) vs dense engine: tokens/s
+    and the state-memory story — INT8 pool bytes vs the f32 SSD layout the
+    pre-quantization dense cache paid for the same slot count."""
+    from repro.serving.state_pool import (dense_f32_state_nbytes,
+                                          state_pool_nbytes)
+    params = init_params(HYBRID_CFG, jax.random.PRNGKey(1))
+    n = 4 if smoke else N_REQUESTS
+    max_new = 4 if smoke else MAX_NEW
+    scfg = SCFG
+    rows = []
+
+    rng = np.random.default_rng(19)
+    eng = PagedServeEngine(params, HYBRID_CFG, scfg)
+    wall = _drive(eng, _requests(rng, n, max_new), 4.0)
+    m = eng.metrics()
+    rows.append({
+        "point": "hybrid_paged_4rps",
+        "tokens_per_s": round(m["tokens_per_s"], 2),
+        "ttft_ms": round(m["ttft_avg_s"] * 1e3, 2),
+        "preemptions": m["preemptions"],
+        "state_slots": m["state_slots"],
+        "state_bytes_int8": m["state_pool_nbytes"],
+        "state_bytes_f32": dense_f32_state_nbytes(
+            HYBRID_CFG, scfg.state_slots + 1),      # + trash slot, like-for-like
+        "kv_cache_bytes": m["cache_nbytes"],
+        "wall_s": round(wall, 2),
+    })
+
+    rng = np.random.default_rng(19)
+    dense = ServeEngine(params, HYBRID_CFG,
+                        EngineConfig(max_slots=scfg.max_batch, smax=SMAX))
+    wall = _drive(dense, _requests(rng, n, max_new), 4.0)
+    gen = dense.stats["decode_tokens"] + dense.stats["first_tokens"]
+    done = dense.finished
+    # the dense cache quantizes SSD state through the same round-trip now;
+    # report its actual int8 state bytes plus the f32 bytes it replaced
+    ssm_leaves = {k: v for k, v in dense._cache["entries"].items()
+                  if "ssd_vals" in v}
+    rows.append({
+        "point": "hybrid_dense_4rps",
+        "tokens_per_s": round(gen / max(wall, 1e-9), 2),
+        "ttft_ms": round(float(np.mean([r.ttft_s for r in done])) * 1e3, 2),
+        "preemptions": 0,
+        "state_slots": scfg.max_batch,
+        "state_bytes_int8": cache_nbytes(ssm_leaves),
+        "state_bytes_f32": dense_f32_state_nbytes(HYBRID_CFG,
+                                                  scfg.max_batch),
+        "kv_cache_bytes": cache_nbytes(
+            {k: v for k, v in dense._cache["entries"].items()
+             if "ssd_vals" not in v}),
+        "wall_s": round(wall, 2),
+    })
     return rows
 
 

@@ -10,6 +10,22 @@ systolic array wants (DESIGN.md §2).
 Decode is the O(1) recurrent update on the (B, H, P, N) state — no KV cache
 exists, so SimQuant is inapplicable to this mixer (DESIGN.md §5); weights are
 still quantized by the runtime layer.
+
+Serving state comes in two forms:
+
+  * **working state** — ``{"conv": (B, K-1, conv_dim) compute-dtype,
+    "ssm": (B, H, P, N) f32}``; what the math consumes/produces.  The conv
+    tail concatenates the x|B|C conv inputs along channels (``conv_dim =
+    d_inner + 2*G*N``) so one leaf carries the whole causal-conv window.
+  * **quantized entry** — ``{"conv": bf16, "ssd_vals": int8 (B, H, P, N),
+    "ssd_scale": f32 (B, H)}``; what the caches *store*.  The SSD state is
+    symmetric-absmax INT8 per (slot, head) — the ``core/methods/symmetric``
+    scheme applied to runtime state instead of weights — so both the dense
+    slot cache and the paged state pool (serving/state_pool.py) pay 1 byte
+    per state element instead of 4.  ``ssm_state_entry`` /
+    ``ssm_state_from_entry`` are the round-trip at the pool boundary; both
+    engines round-trip through the *same* ops, which is what keeps the
+    paged hybrid path token-for-token equal to the dense engine.
 """
 from __future__ import annotations
 
@@ -18,6 +34,7 @@ from typing import Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.core.qtensor import int_range
 from repro.distributed.sharding import constrain
 from repro.kernels.ops import qdot
 from .config import ModelConfig
@@ -190,35 +207,37 @@ def ssm_apply(p, x: jax.Array, cfg: ModelConfig,
         return out
     k1 = cfg.ssm_conv - 1
     state = {"ssm": final_state,
-             "conv_x": conv_in[0][:, -k1:, :],
-             "conv_b": conv_in[1][:, -k1:, :],
-             "conv_c": conv_in[2][:, -k1:, :]}
+             "conv": jnp.concatenate([t[:, -k1:, :] for t in conv_in], axis=-1)}
     return out, state
 
 
 def ssm_decode_step(p, x_t: jax.Array, state: Dict, cfg: ModelConfig
                     ) -> Tuple[jax.Array, Dict]:
-    """One-token recurrent update.  x_t: (B,D); state: {"conv": (B,K-1,C),
-    "ssm": (B,H,P,N)} -> (y_t: (B,D), new state)."""
+    """One-token recurrent update.  x_t: (B,D); working state
+    {"conv": (B,K-1,conv_dim), "ssm": (B,H,P,N)} -> (y_t: (B,D), new state)."""
     bsz, d = x_t.shape
     di, g, n, h = cfg.d_inner, cfg.ssm_groups, cfg.ssm_state, cfg.ssm_heads
     pd = cfg.ssm_head_dim
+    gn = g * n
     dt_c = x_t.dtype
 
     z = qdot(x_t, p["in_proj_z"])
     dt_raw = qdot(x_t, p["in_proj_dt"])
+    conv = state["conv"]
+    windows = {"x": conv[..., :di], "b": conv[..., di:di + gn],
+               "c": conv[..., di + gn:]}
 
-    def step_conv(name, proj):
+    def step_conv(tag, proj):
         t = qdot(x_t, p[proj])                              # (B, C)
-        window = jnp.concatenate([state[name], t[:, None, :]], axis=1)
+        window = jnp.concatenate([windows[tag], t[:, None, :]], axis=1)
         out = jnp.einsum("bkc,ck->bc", window.astype(jnp.float32),
-                         p[f"conv_w{name[4:]}"].astype(jnp.float32))
-        out = out + p[f"conv_bias{name[4:]}"].astype(jnp.float32)
+                         p[f"conv_w_{tag}"].astype(jnp.float32))
+        out = out + p[f"conv_bias_{tag}"].astype(jnp.float32)
         return jax.nn.silu(out).astype(dt_c), window[:, 1:, :]
 
-    xs, new_cx = step_conv("conv_x", "in_proj_x")
-    b_t, new_cb = step_conv("conv_b", "in_proj_b")
-    c_t, new_cc = step_conv("conv_c", "in_proj_c")
+    xs, new_cx = step_conv("x", "in_proj_x")
+    b_t, new_cb = step_conv("b", "in_proj_b")
+    c_t, new_cc = step_conv("c", "in_proj_c")
     dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])      # (B,H)
 
     a = -jnp.exp(p["A_log"])                               # (H,)
@@ -232,4 +251,112 @@ def ssm_decode_step(p, x_t: jax.Array, state: Dict, cfg: ModelConfig
     y = rms_norm((y * jax.nn.silu(z.astype(jnp.float32))).astype(dt_c),
                  p["gn_gamma"], cfg.norm_eps)
     out = qdot(y, p["out_proj"])
-    return out, {"ssm": hs, "conv_x": new_cx, "conv_b": new_cb, "conv_c": new_cc}
+    return out, {"ssm": hs,
+                 "conv": jnp.concatenate([new_cx, new_cb, new_cc], axis=-1)}
+
+
+def ssm_prefill_chunk(p, x: jax.Array, cfg: ModelConfig, *,
+                      state: Optional[Dict], chunk_len, is_first: bool
+                      ) -> Tuple[jax.Array, Dict]:
+    """One prefill *chunk* of a Mamba-2 layer, carrying state across chunks.
+
+    x: (B, C, D) right-padded to the chunk bucket; ``chunk_len`` (traced) is
+    the valid length.  ``state`` is the working state left by the previous
+    chunk (ignored when ``is_first``: zero conv tail, zero SSD state — the
+    same start-of-sequence condition ``ssm_apply`` uses, so a single-chunk
+    prefill is op-for-op identical to the dense full-sequence pass).
+
+    Position-exactness: padded lanes get ``dt = 0`` — an exact no-op on the
+    SSD recurrence (decay 1, zero input) — and the causal conv window is the
+    carried tail prepended to the chunk, so every valid position sees exactly
+    the inputs the unchunked sequence would.  The new conv tail is the last
+    ``K-1`` *valid* inputs (dynamic slice at ``chunk_len``).
+
+    Returns (out (B, C, D), new working state).
+    """
+    bsz, c, d = x.shape
+    di, g, n, h = cfg.d_inner, cfg.ssm_groups, cfg.ssm_state, cfg.ssm_heads
+    assert g == 1, "ssm_groups > 1 not supported"
+    gn = g * n
+    k1 = cfg.ssm_conv - 1
+    dt_c = x.dtype
+
+    z = qdot(x, p["in_proj_z"])
+    x_in = qdot(x, p["in_proj_x"])
+    b_in = qdot(x, p["in_proj_b"])
+    c_in = qdot(x, p["in_proj_c"])
+    dt_raw = qdot(x, p["in_proj_dt"])                       # (B,C,H)
+    conv_in = jnp.concatenate([x_in, b_in, c_in], axis=-1)  # (B,C,conv_dim)
+
+    if is_first:
+        tail = jnp.zeros((bsz, k1, conv_in.shape[-1]), conv_in.dtype)
+        init_ssd = None
+    else:
+        tail = state["conv"].astype(conv_in.dtype)
+        init_ssd = state["ssm"]
+    full = jnp.concatenate([tail, conv_in], axis=1)         # (B, K-1+C, ·)
+
+    # fused depthwise conv over the concatenated channels: per-channel sums
+    # are independent, so this is bit-identical to the three per-segment
+    # ``_causal_conv`` calls of ``ssm_apply`` (zero tail == its zero pad)
+    w = jnp.concatenate([p["conv_w_x"], p["conv_w_b"], p["conv_w_c"]], axis=0)
+    bias = jnp.concatenate([p["conv_bias_x"], p["conv_bias_b"],
+                            p["conv_bias_c"]], axis=0)
+    k = w.shape[-1]
+    views = jnp.stack([full[:, i:i + c] for i in range(k)], axis=-1)
+    act = jax.nn.silu(jnp.einsum("bsck,ck->bsc", views, w.astype(full.dtype))
+                      + bias.astype(full.dtype))
+    xs, b_mat, c_mat = act[..., :di], act[..., di:di + gn], act[..., di + gn:]
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])  # (B,C,H)
+    valid = (jnp.arange(c) < chunk_len)[None, :, None]
+    dt = jnp.where(valid, dt, 0.0)                          # pad lanes: no-op
+
+    y, final_state = ssd_scan(xs.reshape(bsz, c, h, cfg.ssm_head_dim), dt,
+                              p["A_log"], b_mat, c_mat, p["D"],
+                              cfg.ssm_chunk, init_ssd)
+    y = y.reshape(bsz, c, di)
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(dt_c),
+                 p["gn_gamma"], cfg.norm_eps)
+    out = qdot(y, p["out_proj"])
+    new_tail = jax.lax.dynamic_slice_in_dim(full, chunk_len, k1, axis=1)
+    return out, {"ssm": final_state, "conv": new_tail}
+
+
+# ---------------------------------------------------------------------------
+# State quantization (the serving caches' round-trip at pool boundaries)
+# ---------------------------------------------------------------------------
+
+def quantize_ssd_state(state: jax.Array, eps: float = 1e-8
+                       ) -> Tuple[jax.Array, jax.Array]:
+    """Symmetric-absmax INT8 over the trailing (P, N) plane.
+
+    state: (..., H, P, N) f32 -> (vals int8 same shape, scale f32 (..., H)).
+    One scale per (slot, head) — fine-grained enough that a single outlier
+    head cannot blow up every head's resolution (FineQuant-style grouping),
+    small enough that the scale tensor is noise next to the codes.
+    """
+    qmin, qmax = int_range(8)
+    amax = jnp.max(jnp.abs(state), axis=(-2, -1))
+    scale = jnp.maximum(amax, eps) / float(qmax)
+    vals = jnp.clip(jnp.round(state / scale[..., None, None]), qmin,
+                    qmax).astype(jnp.int8)
+    return vals, scale.astype(jnp.float32)
+
+
+def dequantize_ssd_state(vals: jax.Array, scale: jax.Array) -> jax.Array:
+    """Inverse of :func:`quantize_ssd_state` back to f32."""
+    return vals.astype(jnp.float32) * scale[..., None, None]
+
+
+def ssm_state_entry(state: Dict) -> Dict[str, jax.Array]:
+    """Working state -> quantized cache entry (what the caches store)."""
+    vals, scale = quantize_ssd_state(state["ssm"])
+    return {"conv": state["conv"], "ssd_vals": vals, "ssd_scale": scale}
+
+
+def ssm_state_from_entry(entry: Dict) -> Dict[str, jax.Array]:
+    """Quantized cache entry -> working state (what the math consumes)."""
+    return {"conv": entry["conv"],
+            "ssm": dequantize_ssd_state(entry["ssd_vals"],
+                                        entry["ssd_scale"])}

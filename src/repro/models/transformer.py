@@ -27,13 +27,15 @@ from repro.kernels import ops
 from repro.kernels.ops import qdot
 from repro.serving import kv_cache as kvc
 from repro.serving import paged_cache as pgc
+from repro.serving import state_pool as spl
 from .attention import attn_apply, attn_init, decode_attention_ref, flash_attention, qkv_project
 from .config import LayerSpec, ModelConfig
 from .layers import apply_rope, dense_init, embed_init, rms_norm, rms_norm_init, swiglu_apply, swiglu_init
 from .mla import (mla_absorbed_weights, mla_apply, mla_decode_ref, mla_init,
                   mla_latent, mla_queries)
 from .moe import moe_apply, moe_init
-from .ssm import ssm_apply, ssm_decode_step, ssm_init
+from .ssm import (ssm_apply, ssm_decode_step, ssm_init, ssm_prefill_chunk,
+                  ssm_state_entry, ssm_state_from_entry)
 
 
 # ---------------------------------------------------------------------------
@@ -202,7 +204,10 @@ def _block_full(p_blk, h, cfg: ModelConfig, *, positions, prefix_len: int,
         else:  # ssm
             if mode == "prefill":
                 mix, state = ssm_apply(p["ssm"], x, cfg, return_state=True)
-                cache_entries[f"p{i}"] = state
+                # stored quantized (INT8 SSD codes + per-slot scales) — the
+                # same round-trip the paged state pool applies, so dense and
+                # paged hybrid serving stay token-for-token identical
+                cache_entries[f"p{i}"] = ssm_state_entry(state)
             else:
                 mix = ssm_apply(p["ssm"], x, cfg)
         # constrain the mixer output to the residual's seq-sharding BEFORE the
@@ -256,7 +261,9 @@ def _block_decode(p_blk, h, cache_blk, cfg: ModelConfig, *, length):
                                  w_uk, w_uv, length + 1, cfg)
             mix = qdot(out.astype(x.dtype).reshape(b, -1), p["attn"]["wo"])
         else:
-            mix, entry = ssm_decode_step(p["ssm"], x, entry, cfg)
+            work = ssm_state_from_entry(entry)
+            mix, work = ssm_decode_step(p["ssm"], x, work, cfg)
+            entry = ssm_state_entry(work)
         new_cache[f"p{i}"] = entry
         h = h + mix.astype(h.dtype)
 
@@ -358,17 +365,20 @@ def forward_decode(params, tokens_t, cache, cfg: ModelConfig):
 # Paged-cache entry points (block-table path — serving/scheduler.py)
 # ---------------------------------------------------------------------------
 
-def _block_prefill_chunk(p_blk, h, pool_blk, cfg: ModelConfig, *, positions,
-                         slot, block_row, ctx, chunk_len, block_size: int,
-                         is_first: bool):
+def _block_prefill_chunk(p_blk, h, pool_blk, spool_blk, cfg: ModelConfig, *,
+                         positions, slot, block_row, ctx, chunk_len,
+                         block_size: int, is_first: bool, state_slot):
     """One pattern repeat of a prefill *chunk* (B=1) against the block pool.
 
     The chunk's queries attend to the request's cached prefix (gathered +
     dequantized from the pool) plus the chunk itself — position-exact
     right-aligned handling, no left-pad.  ``is_first`` (static) skips the
-    prefix gather and freezes the per-channel K scales.
+    prefix gather and freezes the per-channel K scales.  SSM layers carry
+    conv/SSD state across chunk boundaries through the state pool
+    (``state_slot``): read -> chunk-exact scan -> write back quantized.
     """
     new_pool: Dict[str, Any] = {}
+    new_spool: Dict[str, Any] = {}
     pos1d = positions[0] if positions.ndim > 1 else positions
     c = h.shape[1]
     mt = block_row.shape[0] * block_size
@@ -380,9 +390,9 @@ def _block_prefill_chunk(p_blk, h, pool_blk, cfg: ModelConfig, *, positions,
 
     for i, spec in enumerate(cfg.layer_pattern):
         p = p_blk[f"p{i}"]
-        entry = pool_blk[f"p{i}"]
         x = rms_norm(h, p["norm_mix"], cfg.norm_eps)
         if spec.mixer == "attn":
+            entry = pool_blk[f"p{i}"]
             q, k, v = qkv_project(p["attn"], x, cfg, positions)
             entry = pgc.gqa_chunk_write(
                 entry, k[0], v[0], slot=slot, block_row=block_row, ctx=ctx,
@@ -399,7 +409,9 @@ def _block_prefill_chunk(p_blk, h, pool_blk, cfg: ModelConfig, *, positions,
                                       kv_positions=jnp.concatenate([pre_pos, pos1d]),
                                       chunk=cfg.attn_chunk)
             mix = qdot(out.reshape(1, c, -1), p["attn"]["wo"])
+            new_pool[f"p{i}"] = entry
         elif spec.mixer == "mla":
+            entry = pool_blk[f"p{i}"]
             q_nope, q_rope = mla_queries(p["attn"], x, cfg, positions)
             c_kv, k_rope = mla_latent(p["attn"], x, cfg, positions)
             entry = pgc.mla_chunk_write(
@@ -427,11 +439,14 @@ def _block_prefill_chunk(p_blk, h, pool_blk, cfg: ModelConfig, *, positions,
             out = flash_attention(q_cat, k_cat, v_full, q_positions=pos1d,
                                   kv_positions=kv_pos, chunk=cfg.attn_chunk)
             mix = qdot(out.reshape(1, c, h_heads * dv), p["attn"]["wo"])
-        else:
-            raise NotImplementedError(
-                "paged prefill does not support ssm mixers; "
-                "use the dense ServeEngine")
-        new_pool[f"p{i}"] = entry
+            new_pool[f"p{i}"] = entry
+        else:  # ssm: state pool carry across chunk boundaries
+            sentry = spool_blk[f"p{i}"]
+            carried = None if is_first else spl.read_state(sentry, state_slot)
+            mix, work = ssm_prefill_chunk(p["ssm"], x, cfg, state=carried,
+                                          chunk_len=chunk_len,
+                                          is_first=is_first)
+            new_spool[f"p{i}"] = spl.write_state(sentry, state_slot, work)
         h = h + mix
         if spec.ffn != "none":
             y = rms_norm(h, p["norm_ffn"], cfg.norm_eps)
@@ -440,18 +455,21 @@ def _block_prefill_chunk(p_blk, h, pool_blk, cfg: ModelConfig, *, positions,
             else:
                 f, _ = moe_apply(p["moe"], y, cfg)
             h = h + f
-    return h, new_pool
+    return h, new_pool, new_spool
 
 
 def forward_prefill_chunk(params, tokens, pool, cfg: ModelConfig, *,
                           slot, block_row, ctx, chunk_len, block_size: int,
-                          is_first: bool):
+                          is_first: bool, state_pool=None, state_slot=0):
     """One prefill chunk of a single request against the block pool.
 
     tokens: (1, C) right-padded (or (1, K, C) MusicGen); positions are
-    ``ctx + arange(C)`` — position-exact, no left-pad.  Returns
-    (last-valid-token logits (1, V), new pool).
+    ``ctx + arange(C)`` — position-exact, no left-pad.  ``state_pool`` /
+    ``state_slot`` carry SSM layer state across chunks for hybrid patterns
+    (``{}`` / ignored for pure-attention configs).  Returns
+    (last-valid-token logits (1, V), new pool, new state pool).
     """
+    spool = {} if state_pool is None else state_pool
     h, _ = embed_tokens(params, tokens, cfg)
     b, s, _ = h.shape
     positions = jnp.broadcast_to(ctx + jnp.arange(s)[None, :], (b, s))
@@ -459,31 +477,39 @@ def forward_prefill_chunk(params, tokens, pool, cfg: ModelConfig, *,
     block = partial(_block_prefill_chunk, cfg=cfg, positions=positions,
                     slot=slot, block_row=block_row, ctx=ctx,
                     chunk_len=chunk_len, block_size=block_size,
-                    is_first=is_first)
+                    is_first=is_first,
+                    state_slot=jnp.asarray(state_slot, jnp.int32).reshape(1))
 
     def body(h, xs):
-        p_blk, pool_blk = xs
-        return block(p_blk, h, pool_blk)
+        p_blk, pool_blk, spool_blk = xs
+        h, new_pool, new_spool = block(p_blk, h, pool_blk, spool_blk)
+        return h, (new_pool, new_spool)
 
-    h, new_pool = jax.lax.scan(body, h, (params["layers"], pool))
+    h, (new_pool, new_spool) = jax.lax.scan(body, h,
+                                            (params["layers"], pool, spool))
     h = rms_norm(h, params["final_norm"], cfg.norm_eps)
     last = jax.lax.dynamic_slice_in_dim(h, chunk_len - 1, 1, axis=1)
     logits = logits_head(params, last, cfg)[:, 0]
-    return logits, new_pool
+    return logits, new_pool, new_spool
 
 
-def _block_decode_paged(p_blk, h, pool_blk, cfg: ModelConfig, *, block_tables,
-                        lengths, block_size: int):
-    """One-token pass over one pattern repeat against the block pool."""
+def _block_decode_paged(p_blk, h, pool_blk, spool_blk, cfg: ModelConfig, *,
+                        block_tables, lengths, block_size: int, state_slots):
+    """One-token pass over one pattern repeat against the block pool.
+
+    SSM layers step their recurrent state through the slot pool instead:
+    gather + dequantize by ``state_slots``, one recurrent update, quantize +
+    scatter back (inactive lanes read/write the trash slot)."""
     new_pool: Dict[str, Any] = {}
+    new_spool: Dict[str, Any] = {}
     b = h.shape[0]
     positions = lengths[:, None]
 
     for i, spec in enumerate(cfg.layer_pattern):
         p = p_blk[f"p{i}"]
-        entry = pool_blk[f"p{i}"]
         x = rms_norm(h, p["norm_mix"], cfg.norm_eps)
         if spec.mixer == "attn":
+            entry = pool_blk[f"p{i}"]
             q, k, v = qkv_project(p["attn"], x[:, None, :], cfg, positions)
             entry = pgc.gqa_paged_append(entry, k[:, 0], v[:, 0],
                                          block_tables, lengths,
@@ -493,7 +519,9 @@ def _block_decode_paged(p_blk, h, pool_blk, cfg: ModelConfig, *, block_tables,
                 entry["v_vals"], entry["v_scale"], entry["v_zero"],
                 block_tables, lengths + 1)
             mix = qdot(out.astype(x.dtype).reshape(b, -1), p["attn"]["wo"])
+            new_pool[f"p{i}"] = entry
         elif spec.mixer == "mla":
+            entry = pool_blk[f"p{i}"]
             q_nope, q_rope = mla_queries(p["attn"], x[:, None, :], cfg, positions)
             c_t, kr_t = mla_latent(p["attn"], x[:, None, :], cfg, positions)
             entry = pgc.mla_paged_append(entry, c_t[:, 0], kr_t[:, 0],
@@ -506,11 +534,12 @@ def _block_decode_paged(p_blk, h, pool_blk, cfg: ModelConfig, *, block_tables,
                                  gath["kr_vals"], gath["kr_scale"], gath["kr_zero"],
                                  w_uk, w_uv, lengths + 1, cfg)
             mix = qdot(out.astype(x.dtype).reshape(b, -1), p["attn"]["wo"])
-        else:
-            raise NotImplementedError(
-                "paged decode does not support ssm mixers; "
-                "use the dense ServeEngine")
-        new_pool[f"p{i}"] = entry
+            new_pool[f"p{i}"] = entry
+        else:  # ssm: O(1) recurrent update through the state slot pool
+            sentry = spool_blk[f"p{i}"]
+            work = spl.read_state(sentry, state_slots)
+            mix, work = ssm_decode_step(p["ssm"], x, work, cfg)
+            new_spool[f"p{i}"] = spl.write_state(sentry, state_slots, work)
         h = h + mix.astype(h.dtype)
 
         if spec.ffn != "none":
@@ -521,17 +550,23 @@ def _block_decode_paged(p_blk, h, pool_blk, cfg: ModelConfig, *, block_tables,
                 f, _ = moe_apply(p["moe"], y[:, None, :], cfg)
                 f = f[:, 0]
             h = h + f.astype(h.dtype)
-    return h, new_pool
+    return h, new_pool, new_spool
 
 
 def forward_decode_paged(params, tokens_t, pool, block_tables, lengths,
-                         cfg: ModelConfig, *, block_size: int):
+                         cfg: ModelConfig, *, block_size: int,
+                         state_pool=None, state_slots=None):
     """One decode step over the block pool.  tokens_t: (B,) int32 (or (B,K));
     block_tables: (B, M) int32 pool block ids; lengths: (B,) live token
-    counts (the new token is appended at position ``lengths[b]``).
+    counts (the new token is appended at position ``lengths[b]``);
+    state_slots: (B,) int32 state-pool slot per lane for hybrid patterns
+    (trash slot for inactive lanes; ignored for pure-attention configs).
 
-    -> (logits (B, V) / (B, K, V), new pool).
+    -> (logits (B, V) / (B, K, V), new pool, new state pool).
     """
+    spool = {} if state_pool is None else state_pool
+    if state_slots is None:
+        state_slots = jnp.zeros((tokens_t.shape[0],), jnp.int32)
     dt = cfg.compute_dtype
     if cfg.n_codebooks:
         h = sum(params["embed"][f"cb{i}"][tokens_t[:, i]]
@@ -541,15 +576,17 @@ def forward_decode_paged(params, tokens_t, pool, block_tables, lengths,
     h = h.astype(dt)                                       # (B, D)
 
     def body(h, xs):
-        p_blk, pool_blk = xs
-        return _block_decode_paged(p_blk, h, pool_blk, cfg,
-                                   block_tables=block_tables, lengths=lengths,
-                                   block_size=block_size)
+        p_blk, pool_blk, spool_blk = xs
+        h, new_pool, new_spool = _block_decode_paged(
+            p_blk, h, pool_blk, spool_blk, cfg, block_tables=block_tables,
+            lengths=lengths, block_size=block_size, state_slots=state_slots)
+        return h, (new_pool, new_spool)
 
-    h, new_pool = jax.lax.scan(body, h, (params["layers"], pool))
+    h, (new_pool, new_spool) = jax.lax.scan(body, h,
+                                            (params["layers"], pool, spool))
     h = rms_norm(h, params["final_norm"], cfg.norm_eps)
     logits = logits_head(params, h[:, None, :], cfg)[:, 0]
-    return logits, new_pool
+    return logits, new_pool, new_spool
 
 
 # ---------------------------------------------------------------------------

@@ -8,21 +8,25 @@ Two cache backends share the SimQuant INT8 quantization math:
                       caching + copy-on-write), driven by
                       ``scheduler.Scheduler`` / ``engine.PagedServeEngine``
                       (continuous batching + chunked prefill + priorities).
+  * ``state_pool``  — fixed-size slot pool for SSM conv/SSD state (INT8 +
+                      per-slot scales), so hybrid Jamba/Mamba patterns serve
+                      through the paged scheduler too.
 
 ``replica`` scales the paged stack out: ``ReplicatedServeEngine`` runs N
-scheduler replicas over sharded block pools with pluggable request routing
-(round-robin / least-loaded / prefix-affinity) and periodically synced EMA
-quantization scales (distributed/scale_sync).
+scheduler replicas over sharded block pools (and state-slot budgets) with
+pluggable request routing (round-robin / least-loaded / prefix-affinity)
+and periodically synced EMA quantization scales (distributed/scale_sync).
 """
 from . import kv_cache
 
-__all__ = ["kv_cache", "paged_cache", "engine", "scheduler", "replica"]
+__all__ = ["kv_cache", "paged_cache", "state_pool", "engine", "scheduler",
+           "replica"]
 
 
-# lazy: paged_cache/engine/scheduler/replica pull in the models package
-# (heavier); kv_cache only touches models.config, which the seed already paid
+# lazy: the paged/engine modules pull in the models package (heavier);
+# kv_cache only touches models.config, which the seed already paid
 def __getattr__(name):
-    if name in ("paged_cache", "engine", "scheduler", "replica"):
+    if name in ("paged_cache", "state_pool", "engine", "scheduler", "replica"):
         import importlib
         return importlib.import_module(f".{name}", __name__)
     raise AttributeError(name)

@@ -283,11 +283,21 @@ class PagedServeEngine:
     they never stall in-flight decodes for more than one chunk, shared
     prompt prefixes are served from the refcounted prefix cache (see
     ``metrics()['prefix_hit_tokens']``), and scheduling honors
-    ``Request.priority``.
+    ``Request.priority`` (with optional anti-starvation aging).
+
+    Hybrid attention+SSM patterns (Jamba/Mamba families) are served too:
+    attention KV pages through the block pool while each request's conv/SSD
+    state holds one slot of the quantized state pool
+    (``serving/state_pool.py``; INT8 SSD codes + per-slot scales).  Only
+    genuinely unsupported layouts are rejected, by the capability check
+    shared with :class:`~repro.serving.replica.ReplicatedServeEngine`
+    (``scheduler.paged_unsupported_reason``).
     """
 
     def __init__(self, params, cfg: ModelConfig, scfg=None):
-        from repro.serving.scheduler import Scheduler, SchedulerConfig
+        from repro.serving.scheduler import (Scheduler, SchedulerConfig,
+                                             ensure_paged_supported)
+        ensure_paged_supported(cfg)
         self.scheduler = Scheduler(params, cfg, scfg or SchedulerConfig())
 
     @property
@@ -317,3 +327,8 @@ class PagedServeEngine:
     def cache_nbytes(self) -> int:
         from repro.serving.paged_cache import paged_cache_nbytes
         return paged_cache_nbytes(self.scheduler.pool)
+
+    def state_nbytes(self) -> int:
+        """Allocated SSM state-pool bytes (0 for pure-attention configs)."""
+        from repro.serving.state_pool import state_pool_nbytes
+        return state_pool_nbytes(self.scheduler.spool)

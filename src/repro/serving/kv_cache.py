@@ -10,7 +10,15 @@ Layouts (per pattern-position, stacked over scan repeats on a leading axis):
         v_zero  f32  (R, B, Smax, KH, 1)
   MLA:  c_vals  int8 (R, B, Smax, rkv)  + per-channel scale/zero (R,B,1,rkv)
         kr_vals int8 (R, B, Smax, dr)   + per-channel scale/zero (R,B,1,dr)
-  SSM:  conv    bf16 (R, B, K-1, conv_dim); ssm f32 (R, B, H, P, N)
+  SSM:  conv      bf16 (R, B, K-1, conv_dim)   causal-conv tail (x|B|C fused)
+        ssd_vals  int8 (R, B, H, P, N)         quantized SSD state
+        ssd_scale f32  (R, B, H)               per-slot per-head absmax scale
+
+SSM entries are built/consumed by ``models.ssm.ssm_state_entry`` /
+``ssm_state_from_entry``: the SSD state is stored symmetric-absmax INT8
+(4x smaller than the old f32 leaf) and round-trips through the *same*
+quantize/dequantize ops the paged state pool (``serving/state_pool.py``)
+uses, so dense and paged hybrid serving emit identical greedy tokens.
 
 Decode appends K with the *frozen* per-channel scales (clipping handled by
 the affine clip — paper Eq. 1) and V/token scales computed on the fly

@@ -83,8 +83,9 @@ class PagedCacheConfig:
 
 def init_paged_cache(cfg: ModelConfig, pcfg: PagedCacheConfig) -> Dict[str, Any]:
     """Zero-filled block pool pytree: {"p{i}": leaves (R, ...)} per pattern
-    position.  SSM mixers have no sequence axis to page — unsupported here
-    (the dense engine still serves them)."""
+    position.  SSM mixers have no sequence axis to page — their fixed-size
+    conv/SSD state lives in the slot pool (``state_pool.init_state_pool``),
+    so hybrid patterns simply skip those positions here."""
     r = cfg.n_repeats
     npool = pcfg.num_blocks + 1                     # + trash block
     t, b = pcfg.block_size, pcfg.max_batch
@@ -110,10 +111,7 @@ def init_paged_cache(cfg: ModelConfig, pcfg: PagedCacheConfig) -> Dict[str, Any]
                 "kr_scale": jnp.ones((r, b, dr), jnp.float32),
                 "kr_zero": jnp.zeros((r, b, dr), jnp.float32),
             }
-        else:
-            raise NotImplementedError(
-                f"paged cache does not support mixer={spec.mixer!r} "
-                f"(pattern position {i}); use the dense ServeEngine")
+        # ssm: no sequence axis — state_pool.py owns those positions
     return entries
 
 

@@ -40,7 +40,8 @@ from typing import Any, Dict, List, Optional
 
 import numpy as np
 
-from repro.serving.scheduler import Scheduler, SchedulerConfig, _prefix_keys
+from repro.serving.scheduler import (Scheduler, SchedulerConfig,
+                                     _prefix_keys, ensure_paged_supported)
 
 ROUTING_POLICIES = ("round_robin", "least_loaded", "prefix_affinity")
 
@@ -53,14 +54,15 @@ class ReplicaConfig:
                                          # syncs; 0 disables syncing
 
 
-def shard_blocks(num_blocks: int, n: int) -> List[int]:
-    """Split the global block budget (near-)evenly: the first
-    ``num_blocks % n`` replicas get one extra block."""
+def shard_blocks(num_blocks: int, n: int, kind: str = "block") -> List[int]:
+    """Split a global budget (near-)evenly: the first ``num_blocks % n``
+    replicas get one extra unit.  Used for the KV block budget and — with
+    ``kind="state slot"`` — the hybrid SSM state-slot budget."""
     base, rem = divmod(num_blocks, n)
     if base < 1:
         raise ValueError(
-            f"cannot shard num_blocks={num_blocks} over {n} replicas; "
-            f"every replica needs at least one block")
+            f"cannot shard {num_blocks} {kind}s over {n} replicas; "
+            f"every replica needs at least one {kind}")
     return [base + (1 if i < rem else 0) for i in range(n)]
 
 
@@ -87,15 +89,28 @@ class ReplicatedServeEngine:
             raise ValueError(
                 f"mesh data-axis size {mesh.shape.get('data', 1)} != "
                 f"n_replicas {rcfg.n_replicas}")
+        # capability gate before any replica is built: an unsupported layout
+        # must fail here with the same clear error the single engine gives,
+        # not crash inside replica 0's constructor
+        ensure_paged_supported(cfg)
         self.cfg = cfg
         self.scfg = scfg
         self.rcfg = rcfg
         self.mesh = mesh
         self.shards = shard_blocks(scfg.num_blocks, rcfg.n_replicas)
+        # an explicit global state-slot budget (hybrid SSM patterns) shards
+        # the same way the block budget does; the 0-default leaves each
+        # replica at its own max_batch worth of slots
+        slot_shards = (shard_blocks(scfg.num_state_slots, rcfg.n_replicas,
+                                    kind="state slot")
+                       if scfg.num_state_slots else
+                       [0] * rcfg.n_replicas)
+        self.state_slot_shards = slot_shards
         self.replicas = [
             Scheduler(params, cfg,
-                      dataclasses.replace(scfg, num_blocks=nb))
-            for nb in self.shards]
+                      dataclasses.replace(scfg, num_blocks=nb,
+                                          num_state_slots=ss))
+            for nb, ss in zip(self.shards, slot_shards)]
         self.routed: Dict[Any, int] = {}     # uid -> replica index
         self._rr = 0                         # round-robin cursor
         self._steps = 0
@@ -273,6 +288,7 @@ class ReplicatedServeEngine:
             "prefix_hit_rate": hit / max(query, 1),
             "preemptions": sum(r.stats["preemptions"] for r in self.replicas),
             "cache_nbytes": sum(m["cache_nbytes"] for m in per),
+            "state_pool_nbytes": sum(m["state_pool_nbytes"] for m in per),
             "scale_syncs": self.scale_syncs,
             "per_replica": per,
         }

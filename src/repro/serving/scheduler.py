@@ -23,11 +23,20 @@ synchronous slot loop:
   * **admission / preemption under a token budget** — each step spends at
     most ``token_budget`` tokens (decodes first, prefill fills the rest).
     Admission is priority-aware (higher ``Request.priority`` first, FCFS
-    within a priority); when the block pool runs dry the lowest-priority —
-    then youngest — running request is preempted (references dropped,
-    request re-queued for recompute), vLLM-style.  A preempted request's
-    published blocks survive as cached entries, so its recompute usually
-    re-matches them instead of re-prefilling.
+    within a priority, optional aging: ``priority_age_steps`` grows a
+    waiting request's effective priority with queue age so sustained
+    high-priority load cannot starve anyone); when the block pool runs dry
+    the lowest-priority — then youngest — running request is preempted
+    (references dropped, request re-queued for recompute), vLLM-style.  A
+    preempted request's published blocks survive as cached entries, so its
+    recompute usually re-matches them instead of re-prefilling.
+  * **hybrid SSM state pool** — Jamba/Mamba-pattern layers have fixed-size
+    recurrent state instead of a growing KV; each admitted request holds one
+    slot of the quantized state pool (``serving/state_pool.py``: conv tail
+    bf16, SSD state INT8 + per-slot scales) from admission to finish, freed
+    at preemption (recompute-on-resume, like KV).  Prefix-cache matching is
+    disabled for hybrid configs: cached KV blocks cannot reconstruct the SSM
+    state at the matched boundary, so every token must prefill.
 
 The jitted step has three static shapes: decode width B, prefill-chunk
 bucket C, and the block-table width M — bounded recompilation, same
@@ -53,6 +62,29 @@ from repro.serving.paged_cache import (BlockAllocator, PagedCacheConfig,
                                        copy_pool_block, init_paged_cache,
                                        paged_cache_nbytes, restore_slot_scales,
                                        snapshot_slot_scales)
+from repro.serving.state_pool import (StateAllocator, init_state_pool,
+                                      state_pool_nbytes)
+
+
+def paged_unsupported_reason(cfg: ModelConfig) -> Optional[str]:
+    """Why ``cfg`` cannot serve through the paged stack, or None.
+
+    Shared capability detection for ``Scheduler`` / ``PagedServeEngine`` /
+    ``ReplicatedServeEngine`` — only genuinely unsupported layouts are
+    rejected.  SSM and hybrid attention+SSM patterns are served (block pool
+    for attention KV, state pool for conv/SSD state)."""
+    if cfg.n_img_patches:
+        return ("prefix-LM image prefixes (n_img_patches="
+                f"{cfg.n_img_patches}) need the bidirectional prefix mask "
+                "only the dense ServeEngine implements")
+    return None
+
+
+def ensure_paged_supported(cfg: ModelConfig) -> None:
+    reason = paged_unsupported_reason(cfg)
+    if reason is not None:
+        raise NotImplementedError(
+            f"paged serving does not support {cfg.name}: {reason}")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -67,6 +99,11 @@ class SchedulerConfig:
     ema_alpha: float = 0.9
     seed: int = 0
     prefix_cache: bool = True            # publish/match full prompt blocks
+    num_state_slots: int = 0             # SSM state-pool slots (0 = max_batch)
+    priority_age_steps: int = 0          # waiting requests gain +1 effective
+                                         # priority every N steps (0 = off) —
+                                         # anti-starvation under sustained
+                                         # high-priority load
 
     @property
     def paged(self) -> PagedCacheConfig:
@@ -74,6 +111,10 @@ class SchedulerConfig:
                                 num_blocks=self.num_blocks,
                                 max_batch=self.max_batch,
                                 max_blocks_per_req=self.max_blocks_per_req)
+
+    @property
+    def state_slots(self) -> int:
+        return self.num_state_slots or self.max_batch
 
 
 def _prefix_keys(target: np.ndarray, block_size: int) -> List[bytes]:
@@ -98,7 +139,8 @@ class _Run:
 
     __slots__ = ("req", "slot", "ctx", "target", "pending", "resume_pending",
                  "state", "order", "priority", "t_add", "chain",
-                 "published_upto", "scale_tag", "snapshot")
+                 "published_upto", "scale_tag", "snapshot", "state_slot",
+                 "step_enqueued")
 
     def __init__(self, req, order: int):
         self.req = req
@@ -115,29 +157,32 @@ class _Run:
         self.published_upto = 0            # blocks of target already indexed
         self.scale_tag: Optional[int] = None   # scale-freeze epoch id
         self.snapshot = None               # slot-scale rows for publishing
+        self.state_slot = -1               # SSM state-pool slot (hybrid only)
+        self.step_enqueued = 0             # scheduler step at enqueue (aging)
 
 
-def _step_impl(params, pool, dec_tokens, dec_bt, dec_lens,
-               pf_tokens, pf_slot, pf_row, pf_ctx, pf_len, *,
+def _step_impl(params, pool, spool, dec_tokens, dec_bt, dec_lens, dec_sslots,
+               pf_tokens, pf_slot, pf_row, pf_ctx, pf_len, pf_sslot, *,
                cfg: ModelConfig, block_size: int,
                do_prefill: bool, do_decode: bool, pf_first: bool):
     """One engine iteration: prefill chunk + decode batch, fused in one jit.
 
     The prefill request and the decode slots are disjoint, so ordering inside
-    the step is arbitrary; both write the (donated) pool.
+    the step is arbitrary; both write the (donated) KV block pool and — for
+    hybrid patterns — the (donated) SSM state slot pool.
     """
     pf_logits: Any = ()
     dec_logits: Any = ()
     if do_prefill:
-        pf_logits, pool = forward_prefill_chunk(
+        pf_logits, pool, spool = forward_prefill_chunk(
             params, pf_tokens, pool, cfg, slot=pf_slot, block_row=pf_row,
             ctx=pf_ctx, chunk_len=pf_len, block_size=block_size,
-            is_first=pf_first)
+            is_first=pf_first, state_pool=spool, state_slot=pf_sslot)
     if do_decode:
-        dec_logits, pool = forward_decode_paged(
+        dec_logits, pool, spool = forward_decode_paged(
             params, dec_tokens, pool, dec_bt, dec_lens, cfg,
-            block_size=block_size)
-    return pf_logits, dec_logits, pool
+            block_size=block_size, state_pool=spool, state_slots=dec_sslots)
+    return pf_logits, dec_logits, pool, spool
 
 
 def _chunk_bucket(c: int, cap: int) -> int:
@@ -161,7 +206,7 @@ def _step_fn_for(cfg: ModelConfig, block_size: int):
     if fn is None:
         fn = jax.jit(partial(_step_impl, cfg=cfg, block_size=block_size),
                      static_argnames=("do_prefill", "do_decode", "pf_first"),
-                     donate_argnums=(1,))
+                     donate_argnums=(1, 2))
         _STEP_FN_CACHE[key] = fn
     return fn
 
@@ -177,14 +222,7 @@ class Scheduler:
     """Paged continuous-batching scheduler (host-side control plane)."""
 
     def __init__(self, params, cfg: ModelConfig, scfg: SchedulerConfig):
-        for i, spec in enumerate(cfg.layer_pattern):
-            if spec.mixer == "ssm":
-                raise NotImplementedError(
-                    f"paged serving does not support ssm mixers (pattern "
-                    f"position {i}); use the dense ServeEngine")
-        if cfg.n_img_patches:
-            raise NotImplementedError(
-                "paged serving does not support prefix-LM image prefixes")
+        ensure_paged_supported(cfg)
         self.params = params
         self.cfg = cfg
         self.scfg = scfg
@@ -192,6 +230,19 @@ class Scheduler:
         self.trash = self.pcfg.trash_block
         self.pool = init_paged_cache(cfg, self.pcfg)
         self.alloc = BlockAllocator(scfg.num_blocks)
+        # hybrid (attention+SSM) patterns: fixed-size conv/SSD state lives in
+        # a slot pool beside the KV block pool; a request holds one slot from
+        # admission to finish (freed at preemption — recompute-on-resume).
+        self._has_ssm = any(s.mixer == "ssm" for s in cfg.layer_pattern)
+        self.state_trash = scfg.state_slots if self._has_ssm else 0
+        self.spool = init_state_pool(cfg, scfg.state_slots) \
+            if self._has_ssm else {}
+        self.state_alloc = StateAllocator(scfg.state_slots) \
+            if self._has_ssm else None
+        # prefix-cache matching maps KV blocks only; SSM state is a running
+        # reduction over the whole prefix and cannot be adopted from a donor,
+        # so hybrid configs must prefill every token themselves
+        self._prefix_on = scfg.prefix_cache and not self._has_ssm
         self.block_tables = np.full(
             (scfg.max_batch, scfg.max_blocks_per_req), self.trash, np.int32)
         self.slots: List[Optional[_Run]] = [None] * scfg.max_batch
@@ -233,6 +284,7 @@ class Scheduler:
         if req.generated is None:
             req.generated = []
         run = _Run(req, self._order)
+        run.step_enqueued = self.stats["steps"]
         if hasattr(req, "t_add"):
             req.t_add = run.t_add
         self._order += 1
@@ -256,8 +308,8 @@ class Scheduler:
         self._cached_sum += self.alloc.cached_frac
 
         args = self._build_args(dec_slots, pf)
-        pf_logits, dec_logits, self.pool = self._step_fn(
-            self.params, self.pool, *args["device"],
+        pf_logits, dec_logits, self.pool, self.spool = self._step_fn(
+            self.params, self.pool, self.spool, *args["device"],
             do_prefill=pf is not None, do_decode=bool(dec_slots),
             pf_first=(pf is None or pf[1] == 0))
 
@@ -356,19 +408,55 @@ class Scheduler:
             "cached_blocks": self.alloc.num_cached,
             "cached_frac_avg": self._cached_sum / steps,
             "cow_copies": self.stats["cow_copies"],
+            # SSM state pool (hybrid patterns; zeros otherwise): slot
+            # occupancy and the INT8 pool's allocated bytes
+            "state_slots": (self.state_alloc.num_slots
+                            if self.state_alloc else 0),
+            "state_slots_active": (self.state_alloc.num_active
+                                   if self.state_alloc else 0),
+            "state_slot_util": (self.state_alloc.utilization
+                                if self.state_alloc else 0.0),
+            "state_pool_nbytes": state_pool_nbytes(self.spool),
         }
 
     # -- admission / scheduling ----------------------------------------------
+    def _eff_priority(self, run: _Run) -> int:
+        """Effective priority of a waiting request: the submitted priority
+        plus one point per ``priority_age_steps`` scheduler steps spent in
+        the queue, so sustained high-priority load cannot starve low-priority
+        requests forever (an SLA-style aging ramp; 0 disables it)."""
+        age = self.scfg.priority_age_steps
+        if not age:
+            return run.priority
+        return run.priority + (self.stats["steps"] - run.step_enqueued) // age
+
     def _admit(self) -> None:
         free = [s for s in range(self.scfg.max_batch) if self.slots[s] is None]
         if not free or not self.waiting:
             return
-        # priority-aware: highest priority first, FCFS (arrival order) within
+        # priority-aware: highest effective priority first, FCFS (arrival
+        # order) within; aging (see _eff_priority) lifts long-waiting
+        # low-priority requests above fresher high-priority arrivals
         self.waiting = deque(sorted(self.waiting,
-                                    key=lambda r: (-r.priority, r.order)))
+                                    key=lambda r: (-self._eff_priority(r),
+                                                   r.order)))
         while free and self.waiting:
+            run = self.waiting[0]
+            if self.state_alloc is not None:
+                got = self.state_alloc.alloc()
+                if got is None:
+                    return               # state pool dry: stop admitting
+                run.state_slot = got
+            self.waiting.popleft()
+            # the aged priority sticks: once admitted, preemption-victim
+            # selection must not see the stale submitted value, or the aged
+            # request would be evicted right back out.  The absorbed age is
+            # consumed — step_enqueued resets so a preempt/re-admit cycle
+            # cannot re-add the same wait twice and ratchet the request
+            # above genuinely higher-priority traffic.
+            run.priority = self._eff_priority(run)
+            run.step_enqueued = self.stats["steps"]
             slot = free.pop(0)
-            run = self.waiting.popleft()
             run.slot = slot
             self.block_tables[slot, :] = self.trash
             self.slots[slot] = run
@@ -386,7 +474,7 @@ class Scheduler:
         run.snapshot = None
         run.chain = []
         self.stats["prefix_query_tokens"] += int(run.target.shape[-1])
-        if not self.scfg.prefix_cache:
+        if not self._prefix_on:
             return
         bs = self.scfg.block_size
         run.chain = _prefix_keys(run.target, bs)
@@ -547,6 +635,7 @@ class Scheduler:
         run = self.slots[s]
         assert run is not None
         self._free_row(s)
+        self._free_state_slot(run)         # recompute-on-resume, like KV
         if run.pending is not None and run.req.generated:
             # cached sequence = prompt + generated[:-1]; the pending token is
             # generated[-1] and is re-fed through decode after the re-prefill
@@ -559,6 +648,10 @@ class Scheduler:
         run.state = "prefill"
         run.slot = -1
         self.slots[s] = None
+        # aging clock restarts at re-queue: time spent *running* is not
+        # waiting, and the wait before the first admission was already
+        # absorbed into run.priority there
+        run.step_enqueued = self.stats["steps"]
         self.waiting.appendleft(run)
         self.stats["preemptions"] += 1
 
@@ -566,6 +659,11 @@ class Scheduler:
         row = self.block_tables[s]
         self.alloc.free([int(b) for b in row if b != self.trash])
         self.block_tables[s, :] = self.trash
+
+    def _free_state_slot(self, run: _Run) -> None:
+        if run.state_slot >= 0:
+            self.state_alloc.free(run.state_slot)
+            run.state_slot = -1
 
     # -- device-step plumbing --------------------------------------------------
     def _build_args(self, dec_slots: List[int], pf) -> Dict[str, Any]:
@@ -575,12 +673,18 @@ class Scheduler:
         dec_toks = np.zeros(tok_shape, np.int32)
         dec_bt = np.full((b, m), self.trash, np.int32)
         dec_lens = np.zeros((b,), np.int32)
+        # inactive decode lanes point at the state pool's trash slot so their
+        # garbage state updates land harmlessly off to the side
+        dec_sslots = np.full((b,), self.state_trash, np.int32)
         for s in dec_slots:
             run = self.slots[s]
             dec_toks[s] = run.pending
             dec_bt[s] = self.block_tables[s]
             dec_lens[s] = run.ctx
+            if run.state_slot >= 0:
+                dec_sslots[s] = run.state_slot
 
+        pf_sslot = self.state_trash
         if pf is not None:
             s, ctx, c, c_pad = pf
             run = self.slots[s]
@@ -589,6 +693,8 @@ class Scheduler:
             widths = [(0, 0)] * (sl.ndim - 1) + [(0, pad)]
             pf_toks = np.pad(sl, widths)[None]
             pf_slot, pf_row, pf_ctx, pf_len = s, self.block_tables[s], ctx, c
+            if run.state_slot >= 0:
+                pf_sslot = run.state_slot
         else:
             width = (1, self.cfg.n_codebooks, 16) if self.cfg.n_codebooks \
                 else (1, 16)
@@ -597,9 +703,10 @@ class Scheduler:
             pf_row = np.full((m,), self.trash, np.int32)
 
         device = (jnp.asarray(dec_toks), jnp.asarray(dec_bt),
-                  jnp.asarray(dec_lens), jnp.asarray(pf_toks),
+                  jnp.asarray(dec_lens), jnp.asarray(dec_sslots),
+                  jnp.asarray(pf_toks),
                   jnp.int32(pf_slot), jnp.asarray(pf_row, dtype=jnp.int32),
-                  jnp.int32(pf_ctx), jnp.int32(pf_len))
+                  jnp.int32(pf_ctx), jnp.int32(pf_len), jnp.int32(pf_sslot))
         return {"device": device}
 
     # -- sampling / retirement -------------------------------------------------
@@ -668,7 +775,7 @@ class Scheduler:
         """Index every newly-completed full block of the prefill target.
         Blocks are immutable from here on (writes CoW away), so a future
         request with the same token prefix can map them directly."""
-        if not self.scfg.prefix_cache:
+        if not self._prefix_on:
             return
         full = min(run.ctx // self.scfg.block_size, len(run.chain))
         if full <= run.published_upto:
@@ -691,6 +798,7 @@ class Scheduler:
         run.req.done = True
         self.finished.append(run.req)
         self._free_row(s)
+        self._free_state_slot(run)
         self.slots[s] = None
 
 

@@ -1,0 +1,182 @@
+"""Quantized SSM state pool: fixed-size slots for hybrid Jamba/Mamba serving.
+
+Attention KV grows with the sequence, so it pages into *blocks*
+(``paged_cache.py``).  SSM state does not grow: one request owns exactly one
+conv tail ``(K-1, conv_dim)`` and one SSD state ``(H, P, N)`` per SSM layer,
+for its whole lifetime.  Paging that through the block pool would waste a
+block per request and complicate the allocator for nothing — what it needs
+is a refcount-free **slot pool**: O(1) alloc at admission, O(1) free at
+finish/preemption, no sharing, no CoW (SSM state is a running reduction over
+the *whole* prefix; two requests can never share it the way they share an
+attention KV block — which is also why the scheduler disables prefix-cache
+matching for hybrid configs).
+
+Storage per SSM pattern position (``R`` = scan-repeat axis, ``S`` = slot
+count, slot ``S`` is a trash slot absorbing writes from inactive decode
+lanes — same trick as the block pool's trash block):
+
+  conv       bf16 (R, S+1, K-1, conv_dim)   causal-conv tail (x|B|C fused)
+  ssd_vals   int8 (R, S+1, H, P, N)         SSD state codes
+  ssd_scale  f32  (R, S+1, H)               per-slot per-head symmetric absmax
+
+The SSD state is stored INT8 with per-(slot, head) symmetric-absmax scales —
+``models.ssm.quantize_ssd_state`` / ``dequantize_ssd_state``, the
+``core/methods/symmetric`` scheme applied to runtime state — a 4x memory cut
+over f32 on the dominant leaf.  Both the dense engine's slot cache and this
+pool round-trip state through the *same* quantize/dequantize ops at every
+step boundary, so hybrid paged serving stays token-for-token equal to the
+dense engine (the golden contract in ``tests/serving/test_state_pool.py``).
+
+Lifecycle mirrors the KV story: a state slot is allocated at admission,
+freed at finish, and freed at preemption (recompute-on-resume rebuilds the
+state from the re-prefill, exactly like the KV blocks).  Conservation
+invariant, checked by ``StateAllocator.check()`` and the property tests:
+``num_free + num_active == num_slots``.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.ssm import dequantize_ssd_state, quantize_ssd_state
+
+
+class StatePoolError(RuntimeError):
+    """Raised on slot-pool misuse: double free or an out-of-range slot."""
+
+
+class StateAllocator:
+    """Refcount-free slot pool: FREE <-> ACTIVE, all transitions O(1).
+
+    Unlike :class:`~repro.serving.paged_cache.BlockAllocator` there is no
+    sharing and no cached tier — SSM state is private to its request and
+    worthless once the request leaves (a preempted request recomputes it).
+    """
+
+    def __init__(self, num_slots: int):
+        if num_slots < 1:
+            raise ValueError("state pool needs at least one slot")
+        self.num_slots = num_slots
+        self._free: List[int] = list(range(num_slots - 1, -1, -1))
+        self._active: List[bool] = [False] * num_slots
+
+    # -- accounting -----------------------------------------------------------
+    @property
+    def num_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def num_active(self) -> int:
+        return self.num_slots - len(self._free)
+
+    @property
+    def utilization(self) -> float:
+        return self.num_active / max(self.num_slots, 1)
+
+    # -- alloc / free ---------------------------------------------------------
+    def alloc(self) -> Optional[int]:
+        """One slot at a time (a request needs exactly one), LIFO recycling
+        (cache-warm first); None when the pool is dry."""
+        if not self._free:
+            return None
+        s = self._free.pop()
+        self._active[s] = True
+        return s
+
+    def free(self, s: int) -> None:
+        if not 0 <= s < self.num_slots:
+            raise StatePoolError(f"free of out-of-range state slot {s} "
+                                 f"(num_slots={self.num_slots})")
+        if not self._active[s]:
+            raise StatePoolError(f"double free of state slot {s}")
+        self._active[s] = False
+        self._free.append(s)
+
+    # -- invariants -----------------------------------------------------------
+    def check(self) -> None:
+        """Assert conservation + free-list consistency (cheap enough for the
+        property tests to call after every op)."""
+        active = sum(1 for a in self._active if a)
+        if len(self._free) + active != self.num_slots:
+            raise StatePoolError(
+                f"conservation violated: free={len(self._free)} "
+                f"active={active} != {self.num_slots}")
+        if len(set(self._free)) != len(self._free):
+            raise StatePoolError("free list holds a duplicate slot")
+        for s in self._free:
+            if self._active[s]:
+                raise StatePoolError(f"free-list slot {s} marked active")
+
+
+# ---------------------------------------------------------------------------
+# Pool allocation
+# ---------------------------------------------------------------------------
+
+def init_state_pool(cfg: ModelConfig, num_slots: int) -> Dict[str, Any]:
+    """Zero-filled state pool pytree: ``{"p{i}": leaves (R, S+1, ...)}`` for
+    every *SSM* pattern position (attention positions live in the block pool).
+    Returns ``{}`` for a pure-attention config."""
+    r = cfg.n_repeats
+    s = num_slots + 1                               # + trash slot
+    k1 = cfg.ssm_conv - 1
+    conv_dim = cfg.d_inner + 2 * cfg.ssm_groups * cfg.ssm_state
+    h, pd, n = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    entries: Dict[str, Any] = {}
+    for i, spec in enumerate(cfg.layer_pattern):
+        if spec.mixer != "ssm":
+            continue
+        entries[f"p{i}"] = {
+            "conv": jnp.zeros((r, s, k1, conv_dim), cfg.compute_dtype),
+            "ssd_vals": jnp.zeros((r, s, h, pd, n), jnp.int8),
+            "ssd_scale": jnp.ones((r, s, h), jnp.float32),
+        }
+    return entries
+
+
+# ---------------------------------------------------------------------------
+# Slot read/write (pure, jit-traceable; entry = one pattern position with the
+# repeat axis already consumed by lax.scan, i.e. leaves (S+1, ...))
+# ---------------------------------------------------------------------------
+
+def read_state(entry: Dict[str, jax.Array], slots: jax.Array) -> Dict[str, jax.Array]:
+    """Gather + dequantize working state for ``slots`` (B,) -> {"conv":
+    (B, K-1, conv_dim), "ssm": (B, H, P, N) f32}.  Trash-slot lanes read
+    garbage that the caller's write sends straight back to the trash slot."""
+    return {"conv": entry["conv"][slots],
+            "ssm": dequantize_ssd_state(entry["ssd_vals"][slots],
+                                        entry["ssd_scale"][slots])}
+
+
+def write_state(entry: Dict[str, jax.Array], slots: jax.Array,
+                state: Dict[str, jax.Array]) -> Dict[str, jax.Array]:
+    """Quantize + scatter working state back into ``slots`` (B,)."""
+    vals, scale = quantize_ssd_state(state["ssm"])
+    return {"conv": entry["conv"].at[slots].set(
+                state["conv"].astype(entry["conv"].dtype)),
+            "ssd_vals": entry["ssd_vals"].at[slots].set(vals),
+            "ssd_scale": entry["ssd_scale"].at[slots].set(scale)}
+
+
+# ---------------------------------------------------------------------------
+# Accounting
+# ---------------------------------------------------------------------------
+
+def state_pool_nbytes(pool) -> int:
+    """Allocated pool bytes (compare against the f32-SSD dense layout)."""
+    from repro.serving.kv_cache import cache_nbytes
+    return cache_nbytes(pool)
+
+
+def dense_f32_state_nbytes(cfg: ModelConfig, num_slots: int) -> int:
+    """What the same slot count would cost with unquantized f32 SSD state
+    (the pre-pool layout) — the bench's baseline column."""
+    n_ssm = sum(1 for s in cfg.layer_pattern if s.mixer == "ssm")
+    r = cfg.n_repeats
+    k1 = cfg.ssm_conv - 1
+    conv_dim = cfg.d_inner + 2 * cfg.ssm_groups * cfg.ssm_state
+    conv = num_slots * r * n_ssm * k1 * conv_dim * jnp.dtype(cfg.compute_dtype).itemsize
+    ssd = num_slots * r * n_ssm * cfg.ssm_heads * cfg.ssm_head_dim * cfg.ssm_state * 4
+    return conv + ssd

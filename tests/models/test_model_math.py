@@ -105,6 +105,53 @@ def test_ssm_prefill_state_continues_decode():
                                rtol=2e-2, atol=2e-2)
 
 
+def test_ssm_prefill_chunk_matches_full_sequence():
+    """Chunked prefill with f32 state carry is position-exact: splitting a
+    sequence at SSD-chunk-aligned boundaries reproduces the full-sequence
+    pass (same chunk_step schedule), and the final carried state continues
+    decode identically.  Right-padding a chunk is a state no-op (dt=0)."""
+    from repro.models.ssm import ssm_prefill_chunk
+    cfg = ModelConfig(name="t", vocab_size=64, d_model=32, n_layers=1,
+                      n_heads=1, d_ff=0, ssm_state=8, ssm_head_dim=16,
+                      ssm_chunk=8, layer_pattern=(LayerSpec("ssm", "none"),))
+    p = ssm_init(KEY, cfg)
+    x = jax.random.normal(jax.random.PRNGKey(7), (1, 32, 32))
+    full, full_state = ssm_apply(p, x, cfg, return_state=True)
+
+    outs, state = [], None
+    for j, c in enumerate([16, 8, 8]):                   # ssm_chunk-aligned
+        lo = sum([16, 8, 8][:j])
+        y, state = ssm_prefill_chunk(p, x[:, lo:lo + c], cfg, state=state,
+                                     chunk_len=jnp.int32(c), is_first=(j == 0))
+        outs.append(y)
+    chunked = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(chunked, np.float32),
+                               np.asarray(full, np.float32),
+                               rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(state["ssm"]),
+                               np.asarray(full_state["ssm"]),
+                               rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(
+        np.asarray(state["conv"], np.float32),
+        np.asarray(full_state["conv"], np.float32), rtol=1e-3, atol=1e-3)
+
+    # right-padded chunk: the pad lanes must not perturb the carried state
+    # (dt=0 no-op) nor the valid positions' outputs
+    y_pad, state_pad = ssm_prefill_chunk(
+        p, jnp.pad(x[:, :16], ((0, 0), (0, 8), (0, 0))), cfg, state=None,
+        chunk_len=jnp.int32(16), is_first=True)
+    y_ref, state_ref = ssm_prefill_chunk(p, x[:, :16], cfg, state=None,
+                                         chunk_len=jnp.int32(16),
+                                         is_first=True)
+    np.testing.assert_allclose(np.asarray(state_pad["ssm"]),
+                               np.asarray(state_ref["ssm"]), atol=1e-6)
+    np.testing.assert_array_equal(
+        np.asarray(state_pad["conv"], np.float32),
+        np.asarray(state_ref["conv"], np.float32))
+    np.testing.assert_allclose(np.asarray(y_pad[:, :16], np.float32),
+                               np.asarray(y_ref, np.float32), atol=1e-2)
+
+
 def test_moe_routing_invariants():
     from repro.models.moe import moe_apply, moe_init
     cfg = ModelConfig(name="t", vocab_size=64, d_model=32, n_layers=1, n_heads=2,

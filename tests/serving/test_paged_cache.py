@@ -253,12 +253,22 @@ def test_pool_shapes_and_trash_block():
     assert pcfg.tokens_per_req == 32
 
 
-def test_pool_rejects_ssm():
-    cfg = ModelConfig(name="s", vocab_size=64, d_model=64, n_layers=1,
-                      n_heads=4, d_ff=128, ssm_state=16,
-                      layer_pattern=(LayerSpec("ssm", "none"),))
-    with pytest.raises(NotImplementedError):
-        init_paged_cache(cfg, PagedCacheConfig())
+def test_pool_skips_ssm_positions():
+    """SSM positions have no sequence axis to page: their fixed-size state
+    lives in the state pool (serving/state_pool.py), so the KV block pool
+    simply omits them — pure-SSM patterns get an empty pool."""
+    cfg = ModelConfig(name="s", vocab_size=64, d_model=64, n_layers=2,
+                      n_heads=4, n_kv_heads=2, d_ff=128, ssm_state=16,
+                      ssm_head_dim=32,
+                      layer_pattern=(LayerSpec("ssm", "none"),
+                                     LayerSpec("attn", "dense")))
+    pool = init_paged_cache(cfg, PagedCacheConfig())
+    assert set(pool) == {"p1"}                     # attention position only
+    pure = ModelConfig(name="m", vocab_size=64, d_model=64, n_layers=1,
+                       n_heads=1, d_ff=0, ssm_state=16, ssm_head_dim=32,
+                       tie_embeddings=True,
+                       layer_pattern=(LayerSpec("ssm", "none"),))
+    assert init_paged_cache(pure, PagedCacheConfig()) == {}
 
 
 def test_pool_scales_with_blocks_not_slots():
