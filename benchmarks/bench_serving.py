@@ -26,6 +26,13 @@ engine at the same traffic: tokens/s side by side, plus the memory column
 that motivates the state pool — allocated INT8 state-pool bytes vs the f32
 SSD layout the dense slot cache would have paid pre-quantization.
 
+The spec sweep (``experiments/bench/serving_spec.csv``) serves a W8A8
+checkpoint on shared-prefix traffic plain and speculatively over
+``gamma ∈ {2, 4}`` × draft bitwidth {int8 self-draft (shares the target's
+W8A8 weights), int4 weight-only re-quantized}: acceptance rate, mean emitted
+tokens per verify step (the >1 signal that speculation actually batches
+decode), tokens/s, and the draft memory bill per point.
+
 Run directly:  PYTHONPATH=src python -m benchmarks.bench_serving [--smoke]
 ``--smoke`` shrinks traffic so the whole bench — replica sweep included —
 finishes in ~30 s (tier-1-loop friendly; scheduler step compiles are shared
@@ -178,7 +185,9 @@ def run(smoke: bool = False):
     emit(rep_rows, "experiments/bench/serving_replicas.csv")  # discard these
     hyb_rows = _hybrid_sweep(smoke)
     emit(hyb_rows, "experiments/bench/serving_hybrid.csv")
-    return rows + rep_rows + hyb_rows
+    spec_rows = _spec_sweep(smoke)
+    emit(spec_rows, "experiments/bench/serving_spec.csv")
+    return rows + rep_rows + hyb_rows + spec_rows
 
 
 def _replica_row(point, eng, wall):
@@ -287,6 +296,53 @@ def _hybrid_sweep(smoke):
              if "ssd_vals" not in v}),
         "wall_s": round(wall, 2),
     })
+    return rows
+
+
+def _spec_sweep(smoke):
+    """Spec-vs-plain decode on shared-prefix traffic: the target serves W8A8
+    weights; the int8 self-draft shares them verbatim (near-total acceptance
+    -> mean emitted tokens/step well above 1), the int4 draft trades
+    acceptance for a 2x-smaller draft.  Same traffic and seed per row, so
+    the tokens/s and decode-step deltas are the speculation win."""
+    from repro.core import QuantPolicy, quantize_tree
+    from repro.serving.spec_decode import SpecConfig
+    params = init_params(SERVE_CFG, jax.random.PRNGKey(3))
+    qparams = quantize_tree(params, QuantPolicy(method="symmetric",
+                                                min_size=2048))
+    n = 6 if smoke else N_REQUESTS
+    max_new = 6 if smoke else MAX_NEW
+    # prompts (<= 64 tokens) prefill in one chunk, so the self-draft's dense
+    # prefill freezes the same K scales as the target's chunk-1 freeze —
+    # the bit-exact regime where acceptance is maximal
+    scfg = dataclasses.replace(SCFG, prefill_chunk=64, token_budget=96,
+                               num_blocks=32)
+    points = [("spec_plain", None)]
+    for gamma in (2, 4):
+        points.append((f"spec_g{gamma}_int8self",
+                       SpecConfig(gamma=gamma, draft_bits=0)))
+        points.append((f"spec_g{gamma}_int4",
+                       SpecConfig(gamma=gamma, draft_bits=4)))
+    rows = []
+    for point, spec in points:
+        rng = np.random.default_rng(23)
+        eng = PagedServeEngine(qparams, SERVE_CFG,
+                               dataclasses.replace(scfg, spec=spec))
+        wall = _drive(eng, _shared_prefix_requests(rng, n, max_new), 4.0)
+        m = eng.metrics()
+        rows.append({
+            "point": point,
+            "gamma": spec.gamma if spec else 0,
+            "draft_bits": (spec.draft_bits or 8) if spec else 0,
+            "tokens_per_s": round(m["tokens_per_s"], 2),
+            "accept_rate": round(m["spec_accept_rate"], 3),
+            "tokens_per_step": round(m["spec_tokens_per_step"], 3)
+                               if spec else 1.0,
+            "decode_steps": m["decode_steps"],
+            "ttft_ms": round(m["ttft_avg_s"] * 1e3, 2),
+            "draft_bytes": m["spec_draft_nbytes"],
+            "wall_s": round(wall, 2),
+        })
     return rows
 
 

@@ -7,8 +7,13 @@ blocks and online EMA scale tracking: the full LLMEasyQuant pipeline on one
 box.  ``--dense`` falls back to the legacy slot-ring engine; ``--replicas N``
 serves through N data-parallel scheduler replicas with prefix-affinity
 routing and synced EMA scales (the paper's multi-worker regime, host-side).
+``--spec-gamma G`` turns on self-speculative decoding: a draft of the same
+checkpoint (``--draft-bits`` weight-only requantization; 0 shares the W8A8
+weights — the INT8 self-draft) proposes G tokens per step and the target
+verifies them losslessly, emitting 1 + accepted tokens per decode round.
 
     PYTHONPATH=src python examples/serve_e2e.py [--requests 12] [--steps 60]
+    PYTHONPATH=src python examples/serve_e2e.py --spec-gamma 4
 """
 import argparse
 import time
@@ -39,10 +44,18 @@ def main():
     ap.add_argument("--replicas", type=int, default=1,
                     help="serve through N data-parallel scheduler replicas "
                          "(prefix-affinity routing, synced EMA scales)")
+    ap.add_argument("--spec-gamma", type=int, default=0,
+                    help="speculative decoding: draft tokens proposed per "
+                         "step (0 = off)")
+    ap.add_argument("--draft-bits", type=int, default=0,
+                    help="weight-only draft bitwidth (0 = share the target's "
+                         "quantized weights — INT8 self-draft)")
     args = ap.parse_args()
     if args.dense and args.replicas > 1:
         ap.error("--dense and --replicas are mutually exclusive (the dense "
                  "slot-ring engine has no replica frontend)")
+    if args.dense and args.spec_gamma:
+        ap.error("--spec-gamma needs the paged engine (drop --dense)")
 
     cfg = ModelConfig(name="serve-demo", vocab_size=512, d_model=128,
                       n_layers=2, n_heads=4, n_kv_heads=2, d_ff=512,
@@ -79,9 +92,13 @@ def main():
           f"{tree_nbytes(qparams)/2**20:.2f} MiB")
 
     # 3) serve
+    spec = None
+    if args.spec_gamma:
+        from repro.serving.spec_decode import SpecConfig
+        spec = SpecConfig(gamma=args.spec_gamma, draft_bits=args.draft_bits)
     scfg = SchedulerConfig(
         block_size=16, num_blocks=48 * max(args.replicas, 1), max_batch=4,
-        max_blocks_per_req=12, prefill_chunk=32, token_budget=64)
+        max_blocks_per_req=12, prefill_chunk=32, token_budget=64, spec=spec)
     if args.dense:
         print(f"[3/4] serving {args.requests} requests (dense, 4 slots) ...")
         eng = ServeEngine(qparams, cfg, EngineConfig(max_slots=4, smax=160))
@@ -92,8 +109,11 @@ def main():
         eng = ReplicatedServeEngine(qparams, cfg, scfg,
                                     ReplicaConfig(n_replicas=args.replicas))
     else:
+        extra = (f", spec-decode gamma={args.spec_gamma} "
+                 f"draft_bits={args.draft_bits or 'shared-int8'}"
+                 if spec else "")
         print(f"[3/4] serving {args.requests} requests "
-              f"(paged INT8 KV blocks, chunked prefill) ...")
+              f"(paged INT8 KV blocks, chunked prefill{extra}) ...")
         eng = PagedServeEngine(qparams, cfg, scfg)
     rng = np.random.default_rng(0)
     t0 = time.perf_counter()
@@ -130,6 +150,13 @@ def main():
               f"{m['cache_util_avg']:.0%} peak {m['cache_util_peak']:.0%}; "
               f"preemptions {m['preemptions']}; "
               f"pool {m['cache_nbytes']/2**20:.2f} MiB")
+    if spec is not None:                 # single-engine AND replica fleets
+        m = eng.metrics()
+        print(f"      spec decode: accept rate "
+              f"{m['spec_accept_rate']:.0%}, "
+              f"{m['spec_tokens_per_step']:.2f} tokens/step over "
+              f"{m['spec_rounds']} verify rounds; draft "
+              f"{m['spec_draft_nbytes']/2**20:.2f} MiB")
     for r in done[:3]:
         print(f"      req {r.uid}: prompt {len(r.prompt)} toks -> {r.generated[:8]}...")
 

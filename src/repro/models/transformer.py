@@ -589,6 +589,118 @@ def forward_decode_paged(params, tokens_t, pool, block_tables, lengths,
     return logits, new_pool, new_spool
 
 
+def _block_verify_paged(p_blk, h, pool_blk, cfg: ModelConfig, *,
+                        block_tables, lengths, vlens, block_size: int):
+    """Multi-token verify pass over one pattern repeat (speculative decoding).
+
+    h: (B, G, D) — position j of lane b sits at sequence position
+    ``lengths[b] + j``.  Per layer the pass appends all G tokens' KV into the
+    block pool with the *decode* quantization ops (frozen per-slot K affine,
+    fresh per-token V scales), then computes each position's attention with
+    the *decode* kernel at its own causal length — op-for-op identical to G
+    sequential ``_block_decode_paged`` steps, which is what makes greedy
+    spec-decode output bit-identical to plain paged decode.  Positions
+    ``j >= vlens[b]`` write to the trash block (their logits are ignored by
+    the host); entries past each query's causal length are masked by the
+    attention's length argument, so the pre-written "future" tokens are
+    invisible to earlier positions.
+    """
+    new_pool: Dict[str, Any] = {}
+    b, g = h.shape[0], h.shape[1]
+    positions = lengths[:, None] + jnp.arange(g)[None, :]          # (B, G)
+
+    for i, spec in enumerate(cfg.layer_pattern):
+        p = p_blk[f"p{i}"]
+        x = rms_norm(h, p["norm_mix"], cfg.norm_eps)
+        if spec.mixer == "attn":
+            entry = pool_blk[f"p{i}"]
+            q, k, v = qkv_project(p["attn"], x, cfg, positions)
+            trash = entry["k_vals"].shape[0] - 1       # (N+1, T, KH, D)
+            for j in range(g):
+                bt_j = jnp.where((j < vlens)[:, None], block_tables, trash)
+                entry = pgc.gqa_paged_append(entry, k[:, j], v[:, j],
+                                             bt_j, lengths + j,
+                                             block_size=block_size)
+            outs = [ops.paged_decode_attention(
+                        q[:, j], entry["k_vals"], entry["k_scale"],
+                        entry["k_zero"], entry["v_vals"], entry["v_scale"],
+                        entry["v_zero"], block_tables, lengths + j + 1)
+                    for j in range(g)]
+            out = jnp.stack(outs, axis=1)                          # (B,G,H,D)
+            mix = qdot(out.astype(x.dtype).reshape(b, g, -1), p["attn"]["wo"])
+            new_pool[f"p{i}"] = entry
+        elif spec.mixer == "mla":
+            entry = pool_blk[f"p{i}"]
+            q_nope, q_rope = mla_queries(p["attn"], x, cfg, positions)
+            c_t, kr_t = mla_latent(p["attn"], x, cfg, positions)
+            trash = entry["c_vals"].shape[0] - 1       # (N+1, T, rkv)
+            for j in range(g):
+                bt_j = jnp.where((j < vlens)[:, None], block_tables, trash)
+                entry = pgc.mla_paged_append(entry, c_t[:, j], kr_t[:, j],
+                                             bt_j, lengths + j,
+                                             block_size=block_size)
+            gath = pgc.mla_gather_batch(entry, block_tables)
+            w_uk, w_uv = mla_absorbed_weights(p["attn"], cfg)
+            outs = [mla_decode_ref(q_nope[:, j], q_rope[:, j],
+                                   gath["c_vals"], gath["c_scale"],
+                                   gath["c_zero"], gath["kr_vals"],
+                                   gath["kr_scale"], gath["kr_zero"],
+                                   w_uk, w_uv, lengths + j + 1, cfg)
+                    for j in range(g)]
+            out = jnp.stack(outs, axis=1)
+            mix = qdot(out.astype(x.dtype).reshape(b, g, -1), p["attn"]["wo"])
+            new_pool[f"p{i}"] = entry
+        else:
+            raise NotImplementedError(
+                "spec-decode verify has no SSM rewind path; gate via "
+                "spec_decode.ensure_spec_supported before building the step")
+        h = h + mix.astype(h.dtype)
+
+        if spec.ffn != "none":
+            y = rms_norm(h, p["norm_ffn"], cfg.norm_eps)
+            if spec.ffn == "dense":
+                f = swiglu_apply(p["ffn"], y, cfg.act_fn)
+            else:
+                f, _ = moe_apply(p["moe"], y, cfg)
+            h = h + f.astype(h.dtype)
+    return h, new_pool
+
+
+def forward_verify_paged(params, tokens, pool, block_tables, lengths, vlens,
+                         cfg: ModelConfig, *, block_size: int):
+    """Batched multi-token verify over the block pool (speculative decoding).
+
+    tokens: (B, G) int32 — column 0 is each lane's pending token, columns
+    1..G-1 the draft proposals; block_tables: (B, M); lengths: (B,) live
+    token counts (token j is appended at ``lengths[b] + j``); vlens: (B,)
+    per-lane verify span — positions ``j >= vlens[b]`` write to the trash
+    block (lanes near their output budget, hot-sampled lanes, inactive
+    lanes with vlen 0).
+
+    Writes KV for every in-span position, then computes each position's
+    logits against its exact causal prefix — the caller accepts the longest
+    matching draft prefix and rewinds ``lengths`` / block-table tails past
+    it (``paged_cache.rewind_tail``).  Pure-attention patterns only (see
+    ``spec_decode.spec_unsupported_reason``).
+
+    -> (logits (B, G, V), new pool).
+    """
+    dt = cfg.compute_dtype
+    h = params["embed"]["tok"][tokens].astype(dt)          # (B, G, D)
+
+    def body(h, xs):
+        p_blk, pool_blk = xs
+        h, new_pool = _block_verify_paged(
+            p_blk, h, pool_blk, cfg, block_tables=block_tables,
+            lengths=lengths, vlens=vlens, block_size=block_size)
+        return h, new_pool
+
+    h, new_pool = jax.lax.scan(body, h, (params["layers"], pool))
+    h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+    logits = logits_head(params, h, cfg)                   # (B, G, V)
+    return logits, new_pool
+
+
 # ---------------------------------------------------------------------------
 # Loss
 # ---------------------------------------------------------------------------

@@ -16,17 +16,24 @@ Two cache backends share the SimQuant INT8 quantization math:
 scheduler replicas over sharded block pools (and state-slot budgets) with
 pluggable request routing (round-robin / least-loaded / prefix-affinity)
 and periodically synced EMA quantization scales (distributed/scale_sync).
+
+``spec_decode`` trades draft compute for decode steps: a low-bit draft of
+the same checkpoint (re-quantized through ``core/methods`` and/or
+layer-truncated) proposes tokens that the INT8 target verifies in one
+batched pass over the block pool — greedy output stays token-for-token
+identical to plain decode while emitting ``1 + accepted`` tokens per step.
 """
 from . import kv_cache
 
 __all__ = ["kv_cache", "paged_cache", "state_pool", "engine", "scheduler",
-           "replica"]
+           "replica", "spec_decode"]
 
 
 # lazy: the paged/engine modules pull in the models package (heavier);
 # kv_cache only touches models.config, which the seed already paid
 def __getattr__(name):
-    if name in ("paged_cache", "state_pool", "engine", "scheduler", "replica"):
+    if name in ("paged_cache", "state_pool", "engine", "scheduler", "replica",
+                "spec_decode"):
         import importlib
         return importlib.import_module(f".{name}", __name__)
     raise AttributeError(name)

@@ -292,6 +292,14 @@ class PagedServeEngine:
     genuinely unsupported layouts are rejected, by the capability check
     shared with :class:`~repro.serving.replica.ReplicatedServeEngine`
     (``scheduler.paged_unsupported_reason``).
+
+    Setting ``SchedulerConfig.spec`` (a :class:`~repro.serving.spec_decode.
+    SpecConfig`) turns on self-speculative decoding: a low-bit draft of the
+    same checkpoint proposes ``gamma`` tokens per request and the target
+    verifies them in one batched pass, emitting ``1 + accepted`` tokens per
+    step with greedy output token-for-token identical to plain decode.
+    ``metrics()['spec_accept_rate']`` / ``['spec_tokens_per_step']`` report
+    the win; ``draft_nbytes()`` the memory bill.
     """
 
     def __init__(self, params, cfg: ModelConfig, scfg=None):
@@ -332,3 +340,9 @@ class PagedServeEngine:
         """Allocated SSM state-pool bytes (0 for pure-attention configs)."""
         from repro.serving.state_pool import state_pool_nbytes
         return state_pool_nbytes(self.scheduler.spool)
+
+    def draft_nbytes(self) -> int:
+        """Speculative-decoding draft bytes: weights + dense KV lanes (0
+        when ``SchedulerConfig.spec`` is unset)."""
+        d = self.scheduler.draft
+        return d.nbytes() if d is not None else 0

@@ -516,6 +516,38 @@ def mla_gather_batch(entry: Dict[str, jax.Array], block_tables: jax.Array):
     return out
 
 
+def rewind_tail(alloc: "BlockAllocator", block_row: np.ndarray,
+                keep_tokens: int, *, block_size: int, trash: int) -> int:
+    """Rewind a request's block-table row to ``keep_tokens`` live tokens,
+    releasing every tail block past the last kept one (speculative-decoding
+    rejection path; also usable for any truncation).
+
+    Only *references* are dropped — the release is a ``decref``, so the
+    rewind is CoW-safe by construction: a block another table row still maps
+    (shared prefix) just loses this row's reference, and a published block
+    survives as a reclaimable CACHED prefix entry.  The conservation
+    invariant ``free + cached + active == num_blocks`` therefore holds across
+    any propose/accept/reject sequence (property-tested).  The partial block
+    containing the new tail is *kept* — its stale codes past ``keep_tokens``
+    are overwritten in place by the next append and are never read (attention
+    masks by length); writers still CoW away from it if it is shared or
+    published, exactly like any other append.
+
+    Returns the number of blocks released.
+    """
+    keep_blocks = 0 if keep_tokens <= 0 else \
+        (keep_tokens + block_size - 1) // block_size
+    freed = 0
+    for bi in range(keep_blocks, block_row.shape[0]):
+        b = int(block_row[bi])
+        if b == trash:
+            continue
+        alloc.decref(b)
+        block_row[bi] = trash
+        freed += 1
+    return freed
+
+
 # ---------------------------------------------------------------------------
 # Copy-on-write / prefix-hit device plumbing
 # ---------------------------------------------------------------------------

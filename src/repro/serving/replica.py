@@ -31,6 +31,13 @@ a *shard* of the global block budget, behind the familiar single-engine
   * **Drain / re-route** — ``drain_replica(i)`` quiesces one replica through
     the scheduler's drain hook and re-routes its not-yet-admitted requests to
     the survivors, the building block for elastic replica counts.
+  * **Speculative decoding** — a ``SchedulerConfig.spec`` setting is applied
+    per replica (each scheduler owns a draft-proposer lane set; the draft's
+    jitted fns are shared through the module-level cache, and ``draft_bits=0``
+    self-drafts share the target weights by reference).  ``metrics()``
+    aggregates acceptance rate and tokens-per-step as ratios of summed
+    counters — weighted by the tokens each replica actually served, never a
+    naive mean of per-replica rates.
 """
 from __future__ import annotations
 
@@ -106,11 +113,19 @@ class ReplicatedServeEngine:
                        if scfg.num_state_slots else
                        [0] * rcfg.n_replicas)
         self.state_slot_shards = slot_shards
-        self.replicas = [
-            Scheduler(params, cfg,
-                      dataclasses.replace(scfg, num_blocks=nb,
-                                          num_state_slots=ss))
-            for nb, ss in zip(self.shards, slot_shards)]
+        # replica 0 builds the (possibly re-quantized / truncated) draft
+        # tree; the rest inject it by reference — one quantization pass and
+        # one copy of the draft weights per fleet, not per replica
+        self.replicas = []
+        draft_built = None
+        for nb, ss in zip(self.shards, slot_shards):
+            rep = Scheduler(params, cfg,
+                            dataclasses.replace(scfg, num_blocks=nb,
+                                                num_state_slots=ss),
+                            draft_built=draft_built)
+            if rep.draft is not None and draft_built is None:
+                draft_built = (rep.draft.dparams, rep.draft.dcfg)
+            self.replicas.append(rep)
         self.routed: Dict[Any, int] = {}     # uid -> replica index
         self._rr = 0                         # round-robin cursor
         self._steps = 0
@@ -276,6 +291,15 @@ class ReplicatedServeEngine:
         done = [req for r in self.replicas for req in r.finished]
         hit = sum(r.stats["prefix_hit_tokens"] for r in self.replicas)
         query = sum(r.stats["prefix_query_tokens"] for r in self.replicas)
+        # speculative-decoding aggregates are ratios of summed counters —
+        # weighted by the tokens each replica actually proposed/emitted.  A
+        # naive mean of per-replica rates would let an idle replica's 0/0
+        # (or a lightly-loaded one's lucky streak) drag the fleet number
+        # away from what the traffic experienced.
+        proposed = sum(r.stats["spec_proposed"] for r in self.replicas)
+        accepted = sum(r.stats["spec_accepted"] for r in self.replicas)
+        emitted = sum(r.stats["spec_emitted"] for r in self.replicas)
+        lane_rounds = sum(r.stats["spec_lane_rounds"] for r in self.replicas)
         return {
             "replicas": self.rcfg.n_replicas,
             "requests_finished": len(done),
@@ -287,6 +311,10 @@ class ReplicatedServeEngine:
             "prefix_hit_tokens": hit,
             "prefix_hit_rate": hit / max(query, 1),
             "preemptions": sum(r.stats["preemptions"] for r in self.replicas),
+            "spec_rounds": sum(r.stats["spec_rounds"] for r in self.replicas),
+            "spec_accept_rate": accepted / max(proposed, 1),
+            "spec_tokens_per_step": emitted / max(lane_rounds, 1),
+            "spec_draft_nbytes": sum(m["spec_draft_nbytes"] for m in per),
             "cache_nbytes": sum(m["cache_nbytes"] for m in per),
             "state_pool_nbytes": sum(m["state_pool_nbytes"] for m in per),
             "scale_syncs": self.scale_syncs,

@@ -37,10 +37,25 @@ synchronous slot loop:
     at preemption (recompute-on-resume, like KV).  Prefix-cache matching is
     disabled for hybrid configs: cached KV blocks cannot reconstruct the SSM
     state at the matched boundary, so every token must prefill.
+  * **speculative decoding** — with ``SchedulerConfig.spec`` set, a low-bit
+    draft of the same checkpoint (``serving/spec_decode.py``) proposes
+    ``gamma`` tokens per decoding request; the target verifies all
+    ``gamma + 1`` positions in one batched pass over the block pool and the
+    scheduler accepts the longest matching prefix, rewinding ``ctx`` and the
+    block-table tail past the rejections (``paged_cache.rewind_tail``).
+    Greedy verification emits exactly the tokens plain decode would —
+    spec-decode is a throughput knob, never a correctness knob.
+  * **TTFT-aware prefill scheduling** — with ``ttft_target_steps`` set, a
+    prefilling request whose queue age crosses the target takes the prefill
+    turn (shortest-remaining-first among the overdue, so the late request
+    closest to its first token wins), and the chunk budget shrinks to
+    ``ttft_chunk`` while *other* requests are overdue, bounding how long one
+    big chunk can delay the next scheduling decision.
 
 The jitted step has three static shapes: decode width B, prefill-chunk
 bucket C, and the block-table width M — bounded recompilation, same
-philosophy as the dense engine's bucketed prefill.
+philosophy as the dense engine's bucketed prefill.  Spec decoding adds one
+more: the verify width ``gamma + 1``.
 """
 from __future__ import annotations
 
@@ -57,11 +72,15 @@ import numpy as np
 
 from repro.core.online import EmaScaleState
 from repro.models.config import ModelConfig
-from repro.models.transformer import forward_decode_paged, forward_prefill_chunk
+from repro.models.transformer import (forward_decode_paged,
+                                      forward_prefill_chunk,
+                                      forward_verify_paged)
 from repro.serving.paged_cache import (BlockAllocator, PagedCacheConfig,
                                        copy_pool_block, init_paged_cache,
                                        paged_cache_nbytes, restore_slot_scales,
-                                       snapshot_slot_scales)
+                                       rewind_tail, snapshot_slot_scales)
+from repro.serving.spec_decode import (DraftProposer, SpecConfig,
+                                       ensure_spec_supported)
 from repro.serving.state_pool import (StateAllocator, init_state_pool,
                                       state_pool_nbytes)
 
@@ -104,6 +123,14 @@ class SchedulerConfig:
                                          # priority every N steps (0 = off) —
                                          # anti-starvation under sustained
                                          # high-priority load
+    spec: Optional[SpecConfig] = None    # speculative decoding: low-bit draft
+                                         # + multi-token verify (None = off)
+    ttft_target_steps: int = 0           # TTFT-aware prefill scheduling: a
+                                         # request older than this many steps
+                                         # takes the prefill turn (SRJF among
+                                         # the overdue); 0 = off
+    ttft_chunk: int = 16                 # shrunken chunk budget while other
+                                         # requests are past the TTFT target
 
     @property
     def paged(self) -> PagedCacheConfig:
@@ -140,7 +167,7 @@ class _Run:
     __slots__ = ("req", "slot", "ctx", "target", "pending", "resume_pending",
                  "state", "order", "priority", "t_add", "chain",
                  "published_upto", "scale_tag", "snapshot", "state_slot",
-                 "step_enqueued")
+                 "step_enqueued", "step_added")
 
     def __init__(self, req, order: int):
         self.req = req
@@ -159,6 +186,8 @@ class _Run:
         self.snapshot = None               # slot-scale rows for publishing
         self.state_slot = -1               # SSM state-pool slot (hybrid only)
         self.step_enqueued = 0             # scheduler step at enqueue (aging)
+        self.step_added = 0                # step at add_request — never reset
+                                           # (TTFT pressure measures total age)
 
 
 def _step_impl(params, pool, spool, dec_tokens, dec_bt, dec_lens, dec_sslots,
@@ -183,6 +212,27 @@ def _step_impl(params, pool, spool, dec_tokens, dec_bt, dec_lens, dec_sslots,
             params, dec_tokens, pool, dec_bt, dec_lens, cfg,
             block_size=block_size, state_pool=spool, state_slots=dec_sslots)
     return pf_logits, dec_logits, pool, spool
+
+
+def _spec_step_impl(params, pool, spool, dec_tokens, dec_bt, dec_lens,
+                    dec_vlens, pf_tokens, pf_slot, pf_row, pf_ctx, pf_len,
+                    pf_sslot, *, cfg: ModelConfig, block_size: int,
+                    do_prefill: bool, do_decode: bool, pf_first: bool):
+    """Speculative-decoding variant of the fused step: the decode half is a
+    batched multi-token verify (``forward_verify_paged``) over the drafts in
+    ``dec_tokens`` columns 1.., with column 0 each lane's pending token."""
+    pf_logits: Any = ()
+    ver_logits: Any = ()
+    if do_prefill:
+        pf_logits, pool, spool = forward_prefill_chunk(
+            params, pf_tokens, pool, cfg, slot=pf_slot, block_row=pf_row,
+            ctx=pf_ctx, chunk_len=pf_len, block_size=block_size,
+            is_first=pf_first, state_pool=spool, state_slot=pf_sslot)
+    if do_decode:
+        ver_logits, pool = forward_verify_paged(
+            params, dec_tokens, pool, dec_bt, dec_lens, dec_vlens, cfg,
+            block_size=block_size)
+    return pf_logits, ver_logits, pool, spool
 
 
 def _chunk_bucket(c: int, cap: int) -> int:
@@ -211,6 +261,17 @@ def _step_fn_for(cfg: ModelConfig, block_size: int):
     return fn
 
 
+def _spec_fn_for(cfg: ModelConfig, block_size: int):
+    key = (cfg, block_size, "spec")
+    fn = _STEP_FN_CACHE.get(key)
+    if fn is None:
+        fn = jax.jit(partial(_spec_step_impl, cfg=cfg, block_size=block_size),
+                     static_argnames=("do_prefill", "do_decode", "pf_first"),
+                     donate_argnums=(1, 2))
+        _STEP_FN_CACHE[key] = fn
+    return fn
+
+
 def _shared_cow_fn():
     global _COW_FN
     if _COW_FN is None:
@@ -221,7 +282,12 @@ def _shared_cow_fn():
 class Scheduler:
     """Paged continuous-batching scheduler (host-side control plane)."""
 
-    def __init__(self, params, cfg: ModelConfig, scfg: SchedulerConfig):
+    def __init__(self, params, cfg: ModelConfig, scfg: SchedulerConfig, *,
+                 draft_built=None):
+        """``draft_built``: optional pre-built draft ``(params, cfg)`` pair
+        handed to the proposer so replica fleets quantize the draft once
+        (see ``ReplicatedServeEngine``); ignored when ``scfg.spec`` is
+        unset."""
         ensure_paged_supported(cfg)
         self.params = params
         self.cfg = cfg
@@ -254,11 +320,28 @@ class Scheduler:
         self.scale_state = EmaScaleState.init()
         self._step_fn = _step_fn_for(cfg, scfg.block_size)
         self._cow_fn = _shared_cow_fn()
+        # speculative decoding: the draft proposer holds one dense-cache lane
+        # per decode slot; the verify step replaces the one-token decode
+        self.spec = scfg.spec
+        if self.spec is not None:
+            ensure_spec_supported(cfg)
+            cap = min(self.pcfg.tokens_per_req,
+                      scfg.num_blocks * scfg.block_size)
+            self.draft = DraftProposer(params, cfg, self.spec,
+                                       max_batch=scfg.max_batch, capacity=cap,
+                                       built=draft_built)
+            self._spec_fn = _spec_fn_for(cfg, scfg.block_size)
+        else:
+            self.draft = None
+            self._spec_fn = None
         self.stats = {"prefill_tokens": 0, "prefill_chunks": 0,
                       "decode_steps": 0, "decode_tokens": 0, "first_tokens": 0,
                       "preemptions": 0, "steps": 0, "failed_alloc": 0,
                       "prefix_hits": 0, "prefix_hit_tokens": 0,
-                      "prefix_query_tokens": 0, "cow_copies": 0}
+                      "prefix_query_tokens": 0, "cow_copies": 0,
+                      "spec_rounds": 0, "spec_lane_rounds": 0,
+                      "spec_proposed": 0, "spec_accepted": 0,
+                      "spec_emitted": 0}
         self._util_sum = 0.0
         self._util_peak = 0.0
         self._cached_sum = 0.0
@@ -285,21 +368,33 @@ class Scheduler:
             req.generated = []
         run = _Run(req, self._order)
         run.step_enqueued = self.stats["steps"]
+        run.step_added = self.stats["steps"]
         if hasattr(req, "t_add"):
             req.t_add = run.t_add
         self._order += 1
         self.waiting.append(run)
 
     def step(self) -> bool:
-        """One iteration: admit -> schedule decode + one prefill chunk ->
-        run the fused jitted step -> sample/retire."""
+        """One iteration: admit -> schedule decode (or a speculative verify
+        round) + one prefill chunk -> run the fused jitted step ->
+        sample/retire."""
         if self._t_start is None:
             self._t_start = time.perf_counter()
         self._admit()
         dec_slots = self._live_decode(self._schedule_decode())
-        pf = self._schedule_prefill(len(dec_slots))
+        vlens = (self._schedule_spec(dec_slots)
+                 if self.spec is not None and dec_slots else None)
+        n_dec = sum(vlens.values()) if vlens else len(dec_slots)
+        pf = self._schedule_prefill(n_dec)
         # prefill scheduling can also preempt (CoW allocation), so re-filter
         dec_slots = self._live_decode(dec_slots)
+        if vlens is not None:
+            vlens = {s: v for s, v in vlens.items() if s in set(dec_slots)}
+            if vlens and max(vlens.values()) == 1:
+                # every span degenerated (all-hot lanes, last tokens, pool
+                # dry): a 1-token verify IS plain decode — skip the draft
+                # proposal and the wide verify entirely
+                vlens = None
         if not dec_slots and pf is None:
             return False
         self.stats["steps"] += 1
@@ -307,14 +402,22 @@ class Scheduler:
         self._util_peak = max(self._util_peak, self.alloc.utilization)
         self._cached_sum += self.alloc.cached_frac
 
-        args = self._build_args(dec_slots, pf)
-        pf_logits, dec_logits, self.pool, self.spool = self._step_fn(
-            self.params, self.pool, self.spool, *args["device"],
-            do_prefill=pf is not None, do_decode=bool(dec_slots),
-            pf_first=(pf is None or pf[1] == 0))
-
-        if dec_slots:
-            self._consume_decode(dec_slots, dec_logits)
+        if dec_slots and vlens:
+            drafts = self._propose_drafts(dec_slots, vlens)
+            args = self._build_spec_args(dec_slots, vlens, drafts, pf)
+            pf_logits, ver_logits, self.pool, self.spool = self._spec_fn(
+                self.params, self.pool, self.spool, *args["device"],
+                do_prefill=pf is not None, do_decode=True,
+                pf_first=(pf is None or pf[1] == 0))
+            self._consume_spec(dec_slots, vlens, drafts, ver_logits)
+        else:
+            args = self._build_args(dec_slots, pf)
+            pf_logits, dec_logits, self.pool, self.spool = self._step_fn(
+                self.params, self.pool, self.spool, *args["device"],
+                do_prefill=pf is not None, do_decode=bool(dec_slots),
+                pf_first=(pf is None or pf[1] == 0))
+            if dec_slots:
+                self._consume_decode(dec_slots, dec_logits)
         if pf is not None:
             self._consume_prefill(pf, pf_logits)
         self._t_last = time.perf_counter()
@@ -408,6 +511,17 @@ class Scheduler:
             "cached_blocks": self.alloc.num_cached,
             "cached_frac_avg": self._cached_sum / steps,
             "cow_copies": self.stats["cow_copies"],
+            # speculative decoding (zeros with spec=None): acceptance rate
+            # over proposed draft tokens, mean emitted tokens per verified
+            # lane-round (the >1 decode-speedup signal), and the draft's
+            # weight+cache memory bill
+            "spec_rounds": self.stats["spec_rounds"],
+            "spec_accept_rate": (self.stats["spec_accepted"] /
+                                 max(self.stats["spec_proposed"], 1)),
+            "spec_tokens_per_step": (self.stats["spec_emitted"] /
+                                     max(self.stats["spec_lane_rounds"], 1)),
+            "spec_draft_nbytes": (self.draft.nbytes()
+                                  if self.draft is not None else 0),
             # SSM state pool (hybrid patterns; zeros otherwise): slot
             # occupancy and the INT8 pool's allocated bytes
             "state_slots": (self.state_alloc.num_slots
@@ -527,10 +641,24 @@ class Scheduler:
             out.append(s)
         return out
 
+    def _queue_age(self, run: _Run) -> int:
+        """Scheduler steps since ``add_request`` — the TTFT-pressure clock.
+        Unlike the aging clock (``step_enqueued``) this is never reset: a
+        preempted request is still late from the caller's point of view."""
+        return self.stats["steps"] - run.step_added
+
     def _schedule_prefill(self, n_decode: int):
-        """Pick the highest-priority (then oldest) prefilling request and
-        size its next chunk under the token budget and block availability.
-        -> (slot, ctx, c, c_pad)"""
+        """Pick the prefilling request for this step's chunk and size the
+        chunk under the token budget and block availability.
+
+        Default pick: highest priority, then oldest (FCFS).  With
+        ``ttft_target_steps`` set, a request whose queue age crossed the
+        target takes the turn instead — shortest-remaining-prefill-first
+        among the overdue, so the late request closest to emitting its first
+        token wins, then yields back.  While *other* requests (prefilling or
+        still queued) are overdue, the chunk budget shrinks to ``ttft_chunk``
+        so one big chunk cannot delay the next scheduling decision by a full
+        ``prefill_chunk`` of compute.  -> (slot, ctx, c, c_pad)"""
         cand = sorted((s for s, r in enumerate(self.slots)
                        if r is not None and r.state == "prefill"),
                       key=lambda s: (-self.slots[s].priority,
@@ -538,6 +666,17 @@ class Scheduler:
         if not cand:
             return None
         s = cand[0]
+        shrink = False
+        tgt = self.scfg.ttft_target_steps
+        if tgt:
+            overdue = [c_ for c_ in cand
+                       if self._queue_age(self.slots[c_]) >= tgt]
+            if overdue:
+                s = min(overdue, key=lambda c_: (
+                    int(self.slots[c_].target.shape[-1]) - self.slots[c_].ctx,
+                    -self.slots[c_].priority, self.slots[c_].order))
+            shrink = (any(c_ != s for c_ in overdue) or
+                      any(self._queue_age(r) >= tgt for r in self.waiting))
         run = self.slots[s]
         remaining = run.target.shape[-1] - run.ctx
         budget = self.scfg.token_budget - n_decode
@@ -546,11 +685,117 @@ class Scheduler:
         # honor the budget even on prefill-only steps (clamped to >= 1 so a
         # degenerate token_budget cannot deadlock the queue)
         c = min(remaining, self.scfg.prefill_chunk, max(budget, 1))
+        if shrink:
+            c = min(c, max(self.scfg.ttft_chunk, 1))
         c = self._fit_chunk_blocks(s, run, c, allow_preempt=(n_decode == 0))
         if c <= 0:
             return None
         c_pad = _chunk_bucket(c, self.scfg.prefill_chunk)
         return (s, run.ctx, c, c_pad)
+
+    # -- speculative decoding -------------------------------------------------
+    def _schedule_spec(self, dec_slots: List[int]) -> Dict[int, int]:
+        """Size each decode lane's verify span: 1..gamma+1 tokens.
+
+        ``_schedule_decode`` already guaranteed a writable block for each
+        lane's next token; the extra speculative positions are opportunistic
+        — backed by plain allocation, *never* by preemption (evicting live
+        work to speculate would be a net loss), and the span shrinks to what
+        the pool can cover.  Hot-sampled lanes verify exactly one token
+        (greedy acceptance is only lossless for greedy lanes), which makes
+        their round identical to plain decode."""
+        g1 = self.spec.gamma + 1
+        t = self.scfg.block_size
+        vlens: Dict[int, int] = {}
+        for s in dec_slots:
+            run = self.slots[s]
+            remaining = run.req.max_new_tokens - len(run.req.generated)
+            want = 1 if run.req.temperature > 0 else \
+                max(1, min(g1, remaining))
+            lo, hi = run.ctx // t, (run.ctx + want - 1) // t
+            for bi in range(lo + 1, hi + 1):
+                if bi >= self.scfg.max_blocks_per_req:
+                    want = min(want, bi * t - run.ctx)     # row exhausted
+                    break
+                if self.block_tables[s, bi] != self.trash:
+                    continue                               # already backed
+                got = self.alloc.alloc(1)
+                if got is None:
+                    want = min(want, bi * t - run.ctx)     # pool dry: shrink
+                    break
+                self.block_tables[s, bi] = got[0]
+            vlens[s] = max(want, 1)
+        return vlens
+
+    def _propose_drafts(self, dec_slots: List[int],
+                        vlens: Dict[int, int]) -> np.ndarray:
+        """Align each speculating lane's draft cache with the target context
+        and run one batched gamma-token proposal.  Lanes pinned to a 1-token
+        span (hot-sampled) never consume their proposals, so they get no
+        draft lane at all — no sequence rebuild, no dense draft prefill."""
+        spec_slots = [s for s in dec_slots if vlens[s] > 1]
+        pending: Dict[int, int] = {}
+        for s in spec_slots:
+            run = self.slots[s]
+            if not self.draft.aligned(s, run.ctx):
+                # only misaligned lanes (fresh admission, preemption resume)
+                # pay the O(ctx) sequence rebuild + dense prefill
+                seq = _with_generated(np.asarray(run.req.prompt),
+                                      run.req.generated)
+                self.draft.ensure(s, seq, run.ctx)
+            pending[s] = run.pending
+        return self.draft.propose(spec_slots, pending)
+
+    def _consume_spec(self, dec_slots: List[int], vlens: Dict[int, int],
+                      drafts: np.ndarray, ver_logits) -> None:
+        """Accept the longest matching draft prefix per lane and emit.
+
+        Position 0's logits are what plain decode would have produced for
+        the pending token, so its argmax (or temperature sample, for hot
+        lanes) is always emitted; draft token j is accepted iff it equals
+        the target's choice at position j, unlocking position j+1's logits.
+        Rejected tail positions are rolled back: ``ctx`` simply stops at the
+        accepted boundary and ``rewind_tail`` releases block-table tail
+        blocks past it (CoW-safe decref; conservation property-tested)."""
+        temps = np.zeros((self.scfg.max_batch,), np.float32)
+        for s in dec_slots:
+            temps[s] = self.slots[s].req.temperature
+        first = np.asarray(self._sample(ver_logits[:, 0], temps))
+        greedy = np.asarray(jnp.argmax(ver_logits, axis=-1))   # (B, G)
+        self.stats["decode_steps"] += 1
+        self.stats["spec_rounds"] += 1
+        for s in dec_slots:
+            run = self.slots[s]
+            v = vlens[s]
+            emits = [first[s].tolist()]
+            k = 0                          # accepted draft tokens
+            while k < v - 1 and int(drafts[s, k]) == emits[-1]:
+                k += 1
+                emits.append(int(greedy[s, k]))
+            self.stats["spec_lane_rounds"] += 1
+            self.stats["spec_proposed"] += v - 1
+            finished = False
+            emitted = 0
+            for tok in emits:
+                run.ctx += 1
+                run.pending = tok
+                self._emit(run, tok, first=False)
+                emitted += 1
+                self.stats["decode_tokens"] += 1
+                if self._stopped(run, tok):
+                    self._finish(s)        # frees the whole row (and blocks
+                    finished = True        # written past the stop point)
+                    break
+            # counted after the loop: an EOS/budget stop discards the rest of
+            # the accepted chain, and the tokens-per-step / acceptance
+            # metrics must reflect tokens actually emitted
+            self.stats["spec_accepted"] += emitted - 1
+            self.stats["spec_emitted"] += emitted
+            if finished:
+                continue
+            rewind_tail(self.alloc, self.block_tables[s], run.ctx,
+                        block_size=self.scfg.block_size, trash=self.trash)
+            self.draft.commit(s, run.ctx)
 
     def _fit_chunk_blocks(self, s: int, run: _Run, c: int,
                           allow_preempt: bool) -> int:
@@ -636,6 +881,8 @@ class Scheduler:
         assert run is not None
         self._free_row(s)
         self._free_state_slot(run)         # recompute-on-resume, like KV
+        if self.draft is not None:
+            self.draft.invalidate(s)       # draft lane dies with the slot
         if run.pending is not None and run.req.generated:
             # cached sequence = prompt + generated[:-1]; the pending token is
             # generated[-1] and is re-fed through decode after the re-prefill
@@ -684,6 +931,15 @@ class Scheduler:
             if run.state_slot >= 0:
                 dec_sslots[s] = run.state_slot
 
+        device = (jnp.asarray(dec_toks), jnp.asarray(dec_bt),
+                  jnp.asarray(dec_lens), jnp.asarray(dec_sslots),
+                  *self._build_pf_args(pf))
+        return {"device": device}
+
+    def _build_pf_args(self, pf):
+        """Device args for the prefill half of a fused step (shared by the
+        plain and speculative step builders)."""
+        m = self.scfg.max_blocks_per_req
         pf_sslot = self.state_trash
         if pf is not None:
             s, ctx, c, c_pad = pf
@@ -701,12 +957,31 @@ class Scheduler:
             pf_toks = np.zeros(width, np.int32)
             pf_slot, pf_ctx, pf_len = 0, 0, 0
             pf_row = np.full((m,), self.trash, np.int32)
+        return (jnp.asarray(pf_toks), jnp.int32(pf_slot),
+                jnp.asarray(pf_row, dtype=jnp.int32), jnp.int32(pf_ctx),
+                jnp.int32(pf_len), jnp.int32(pf_sslot))
 
+    def _build_spec_args(self, dec_slots: List[int], vlens: Dict[int, int],
+                         drafts: np.ndarray, pf) -> Dict[str, Any]:
+        """Device args for a speculative step: verify tokens are column 0 =
+        pending, columns 1.. = draft proposals; lanes outside the round get
+        vlen 0 (every verify write lands in the trash block)."""
+        b, m = self.scfg.max_batch, self.scfg.max_blocks_per_req
+        g1 = self.spec.gamma + 1
+        dec_toks = np.zeros((b, g1), np.int32)
+        dec_bt = np.full((b, m), self.trash, np.int32)
+        dec_lens = np.zeros((b,), np.int32)
+        dec_vlens = np.zeros((b,), np.int32)
+        for s in dec_slots:
+            run = self.slots[s]
+            dec_toks[s, 0] = run.pending
+            dec_toks[s, 1:] = drafts[s, :g1 - 1]
+            dec_bt[s] = self.block_tables[s]
+            dec_lens[s] = run.ctx
+            dec_vlens[s] = vlens[s]
         device = (jnp.asarray(dec_toks), jnp.asarray(dec_bt),
-                  jnp.asarray(dec_lens), jnp.asarray(dec_sslots),
-                  jnp.asarray(pf_toks),
-                  jnp.int32(pf_slot), jnp.asarray(pf_row, dtype=jnp.int32),
-                  jnp.int32(pf_ctx), jnp.int32(pf_len), jnp.int32(pf_sslot))
+                  jnp.asarray(dec_lens), jnp.asarray(dec_vlens),
+                  *self._build_pf_args(pf))
         return {"device": device}
 
     # -- sampling / retirement -------------------------------------------------
@@ -799,6 +1074,8 @@ class Scheduler:
         self.finished.append(run.req)
         self._free_row(s)
         self._free_state_slot(run)
+        if self.draft is not None:
+            self.draft.invalidate(s)
         self.slots[s] = None
 
 

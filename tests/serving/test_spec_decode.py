@@ -1,0 +1,463 @@
+"""Speculative decoding: golden parity vs plain paged decode, rewind-API
+property tests, TTFT-aware chunk sizing, replica metric aggregation."""
+import jax
+import numpy as np
+import pytest
+
+from repro.models import ModelConfig, init_params
+from repro.models.config import LayerSpec
+from repro.serving.engine import PagedServeEngine, Request
+from repro.serving.paged_cache import BlockAllocator, rewind_tail
+from repro.serving.scheduler import SchedulerConfig
+from repro.serving.spec_decode import (SpecConfig, build_draft,
+                                       spec_unsupported_reason)
+
+CFG = ModelConfig(name="t", vocab_size=128, d_model=64, n_layers=2, n_heads=4,
+                  n_kv_heads=2, d_ff=128, attn_chunk=16)
+PARAMS = init_params(CFG, jax.random.PRNGKey(0))
+
+GOLDEN_PROMPTS = [(np.arange(16, dtype=np.int32) * 3) % 128,
+                  (np.arange(32, dtype=np.int32) * 7) % 128,
+                  (np.arange(64, dtype=np.int32) * 5) % 128]
+
+
+def _paged(params=PARAMS, cfg=CFG, spec=None, **kw):
+    defaults = dict(block_size=16, num_blocks=24, max_batch=4,
+                    max_blocks_per_req=8, prefill_chunk=64, token_budget=128,
+                    spec=spec)
+    defaults.update(kw)
+    return PagedServeEngine(params, cfg, SchedulerConfig(**defaults))
+
+
+# ---------------------------------------------------------------------------
+# Golden parity: spec-decode greedy == plain paged greedy, token for token
+# ---------------------------------------------------------------------------
+
+def test_golden_spec_matches_plain_gqa():
+    """Mixed-length batch through the verify path emits exactly the plain
+    engine's tokens while taking fewer decode rounds (the tentpole
+    acceptance criterion: lossless greedy speculation)."""
+    plain = _paged()
+    spec = _paged(spec=SpecConfig(gamma=4))
+    for i, p in enumerate(GOLDEN_PROMPTS):
+        plain.add_request(Request(uid=i, prompt=p.copy(), max_new_tokens=8))
+        spec.add_request(Request(uid=i, prompt=p.copy(), max_new_tokens=8))
+    plain.run()
+    spec.run()
+    d = {r.uid: r.generated for r in plain.finished}
+    g = {r.uid: r.generated for r in spec.finished}
+    assert d == g
+    m = spec.metrics()
+    # the self-draft shares the target weights, so acceptance is near-total
+    # and the verify path really batches multiple tokens per round
+    assert m["spec_tokens_per_step"] > 1.0
+    assert m["decode_steps"] < plain.metrics()["decode_steps"]
+    assert spec.draft_nbytes() > 0
+    spec.scheduler.alloc.check()
+
+
+def test_golden_spec_matches_plain_mla():
+    cfg = ModelConfig(name="mla", vocab_size=128, d_model=64, n_layers=2,
+                      n_heads=4, d_ff=128, q_lora_rank=32, kv_lora_rank=16,
+                      qk_nope_head_dim=16, qk_rope_head_dim=8, v_head_dim=16,
+                      layer_pattern=(LayerSpec("mla", "dense"),),
+                      attn_chunk=16)
+    params = init_params(cfg, jax.random.PRNGKey(1))
+    prompt = (np.arange(16, dtype=np.int32) * 3) % 128
+    plain = _paged(params, cfg, max_batch=2)
+    spec = _paged(params, cfg, spec=SpecConfig(gamma=2), max_batch=2)
+    for e in (plain, spec):
+        e.add_request(Request(uid=0, prompt=prompt.copy(), max_new_tokens=6))
+        e.run()
+    assert plain.finished[0].generated == spec.finished[0].generated
+    assert spec.metrics()["spec_tokens_per_step"] > 1.0
+
+
+def test_spec_gamma_exceeds_remaining_output():
+    """gamma larger than the whole remaining output budget: the verify span
+    clamps per lane, output length and tokens stay exact."""
+    plain = _paged(max_batch=2)
+    spec = _paged(spec=SpecConfig(gamma=6), max_batch=2)
+    for e in (plain, spec):
+        e.add_request(Request(uid=0, prompt=GOLDEN_PROMPTS[0].copy(),
+                              max_new_tokens=3))
+        e.run()
+    assert plain.finished[0].generated == spec.finished[0].generated
+    assert len(spec.finished[0].generated) == 3
+    spec.scheduler.alloc.check()
+
+
+def test_spec_small_blocks_trash_write_regression():
+    """Out-of-span verify positions must write to the *pool's* trash block
+    (``shape[0] - 1``), not pool block ``block_size - 1``: with small blocks
+    that id is quickly allocated to live data and a masked speculative write
+    would silently corrupt another position's quantized KV (regression —
+    pre-fix this config diverges from plain decode at token 2)."""
+    plain = _paged(block_size=4, num_blocks=24, max_batch=2,
+                   max_blocks_per_req=16)
+    spec = _paged(spec=SpecConfig(gamma=4), block_size=4, num_blocks=24,
+                  max_batch=2, max_blocks_per_req=16)
+    for e in (plain, spec):
+        e.add_request(Request(uid=0, prompt=GOLDEN_PROMPTS[0].copy(),
+                              max_new_tokens=8))
+        e.add_request(Request(uid=1, prompt=GOLDEN_PROMPTS[1].copy(),
+                              max_new_tokens=8))
+        e.run()
+    want = {r.uid: r.generated for r in plain.finished}
+    got = {r.uid: r.generated for r in spec.finished}
+    assert want == got
+
+
+def test_spec_preemption_resume_parity():
+    """A forced mid-stream preemption at the same emitted-token count in
+    both engines: the recompute targets are identical, so the resumed spec
+    stream must still match plain token for token (draft lane invalidated
+    and rebuilt on resume)."""
+    outs = []
+    for spec in (None, SpecConfig(gamma=3)):
+        e = _paged(spec=spec, block_size=8, num_blocks=32, max_batch=2,
+                   max_blocks_per_req=10)
+        e.add_request(Request(uid=0, prompt=GOLDEN_PROMPTS[0].copy(),
+                              max_new_tokens=12))
+        fired = False
+        while e.scheduler.has_work:
+            e.step()
+            r = e.scheduler.slots[0]
+            if not fired and r is not None and r.state == "decode" \
+                    and len(r.req.generated) >= 4:
+                e.scheduler._preempt(0)
+                fired = True
+        assert fired
+        outs.append(e.finished[0].generated)
+        e.scheduler.alloc.check()
+    assert outs[0] == outs[1]
+    assert len(outs[0]) == 12
+
+
+def test_spec_low_bit_draft_stays_lossless():
+    """An aggressively cheapened draft (INT4 weight-only + one scan repeat)
+    may propose garbage — acceptance can drop to zero — but greedy output
+    must stay bit-identical: the draft is a throughput knob only."""
+    plain = _paged(max_batch=2)
+    spec = _paged(spec=SpecConfig(gamma=4, draft_bits=4, draft_layers=1),
+                  max_batch=2)
+    for e in (plain, spec):
+        e.add_request(Request(uid=0, prompt=GOLDEN_PROMPTS[1].copy(),
+                              max_new_tokens=8))
+        e.run()
+    assert plain.finished[0].generated == spec.finished[0].generated
+    m = spec.metrics()
+    assert 0.0 <= m["spec_accept_rate"] <= 1.0
+
+
+def test_spec_shared_prefix_int8_self_draft_tokens_per_step():
+    """The headline regime: shared-prefix traffic, INT8 self-draft (the
+    target itself serves W8A8 weights which the draft shares verbatim) —
+    mean emitted tokens per verify step must exceed 1, and the acceptance
+    stats must be surfaced in metrics()."""
+    from repro.core import QuantPolicy, quantize_tree
+    qparams = quantize_tree(PARAMS, QuantPolicy(method="symmetric",
+                                                min_size=2048))
+    prefix = (np.arange(16, dtype=np.int32) * 9) % 128
+    eng = _paged(qparams, spec=SpecConfig(gamma=4))
+    for i in range(4):
+        tail = ((np.arange(8) + 17 * i) % 128).astype(np.int32)
+        eng.add_request(Request(uid=i, prompt=np.concatenate([prefix, tail]),
+                                max_new_tokens=8))
+    eng.run()
+    m = eng.metrics()
+    assert m["spec_rounds"] > 0
+    assert m["spec_tokens_per_step"] > 1.0, m
+    assert 0.0 <= m["spec_accept_rate"] <= 1.0
+    assert m["spec_draft_nbytes"] > 0
+
+
+def test_spec_eos_truncation_keeps_metrics_honest():
+    """EOS landing mid-accepted-chain discards the rest of the round: the
+    output matches plain-decode EOS semantics, and the spec counters must
+    reflect tokens actually *emitted*, not the pre-truncation acceptance
+    (regression: spec_emitted/spec_accepted were counted before the emit
+    loop, inflating tokens-per-step under eos_id)."""
+    ref = _paged(spec=SpecConfig(gamma=4), max_batch=2)
+    ref.add_request(Request(uid=0, prompt=GOLDEN_PROMPTS[0].copy(),
+                            max_new_tokens=8))
+    ref.run()
+    gen = ref.finished[0].generated
+    eos = next(t for t in gen[2:] if gen.index(t) >= 2)   # stops mid-stream
+    expect = gen.index(eos) + 1
+    eng = _paged(spec=SpecConfig(gamma=4), max_batch=2, eos_id=eos)
+    eng.add_request(Request(uid=0, prompt=GOLDEN_PROMPTS[0].copy(),
+                            max_new_tokens=8))
+    eng.run()
+    assert eng.finished[0].generated == gen[:expect]
+    st = eng.scheduler.stats
+    assert st["spec_lane_rounds"] >= 1
+    # every decode-path token came from a verify round, counted exactly once
+    assert st["spec_emitted"] == st["decode_tokens"]
+    assert st["spec_accepted"] == st["spec_emitted"] - st["spec_lane_rounds"]
+
+
+def test_spec_mixed_and_all_hot_temperature_lanes():
+    """Hot-sampled lanes verify exactly one token (greedy acceptance is only
+    lossless for greedy), so a co-batched greedy request keeps bit-parity
+    with plain decode; when *every* lane is hot the spec round degenerates
+    and the scheduler skips the draft proposal entirely (plain step path)."""
+    plain = _paged(max_batch=2)
+    spec = _paged(spec=SpecConfig(gamma=3), max_batch=2)
+    for e in (plain, spec):
+        e.add_request(Request(uid=0, prompt=GOLDEN_PROMPTS[0].copy(),
+                              max_new_tokens=8))
+        e.add_request(Request(uid=1, prompt=GOLDEN_PROMPTS[1].copy(),
+                              max_new_tokens=8, temperature=5.0))
+        e.run()
+    want = {r.uid: r.generated for r in plain.finished}
+    got = {r.uid: r.generated for r in spec.finished}
+    assert want[0] == got[0]                 # greedy lane: exact parity
+    assert len(got[1]) == 8                  # hot lane: full output
+    # only the greedy lane ever built a draft lane — hot lanes are pinned
+    # to 1-token verifies and skip draft maintenance entirely
+    assert spec.scheduler.draft.prefills == 1
+    # all-hot: every span is 1 -> no draft proposals, no verify rounds
+    hot = _paged(spec=SpecConfig(gamma=3), max_batch=2)
+    hot.add_request(Request(uid=0, prompt=GOLDEN_PROMPTS[0].copy(),
+                            max_new_tokens=6, temperature=2.0))
+    hot.run()
+    assert len(hot.finished[0].generated) == 6
+    assert hot.metrics()["spec_rounds"] == 0
+    assert hot.scheduler.draft.prefills == 0
+
+
+def test_spec_capability_gates():
+    """Hybrid SSM patterns (no state rewind path) and multi-codebook models
+    (tuple-stream accept rule) are gated with a clear error."""
+    ssm_cfg = ModelConfig(name="s", vocab_size=64, d_model=64, n_layers=1,
+                          n_heads=4, d_ff=128, ssm_state=16, ssm_head_dim=32,
+                          layer_pattern=(LayerSpec("ssm", "none"),))
+    assert spec_unsupported_reason(ssm_cfg) is not None
+    with pytest.raises(NotImplementedError, match="SSM state"):
+        PagedServeEngine({}, ssm_cfg,
+                         SchedulerConfig(spec=SpecConfig(gamma=2)))
+    mg_cfg = ModelConfig(name="mg", vocab_size=64, d_model=32, n_layers=1,
+                         n_heads=2, d_ff=64, n_codebooks=2)
+    with pytest.raises(NotImplementedError, match="codebook"):
+        PagedServeEngine({}, mg_cfg,
+                         SchedulerConfig(spec=SpecConfig(gamma=2)))
+    assert spec_unsupported_reason(CFG) is None
+
+
+def test_build_draft_truncates_and_requantizes():
+    from repro.core.qtensor import QTensor
+    spec = SpecConfig(gamma=2, draft_bits=4, draft_layers=1)
+    dparams, dcfg = build_draft(PARAMS, CFG, spec)
+    assert dcfg.n_layers == CFG.pattern_len          # one scan repeat
+    leaf = dparams["layers"]["p0"]["attn"]["wq"]
+    assert isinstance(leaf, QTensor) and leaf.bits == 4
+    assert leaf.values.shape[0] == 1                 # truncated repeat axis
+    # bits=0 shares the target weights by reference (pure self-draft)
+    sparams, scfg_ = build_draft(PARAMS, CFG, SpecConfig(gamma=2))
+    assert sparams is PARAMS and scfg_ is CFG
+
+
+# ---------------------------------------------------------------------------
+# rewind_tail property tests (conservation + CoW safety)
+# ---------------------------------------------------------------------------
+
+def _apply_rewind_ops(num_blocks: int, ops, block_size: int = 4,
+                      row_width: int = 12):
+    """Drive one request row through random extend/publish/share/rewind
+    sequences.  After every op: allocator conservation holds, kept blocks
+    are untouched, and a rewound-away block that a second holder still
+    references (shared prefix) or that is published (cache content) survives
+    — the rewind is a decref, never a destructive free."""
+    t = block_size
+    a = BlockAllocator(num_blocks)
+    row = np.full((row_width,), -1, np.int64)
+    length = 0
+    external = []                        # blocks also held by a second table
+    key = 0
+    for kind, arg in ops:
+        if kind == "extend":
+            want = arg % (2 * t) + 1
+            target = min(length + want, row_width * t)
+            lo, hi = length // t, (max(target, 1) - 1) // t
+            covered = target
+            for bi in range(lo, hi + 1):
+                if row[bi] != -1:
+                    continue
+                got = a.alloc(1)
+                if got is None:
+                    covered = min(covered, max(bi * t, length))
+                    break
+                row[bi] = got[0]
+            length = max(length, covered)
+        elif kind == "publish" and length // t:
+            bi = arg % (length // t)     # only full blocks are publishable
+            a.publish(int(row[bi]), bytes([key % 256, 3]), tag=key)
+            key += 1
+        elif kind == "share":
+            mapped = [bi for bi in range(row_width) if row[bi] != -1]
+            if mapped:
+                b = int(row[mapped[arg % len(mapped)]])
+                a.incref(b)
+                external.append(b)
+        elif kind == "drop_share" and external:
+            a.decref(external.pop(arg % len(external)))
+        elif kind == "rewind" and length:
+            keep = arg % (length + 1)
+            keep_blocks = 0 if keep == 0 else (keep + t - 1) // t
+            kept = [(bi, int(row[bi])) for bi in range(keep_blocks)]
+            dropped = [int(row[bi]) for bi in range(keep_blocks, row_width)
+                       if row[bi] != -1]
+            rewind_tail(a, row, keep, block_size=t, trash=-1)
+            length = keep
+            for bi, b in kept:           # kept prefix untouched
+                assert int(row[bi]) == b
+            for bi in range(keep_blocks, row_width):
+                assert int(row[bi]) == -1
+            for b in dropped:            # shared blocks survive the rewind
+                held = external.count(b)
+                if held:
+                    assert a.refcount(b) == held
+        a.check()
+    rewind_tail(a, row, 0, block_size=t, trash=-1)
+    for b in external:
+        a.decref(b)
+    a.check()
+    assert a.num_free + a.num_cached == num_blocks   # nothing leaked
+
+
+def test_rewind_property_seeded_walk():
+    """Deterministic random-walk version of the hypothesis property (runs
+    even without hypothesis installed)."""
+    rng = np.random.default_rng(1)
+    kinds = ["extend", "publish", "share", "drop_share", "rewind"]
+    for _ in range(25):
+        ops = [(kinds[int(rng.integers(len(kinds)))], int(rng.integers(1000)))
+               for _ in range(60)]
+        _apply_rewind_ops(int(rng.integers(3, 14)), ops)
+
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=40, deadline=None)
+    @given(num_blocks=st.integers(3, 14),
+           ops=st.lists(st.tuples(
+               st.sampled_from(["extend", "publish", "share", "drop_share",
+                                "rewind"]),
+               st.integers(0, 999)), max_size=60))
+    def test_rewind_property_hypothesis(num_blocks, ops):
+        _apply_rewind_ops(num_blocks, ops)
+except ImportError:                      # pragma: no cover
+    pass
+
+
+# ---------------------------------------------------------------------------
+# TTFT-aware chunk sizing (scheduler SLA satellite)
+# ---------------------------------------------------------------------------
+
+def _ttft_steps(target_steps: int) -> int:
+    """Mixed load: a 192-token prompt monopolizes prefill while a short
+    late-arriving request waits.  Returns the number of scheduler steps the
+    short request waited for its first token."""
+    eng = _paged(block_size=8, num_blocks=64, max_batch=2,
+                 max_blocks_per_req=32, prefill_chunk=32, token_budget=64,
+                 ttft_target_steps=target_steps, ttft_chunk=16)
+    long_prompt = (np.arange(192, dtype=np.int32) * 5) % 128
+    eng.add_request(Request(uid=0, prompt=long_prompt, max_new_tokens=2))
+    eng.step()                           # long prompt starts prefilling
+    late = Request(uid=1, prompt=GOLDEN_PROMPTS[0].copy(), max_new_tokens=2)
+    eng.add_request(late)
+    steps = 0
+    while not late.generated and steps < 50:
+        eng.step()
+        steps += 1
+    assert late.generated, "late request starved entirely"
+    eng.run()
+    assert all(len(r.generated) == 2 for r in eng.finished)
+    return steps
+
+
+def test_ttft_aware_chunk_sizing_improves_ttft():
+    """With the TTFT target set, the overdue short request takes the prefill
+    turn (SRJF among overdue) instead of waiting out every chunk of the long
+    prompt — its first token lands strictly earlier, and both requests still
+    finish with full output."""
+    baseline = _ttft_steps(0)
+    improved = _ttft_steps(2)
+    assert improved < baseline, (improved, baseline)
+
+
+# ---------------------------------------------------------------------------
+# Replica aggregation of spec metrics
+# ---------------------------------------------------------------------------
+
+def test_replica_spec_metrics_weighted_by_tokens():
+    """Fleet acceptance/tokens-per-step are ratios of summed counters —
+    weighted by each replica's actual proposal/emission volume, not a naive
+    mean of per-replica rates (which an idle or lucky replica would skew)."""
+    from repro.serving.replica import ReplicaConfig, ReplicatedServeEngine
+    eng = ReplicatedServeEngine(
+        PARAMS, CFG,
+        SchedulerConfig(block_size=16, num_blocks=24, max_batch=2,
+                        max_blocks_per_req=8, spec=SpecConfig(gamma=2)),
+        ReplicaConfig(n_replicas=2, policy="round_robin"))
+    r0, r1 = eng.replicas
+    r0.stats.update(spec_proposed=90, spec_accepted=81, spec_emitted=131,
+                    spec_lane_rounds=50, spec_rounds=50)
+    r1.stats.update(spec_proposed=10, spec_accepted=1, spec_emitted=21,
+                    spec_lane_rounds=20, spec_rounds=20)
+    m = eng.metrics()
+    assert np.isclose(m["spec_accept_rate"], 82 / 100)
+    naive = 0.5 * (81 / 90 + 1 / 10)
+    assert not np.isclose(m["spec_accept_rate"], naive)
+    assert np.isclose(m["spec_tokens_per_step"], 152 / 70)
+    assert m["spec_rounds"] == 70
+    # the fleet's draft memory bill sums like cache_nbytes does (zero here:
+    # self-draft weights are shared by reference and no lane prefilled yet)
+    assert m["spec_draft_nbytes"] == sum(p["spec_draft_nbytes"]
+                                         for p in m["per_replica"])
+
+
+def test_replica_draft_built_once_and_shared():
+    """A re-quantized draft tree is built by replica 0 and injected into the
+    rest by reference — one quantization pass and one weight copy per fleet,
+    charged once in the memory bill."""
+    from repro.serving.replica import ReplicaConfig, ReplicatedServeEngine
+    eng = ReplicatedServeEngine(
+        PARAMS, CFG,
+        SchedulerConfig(block_size=16, num_blocks=24, max_batch=2,
+                        max_blocks_per_req=8,
+                        spec=SpecConfig(gamma=2, draft_bits=4)),
+        ReplicaConfig(n_replicas=2, policy="round_robin"))
+    d0, d1 = eng.replicas[0].draft, eng.replicas[1].draft
+    assert d1.dparams is d0.dparams
+    assert not d0.shares_weights and d1.shares_weights
+    assert d0.nbytes() > 0 and d1.nbytes() == 0      # no lanes built yet
+
+
+def test_replica_spec_serving_end_to_end():
+    """Two replicas with spec enabled serve shared-prefix traffic losslessly:
+    outputs match a fresh single-scheduler plain baseline token for token."""
+    from repro.serving.replica import ReplicaConfig, ReplicatedServeEngine
+    scfg = SchedulerConfig(block_size=16, num_blocks=48, max_batch=2,
+                           max_blocks_per_req=8, prefill_chunk=64,
+                           token_budget=128)
+    reqs = [Request(uid=i, prompt=GOLDEN_PROMPTS[i % 3].copy(),
+                    max_new_tokens=6) for i in range(4)]
+    base = _paged(prefill_chunk=64)
+    for r in reqs:
+        base.add_request(Request(uid=r.uid, prompt=r.prompt.copy(),
+                                 max_new_tokens=6))
+    base.run()
+    import dataclasses
+    eng = ReplicatedServeEngine(
+        PARAMS, CFG, dataclasses.replace(scfg, spec=SpecConfig(gamma=3)),
+        ReplicaConfig(n_replicas=2, policy="prefix_affinity"))
+    for r in reqs:
+        eng.add_request(r)
+    eng.run()
+    want = {r.uid: r.generated for r in base.finished}
+    got = {r.uid: r.generated for r in eng.finished}
+    assert want == got
+    assert eng.metrics()["spec_tokens_per_step"] > 1.0
