@@ -7,6 +7,7 @@ under experiments/bench/.
 from __future__ import annotations
 
 import argparse
+import csv
 import inspect
 import sys
 import time
@@ -24,6 +25,29 @@ BENCHES = [
 ]
 
 
+def spec_regression_gate(path: str = "experiments/bench/serving_spec.csv"):
+    """Return an error string if the spec sweep lost its headline win.
+
+    The spec sweep's reason to exist is that the int8 self-draft at
+    gamma=4 turns near-total acceptance into wall-clock speedup over plain
+    paged decode.  If ``spec_g4_int8self`` ever fails to strictly beat
+    ``spec_plain`` in tokens/s, the speculation machinery regressed (slower
+    verify launch, extra per-round dispatches, draft-lane churn) even though
+    every correctness test still passes — so the bench run itself goes red.
+    """
+    try:
+        with open(path) as f:
+            rows = {r["point"]: r for r in csv.DictReader(f)}
+        plain = float(rows["spec_plain"]["tokens_per_s"])
+        spec = float(rows["spec_g4_int8self"]["tokens_per_s"])
+    except (OSError, KeyError, ValueError) as e:
+        return f"spec gate: cannot read {path} ({e!r})"
+    if spec <= plain:
+        return (f"spec gate: spec_g4_int8self {spec} tokens/s does not beat "
+                f"spec_plain {plain} tokens/s ({path})")
+    return None
+
+
 def main() -> None:
     p = argparse.ArgumentParser()
     p.add_argument("--only", default=None)
@@ -34,9 +58,11 @@ def main() -> None:
 
     print("name,us_per_call,derived")
     failures = 0
+    ran = []
     for name, module in BENCHES:
         if args.only and args.only not in name:
             continue
+        ran.append(name)
         t0 = time.time()
         try:
             mod = __import__(module, fromlist=["run"])
@@ -54,6 +80,14 @@ def main() -> None:
             failures += 1
             traceback.print_exc()
             print(f"{name},-1,FAILED")
+    if "serving_paged" in ran:
+        # perf regression gate on the freshly written spec-sweep CSV (only
+        # when that bench actually ran — --only runs must not judge a stale
+        # file): speculation must still pay for itself in wall-clock
+        err = spec_regression_gate()
+        if err:
+            failures += 1
+            print(err, file=sys.stderr)
     if failures:
         # stdout is the CSV contract (often piped to a file): repeat the
         # verdict on stderr so a red run is visible there too, and exit

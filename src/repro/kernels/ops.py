@@ -25,6 +25,7 @@ from . import ref
 from .fused_quant import fused_quant
 from .w8a8_matmul import w8a8_matmul
 from .kv_decode_attention import kv_decode_attention, paged_kv_decode_attention
+from . import paged_attention as pa
 
 
 def _use_pallas() -> Optional[dict]:
@@ -111,6 +112,83 @@ def paged_decode_attention(q, k_vals, k_scale, k_zero, v_vals, v_scale, v_zero,
     return ref.paged_kv_decode_attention_ref(q, k_vals, k_scale, k_zero,
                                              v_vals, v_scale, v_zero,
                                              block_tables, lengths)
+
+
+def paged_verify_attention(q, k_vals, k_scale, k_zero, v_vals, v_scale,
+                           v_zero, block_tables, lengths):
+    """Multi-token spec-decode verify: one launch scores all G positions
+    (Pallas on TPU); the oracle hoists the pool gather out of the position
+    loop — both are bit-identical to G sequential decode-attention calls,
+    the greedy spec-decode golden contract.  q: (B,G,H,D) -> (B,G,H,D)."""
+    pk = _use_pallas()
+    if pk is not None:
+        return pa.paged_kv_verify_attention(q, k_vals, k_scale, k_zero,
+                                            v_vals, v_scale, v_zero,
+                                            block_tables, lengths, **pk)
+    return ref.paged_kv_verify_attention_ref(q, k_vals, k_scale, k_zero,
+                                             v_vals, v_scale, v_zero,
+                                             block_tables, lengths)
+
+
+def mla_paged_verify_attention(q_nope, q_rope, w_uk, w_uv, c_vals, c_scale,
+                               c_zero, kr_vals, kr_scale, kr_zero,
+                               block_tables, lengths):
+    """MLA multi-token verify (absorbed).  q_nope: (B,G,H,dn), q_rope:
+    (B,G,H,dr) -> (B,G,H,dv).  The kernel path folds W_uk/W_uv per position
+    with the exact per-j einsums of ``mla_decode_ref`` so its float path
+    stays bitwise comparable to the oracle."""
+    pk = _use_pallas()
+    if pk is not None:
+        g = q_nope.shape[1]
+        f32 = jnp.float32
+        q_lat = jnp.stack(
+            [jnp.einsum("bhd,rhd->bhr", q_nope[:, j].astype(f32),
+                        w_uk.astype(f32)) for j in range(g)], axis=1)
+        o_lat = pa.mla_paged_verify_attention(
+            q_lat, q_rope, c_vals, c_scale, c_zero, kr_vals, kr_scale,
+            kr_zero, block_tables, lengths, qk_nope_dim=q_nope.shape[-1],
+            **pk)
+        return jnp.stack(
+            [jnp.einsum("bhr,rhd->bhd", o_lat[:, j], w_uv.astype(f32))
+             for j in range(g)], axis=1)
+    return ref.mla_paged_verify_attention_ref(q_nope, q_rope, w_uk, w_uv,
+                                              c_vals, c_scale, c_zero,
+                                              kr_vals, kr_scale, kr_zero,
+                                              block_tables, lengths)
+
+
+def paged_prefix_chunk_attention(q, k_vals, k_scale, k_zero, v_vals, v_scale,
+                                 v_zero, k_chunk, v_chunk, block_row, ctx):
+    """Chunk-prefill attention: chunk queries read the cached prefix straight
+    from the INT8 pool via the block-table row (Pallas on TPU, dense-gather
+    oracle elsewhere).  q: (1,C,H,D) -> (1,C,H,D) f32."""
+    pk = _use_pallas()
+    if pk is not None:
+        return pa.paged_prefix_chunk_attention(q, k_vals, k_scale, k_zero,
+                                               v_vals, v_scale, v_zero,
+                                               k_chunk, v_chunk, block_row,
+                                               ctx, **pk)
+    return ref.paged_prefix_chunk_attention_ref(q, k_vals, k_scale, k_zero,
+                                                v_vals, v_scale, v_zero,
+                                                k_chunk, v_chunk, block_row,
+                                                ctx)
+
+
+def mla_paged_prefix_chunk_attention(q_lat, q_rope, c_vals, c_scale, c_zero,
+                                     kr_vals, kr_scale, kr_zero, c_chunk,
+                                     kr_chunk, block_row, ctx, *,
+                                     qk_nope_dim: int):
+    """MLA chunk-prefill attention in absorbed latent space.
+    q_lat: (1,C,H,rkv) -> o_lat (1,C,H,rkv) f32 (caller applies W_uv)."""
+    pk = _use_pallas()
+    if pk is not None:
+        return pa.mla_paged_prefix_chunk_attention(
+            q_lat, q_rope, c_vals, c_scale, c_zero, kr_vals, kr_scale,
+            kr_zero, c_chunk, kr_chunk, block_row, ctx,
+            qk_nope_dim=qk_nope_dim, **pk)
+    return ref.mla_paged_prefix_chunk_attention_ref(
+        q_lat, q_rope, c_vals, c_scale, c_zero, kr_vals, kr_scale, kr_zero,
+        c_chunk, kr_chunk, block_row, ctx, qk_nope_dim=qk_nope_dim)
 
 
 def flash_decode_ref(q, k_vals, k_scale, k_zero, v_vals, v_scale, v_zero,

@@ -1,0 +1,421 @@
+"""Pallas TPU kernels: single-launch spec-decode verify + block-table chunk
+prefill over the paged INT8 KV pool.
+
+Both kernels extend the ``paged_kv_decode_attention`` pattern — the grid's
+last dimension walks a request's block table, delivered to the index maps via
+``PrefetchScalarGridSpec`` scalar prefetch — but serve *many* query rows per
+launch instead of one token:
+
+  * ``paged_kv_verify_attention`` scores all G spec-decode verify positions
+    of every lane in ONE launch.  Each (B, KH) program streams the lane's M
+    INT8 K/V blocks HBM->VMEM exactly once (the per-position decode loop it
+    replaces streamed them G times), dequantizes in-register into a VMEM
+    f32 buffer, and finishes with a one-shot softmax over all G*G_q rows —
+    row r belongs to verify position ``r // group`` and is masked at its own
+    causal length ``lengths[b] + r//group + 1``.  Trash-table lanes need no
+    special casing: every masked column contributes an exact 0 after the
+    softmax (same as the dense-gather oracle), so garbage blocks are
+    score-invisible.
+  * ``paged_prefix_chunk_attention`` lets a prefill chunk's C queries attend
+    to the request's cached prefix directly from the pool (block_row scalar
+    prefetch) plus the chunk's own fresh fp K/V — replacing the XLA-side
+    dense gather.  Masking: pool columns are live iff ``col < ctx``; chunk
+    columns are causal within the chunk (``col - M*T <= row // group``).
+
+The one-shot softmax (buffer scores' inputs, then max/exp/normalize once) is
+deliberate: it is the exact float path of the jnp oracles in ``ref.py``, so
+interpret-mode parity is bitwise, which is what lets the serving goldens
+(spec-decode == plain decode, warm prefix hit == cold run) hold on every
+backend.  MLA variants run in absorbed latent space; the caller folds
+``W_uk`` into the queries and applies ``W_uv`` to the returned o_lat.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -2.0e38
+
+
+def _softmax_rows(s: jax.Array) -> jax.Array:
+    """One-shot softmax over the last axis, op-for-op ``jax.nn.softmax``."""
+    mx = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.exp(s - mx)
+    return p / jnp.sum(p, axis=-1, keepdims=True)
+
+
+def _prescale_q(q: jax.Array, d: int) -> jax.Array:
+    """Materialize q/sqrt(d) with a true division, behind barriers.
+
+    The oracles divide q eagerly, so their score dot consumes the exact
+    quotient.  Inside one jitted program XLA constant-folds sqrt(d) and
+    rewrites the division into a reciprocal multiply — bit-identical only
+    when sqrt(d) is a power of two (d = 16, 64, ...), off by last ulps
+    otherwise (d = 32, ...).  Hiding the divisor behind an optimization
+    barrier keeps the real division; the outer barrier stops the scalar
+    from being hoisted out of the score dot.
+    """
+    rsqrt = jax.lax.optimization_barrier(jnp.sqrt(d).astype(jnp.float32))
+    return jax.lax.optimization_barrier(q.astype(jnp.float32) / rsqrt)
+
+
+# ---------------------------------------------------------------------------
+# Multi-token spec-decode verify
+# ---------------------------------------------------------------------------
+
+def _verify_kernel(bt_ref, len_ref, q_ref, ks_ref, kz_ref, k_ref, v_ref,
+                   vs_ref, vz_ref, o_ref, kf_ref, vf_ref, *, n_blk: int,
+                   t: int, group: int):
+    b_idx = pl.program_id(0)
+    m_idx = pl.program_id(2)
+
+    # stream + dequantize this block once, shared by all G*group query rows
+    k = (k_ref[0, 0].astype(jnp.float32) - kz_ref[0, 0]) * ks_ref[0, 0]
+    kf_ref[pl.ds(m_idx * t, t), :] = k
+    v = (v_ref[0, 0].astype(jnp.float32) - vz_ref[0, 0]) * vs_ref[0, 0]
+    vf_ref[pl.ds(m_idx * t, t), :] = v
+
+    @pl.when(m_idx == n_blk - 1)
+    def _finish():
+        qg = q_ref[0, 0]                      # pre-scaled by _prescale_q
+        kf, vf = kf_ref[...], vf_ref[...]
+        s = jax.lax.dot_general(qg, kf, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        row = jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+        pos = jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        live = pos < len_ref[b_idx] + row // group + 1
+        w = _softmax_rows(jnp.where(live, s, NEG_INF))
+        o_ref[0, 0] = jax.lax.dot_general(w, vf, (((1,), (0,)), ((), ())),
+                                          preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def paged_kv_verify_attention(q: jax.Array,
+                              k_vals: jax.Array, k_scale: jax.Array,
+                              k_zero: jax.Array, v_vals: jax.Array,
+                              v_scale: jax.Array, v_zero: jax.Array,
+                              block_tables: jax.Array, lengths: jax.Array, *,
+                              interpret: bool = False) -> jax.Array:
+    """All G verify positions against the paged pool in one launch.
+
+    q: (B, G, H, D); pool leaves as in ``paged_kv_decode_attention``
+    (k_vals/v_vals (N, T, KH, D) int8, v_scale/v_zero (N, T, KH, 1),
+    k_scale/k_zero (B, KH, D) per-slot); block_tables: (B, M);
+    lengths: (B,) pre-verify context lengths -> (B, G, H, D) f32.
+    """
+    b, gq, h, d = q.shape
+    t, kh = k_vals.shape[1], k_vals.shape[2]
+    m = block_tables.shape[1]
+    g = h // kh
+    rows = gq * g
+
+    # row r = j * group + gi  <->  verify position j, grouped query head gi
+    q_r = q.reshape(b, gq, kh, g, d).transpose(0, 2, 1, 3, 4)
+    q_r = _prescale_q(q_r.reshape(b, kh, rows, d), d)
+    k_r = k_vals.transpose(0, 2, 1, 3)                    # (N, KH, T, D)
+    v_r = v_vals.transpose(0, 2, 1, 3)
+    vs_r = v_scale.transpose(0, 2, 1, 3)                  # (N, KH, T, 1)
+    vz_r = v_zero.transpose(0, 2, 1, 3)
+    ks_r = k_scale[:, :, None, :]                         # (B, KH, 1, D)
+    kz_r = k_zero[:, :, None, :]
+
+    kernel = functools.partial(_verify_kernel, n_blk=m, t=t, group=g)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,          # block_tables, lengths
+        grid=(b, kh, m),
+        in_specs=[
+            pl.BlockSpec((1, 1, rows, d), lambda bb, hh, mm, bt, ln: (bb, hh, 0, 0)),
+            pl.BlockSpec((1, 1, 1, d), lambda bb, hh, mm, bt, ln: (bb, hh, 0, 0)),
+            pl.BlockSpec((1, 1, 1, d), lambda bb, hh, mm, bt, ln: (bb, hh, 0, 0)),
+            pl.BlockSpec((1, 1, t, d),
+                         lambda bb, hh, mm, bt, ln: (bt[bb, mm], hh, 0, 0)),
+            pl.BlockSpec((1, 1, t, d),
+                         lambda bb, hh, mm, bt, ln: (bt[bb, mm], hh, 0, 0)),
+            pl.BlockSpec((1, 1, t, 1),
+                         lambda bb, hh, mm, bt, ln: (bt[bb, mm], hh, 0, 0)),
+            pl.BlockSpec((1, 1, t, 1),
+                         lambda bb, hh, mm, bt, ln: (bt[bb, mm], hh, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, rows, d),
+                               lambda bb, hh, mm, bt, ln: (bb, hh, 0, 0)),
+        scratch_shapes=[pltpu.VMEM((m * t, d), jnp.float32),
+                        pltpu.VMEM((m * t, d), jnp.float32)],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, kh, rows, d), jnp.float32),
+        interpret=interpret,
+    )(block_tables, lengths, q_r, ks_r, kz_r, k_r, v_r, vs_r, vz_r)
+    return out.reshape(b, kh, gq, g, d).transpose(0, 2, 1, 3, 4).reshape(
+        b, gq, h, d)
+
+
+def _mla_verify_kernel(bt_ref, len_ref, ql_ref, qr_ref, cs_ref, cz_ref,
+                       krs_ref, krz_ref, c_ref, kr_ref, o_ref, cf_ref,
+                       krf_ref, *, n_blk: int, t: int, heads: int, dn: int,
+                       dr: int):
+    b_idx = pl.program_id(0)
+    m_idx = pl.program_id(1)
+
+    c = (c_ref[0].astype(jnp.float32) - cz_ref[0]) * cs_ref[0]
+    cf_ref[pl.ds(m_idx * t, t), :] = c
+    kr = (kr_ref[0].astype(jnp.float32) - krz_ref[0]) * krs_ref[0]
+    krf_ref[pl.ds(m_idx * t, t), :] = kr
+
+    @pl.when(m_idx == n_blk - 1)
+    def _finish():
+        scale = 1.0 / jnp.sqrt(dn + dr)
+        cf, krf = cf_ref[...], krf_ref[...]
+        s_lat = jax.lax.dot_general(ql_ref[0], cf, (((1,), (1,)), ((), ())),
+                                    preferred_element_type=jnp.float32)
+        s_rope = jax.lax.dot_general(qr_ref[0], krf, (((1,), (1,)), ((), ())),
+                                     preferred_element_type=jnp.float32)
+        s = (s_lat + s_rope) * scale
+        row = jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+        pos = jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        live = pos < len_ref[b_idx] + row // heads + 1
+        w = _softmax_rows(jnp.where(live, s, NEG_INF))
+        o_ref[0] = jax.lax.dot_general(w, cf, (((1,), (0,)), ((), ())),
+                                       preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("qk_nope_dim", "interpret"))
+def mla_paged_verify_attention(q_lat: jax.Array, q_rope: jax.Array,
+                               c_vals: jax.Array, c_scale: jax.Array,
+                               c_zero: jax.Array, kr_vals: jax.Array,
+                               kr_scale: jax.Array, kr_zero: jax.Array,
+                               block_tables: jax.Array, lengths: jax.Array, *,
+                               qk_nope_dim: int,
+                               interpret: bool = False) -> jax.Array:
+    """MLA verify in absorbed latent space, one launch for all G positions.
+
+    q_lat: (B, G, H, rkv) absorbed queries (q_nope @ W_uk); q_rope:
+    (B, G, H, dr); c_vals: (N, T, rkv) int8 latent pool with per-slot affine
+    c_scale/c_zero (B, rkv); kr_vals: (N, T, dr) with kr_scale/kr_zero
+    (B, dr); -> o_lat (B, G, H, rkv) f32 (caller applies W_uv).
+    """
+    b, gq, h, rkv = q_lat.shape
+    dr = q_rope.shape[-1]
+    t = c_vals.shape[1]
+    m = block_tables.shape[1]
+    rows = gq * h
+
+    ql_r = q_lat.astype(jnp.float32).reshape(b, rows, rkv)
+    qr_r = q_rope.astype(jnp.float32).reshape(b, rows, dr)
+
+    kernel = functools.partial(_mla_verify_kernel, n_blk=m, t=t, heads=h,
+                               dn=qk_nope_dim, dr=dr)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,          # block_tables, lengths
+        grid=(b, m),
+        in_specs=[
+            pl.BlockSpec((1, rows, rkv), lambda bb, mm, bt, ln: (bb, 0, 0)),
+            pl.BlockSpec((1, rows, dr), lambda bb, mm, bt, ln: (bb, 0, 0)),
+            pl.BlockSpec((1, rkv), lambda bb, mm, bt, ln: (bb, 0)),
+            pl.BlockSpec((1, rkv), lambda bb, mm, bt, ln: (bb, 0)),
+            pl.BlockSpec((1, dr), lambda bb, mm, bt, ln: (bb, 0)),
+            pl.BlockSpec((1, dr), lambda bb, mm, bt, ln: (bb, 0)),
+            pl.BlockSpec((1, t, rkv), lambda bb, mm, bt, ln: (bt[bb, mm], 0, 0)),
+            pl.BlockSpec((1, t, dr), lambda bb, mm, bt, ln: (bt[bb, mm], 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, rows, rkv), lambda bb, mm, bt, ln: (bb, 0, 0)),
+        scratch_shapes=[pltpu.VMEM((m * t, rkv), jnp.float32),
+                        pltpu.VMEM((m * t, dr), jnp.float32)],
+    )
+    o_lat = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, rows, rkv), jnp.float32),
+        interpret=interpret,
+    )(block_tables, lengths, ql_r, qr_r, c_scale, c_zero, kr_scale, kr_zero,
+      c_vals, kr_vals)
+    return o_lat.reshape(b, gq, h, rkv)
+
+
+# ---------------------------------------------------------------------------
+# Chunk-prefill attention: chunk queries vs pool prefix + fresh chunk K/V
+# ---------------------------------------------------------------------------
+
+def _chunk_kernel(br_ref, ctx_ref, q_ref, ks_ref, kz_ref, k_ref, v_ref,
+                  vs_ref, vz_ref, kc_ref, vc_ref, o_ref, kf_ref, vf_ref, *,
+                  n_blk: int, t: int, group: int):
+    m_idx = pl.program_id(1)
+
+    k = (k_ref[0, 0].astype(jnp.float32) - kz_ref[0]) * ks_ref[0]
+    kf_ref[pl.ds(m_idx * t, t), :] = k
+    v = (v_ref[0, 0].astype(jnp.float32) - vz_ref[0, 0]) * vs_ref[0, 0]
+    vf_ref[pl.ds(m_idx * t, t), :] = v
+
+    @pl.when(m_idx == n_blk - 1)
+    def _finish():
+        mt = n_blk * t
+        # append the chunk's fresh fp K/V after the dequantized prefix
+        kf_ref[pl.ds(mt, kc_ref.shape[1]), :] = kc_ref[0].astype(jnp.float32)
+        vf_ref[pl.ds(mt, vc_ref.shape[1]), :] = vc_ref[0].astype(jnp.float32)
+        qg = q_ref[0]                         # pre-scaled by _prescale_q
+        kf, vf = kf_ref[...], vf_ref[...]
+        s = jax.lax.dot_general(qg, kf, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        row = jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+        col = jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        live = jnp.where(col < mt, col < ctx_ref[0], col - mt <= row // group)
+        w = _softmax_rows(jnp.where(live, s, NEG_INF))
+        o_ref[0] = jax.lax.dot_general(w, vf, (((1,), (0,)), ((), ())),
+                                       preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def paged_prefix_chunk_attention(q: jax.Array,
+                                 k_vals: jax.Array, k_scale: jax.Array,
+                                 k_zero: jax.Array, v_vals: jax.Array,
+                                 v_scale: jax.Array, v_zero: jax.Array,
+                                 k_chunk: jax.Array, v_chunk: jax.Array,
+                                 block_row: jax.Array, ctx: jax.Array, *,
+                                 interpret: bool = False) -> jax.Array:
+    """Chunk-prefill attention reading the prefix straight from the pool.
+
+    q: (1, C, H, D); pool leaves as in ``paged_kv_decode_attention`` with
+    k_scale/k_zero (KH, D) the slot's frozen affine; k_chunk/v_chunk:
+    (1, C, KH, D) the chunk's fresh fp K/V; block_row: (M,) int32 (entries
+    past the prefix may be trash — masked by ctx); ctx: () int32 cached
+    prefix length -> (1, C, H, D) f32.
+    """
+    c, h, d = q.shape[1], q.shape[2], q.shape[3]
+    t, kh = k_vals.shape[1], k_vals.shape[2]
+    m = block_row.shape[0]
+    g = h // kh
+    rows = c * g
+
+    # row r = ci * group + gi  <->  chunk position ci, grouped head gi
+    q_r = q[0].reshape(c, kh, g, d).transpose(1, 0, 2, 3).reshape(kh, rows, d)
+    q_r = _prescale_q(q_r, d)
+    kc_r = k_chunk[0].transpose(1, 0, 2)                  # (KH, C, D)
+    vc_r = v_chunk[0].transpose(1, 0, 2)
+    k_r = k_vals.transpose(0, 2, 1, 3)                    # (N, KH, T, D)
+    v_r = v_vals.transpose(0, 2, 1, 3)
+    vs_r = v_scale.transpose(0, 2, 1, 3)                  # (N, KH, T, 1)
+    vz_r = v_zero.transpose(0, 2, 1, 3)
+    ctx_arr = jnp.asarray(ctx, jnp.int32).reshape(1)
+
+    kernel = functools.partial(_chunk_kernel, n_blk=m, t=t, group=g)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,          # block_row, ctx
+        grid=(kh, m),
+        in_specs=[
+            pl.BlockSpec((1, rows, d), lambda hh, mm, br, cx: (hh, 0, 0)),
+            pl.BlockSpec((1, d), lambda hh, mm, br, cx: (hh, 0)),
+            pl.BlockSpec((1, d), lambda hh, mm, br, cx: (hh, 0)),
+            pl.BlockSpec((1, 1, t, d), lambda hh, mm, br, cx: (br[mm], hh, 0, 0)),
+            pl.BlockSpec((1, 1, t, d), lambda hh, mm, br, cx: (br[mm], hh, 0, 0)),
+            pl.BlockSpec((1, 1, t, 1), lambda hh, mm, br, cx: (br[mm], hh, 0, 0)),
+            pl.BlockSpec((1, 1, t, 1), lambda hh, mm, br, cx: (br[mm], hh, 0, 0)),
+            pl.BlockSpec((1, c, d), lambda hh, mm, br, cx: (hh, 0, 0)),
+            pl.BlockSpec((1, c, d), lambda hh, mm, br, cx: (hh, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, rows, d), lambda hh, mm, br, cx: (hh, 0, 0)),
+        scratch_shapes=[pltpu.VMEM((m * t + c, d), jnp.float32),
+                        pltpu.VMEM((m * t + c, d), jnp.float32)],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((kh, rows, d), jnp.float32),
+        interpret=interpret,
+    )(block_row, ctx_arr, q_r, k_scale, k_zero, k_r, v_r, vs_r, vz_r,
+      kc_r, vc_r)
+    return out.reshape(kh, c, g, d).transpose(1, 0, 2, 3).reshape(1, c, h, d)
+
+
+def _mla_chunk_kernel(br_ref, ctx_ref, ql_ref, qr_ref, cs_ref, cz_ref,
+                      krs_ref, krz_ref, c_ref, kr_ref, cc_ref, krc_ref,
+                      o_ref, cf_ref, krf_ref, *, n_blk: int, t: int,
+                      heads: int, dn: int, dr: int):
+    m_idx = pl.program_id(0)
+
+    c = (c_ref[0].astype(jnp.float32) - cz_ref[0]) * cs_ref[0]
+    cf_ref[pl.ds(m_idx * t, t), :] = c
+    kr = (kr_ref[0].astype(jnp.float32) - krz_ref[0]) * krs_ref[0]
+    krf_ref[pl.ds(m_idx * t, t), :] = kr
+
+    @pl.when(m_idx == n_blk - 1)
+    def _finish():
+        mt = n_blk * t
+        cf_ref[pl.ds(mt, cc_ref.shape[0]), :] = cc_ref[...].astype(jnp.float32)
+        krf_ref[pl.ds(mt, krc_ref.shape[0]), :] = krc_ref[...].astype(jnp.float32)
+        scale = 1.0 / jnp.sqrt(dn + dr)
+        cf, krf = cf_ref[...], krf_ref[...]
+        s_lat = jax.lax.dot_general(ql_ref[...], cf, (((1,), (1,)), ((), ())),
+                                    preferred_element_type=jnp.float32)
+        s_rope = jax.lax.dot_general(qr_ref[...], krf, (((1,), (1,)), ((), ())),
+                                     preferred_element_type=jnp.float32)
+        s = (s_lat + s_rope) * scale
+        row = jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+        col = jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        live = jnp.where(col < mt, col < ctx_ref[0], col - mt <= row // heads)
+        w = _softmax_rows(jnp.where(live, s, NEG_INF))
+        o_ref[...] = jax.lax.dot_general(w, cf, (((1,), (0,)), ((), ())),
+                                         preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("qk_nope_dim", "interpret"))
+def mla_paged_prefix_chunk_attention(q_lat: jax.Array, q_rope: jax.Array,
+                                     c_vals: jax.Array, c_scale: jax.Array,
+                                     c_zero: jax.Array, kr_vals: jax.Array,
+                                     kr_scale: jax.Array, kr_zero: jax.Array,
+                                     c_chunk: jax.Array, kr_chunk: jax.Array,
+                                     block_row: jax.Array, ctx: jax.Array, *,
+                                     qk_nope_dim: int,
+                                     interpret: bool = False) -> jax.Array:
+    """MLA chunk-prefill attention in absorbed latent space.
+
+    q_lat: (1, C, H, rkv); q_rope: (1, C, H, dr); c_vals: (N, T, rkv) int8
+    latent pool with per-slot affine c_scale/c_zero (rkv,); kr_vals:
+    (N, T, dr) with kr_scale/kr_zero (dr,); c_chunk: (1, C, rkv) /
+    kr_chunk: (1, C, dr) fresh fp chunk latent; block_row: (M,); ctx: ()
+    -> o_lat (1, C, H, rkv) f32 (caller applies W_uv).
+    """
+    c, h, rkv = q_lat.shape[1], q_lat.shape[2], q_lat.shape[3]
+    dr = q_rope.shape[-1]
+    t = c_vals.shape[1]
+    m = block_row.shape[0]
+    rows = c * h
+
+    ql_r = q_lat[0].astype(jnp.float32).reshape(rows, rkv)
+    qr_r = q_rope[0].astype(jnp.float32).reshape(rows, dr)
+    ctx_arr = jnp.asarray(ctx, jnp.int32).reshape(1)
+
+    kernel = functools.partial(_mla_chunk_kernel, n_blk=m, t=t, heads=h,
+                               dn=qk_nope_dim, dr=dr)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,          # block_row, ctx
+        grid=(m,),
+        in_specs=[
+            pl.BlockSpec((rows, rkv), lambda mm, br, cx: (0, 0)),
+            pl.BlockSpec((rows, dr), lambda mm, br, cx: (0, 0)),
+            pl.BlockSpec((1, rkv), lambda mm, br, cx: (0, 0)),
+            pl.BlockSpec((1, rkv), lambda mm, br, cx: (0, 0)),
+            pl.BlockSpec((1, dr), lambda mm, br, cx: (0, 0)),
+            pl.BlockSpec((1, dr), lambda mm, br, cx: (0, 0)),
+            pl.BlockSpec((1, t, rkv), lambda mm, br, cx: (br[mm], 0, 0)),
+            pl.BlockSpec((1, t, dr), lambda mm, br, cx: (br[mm], 0, 0)),
+            pl.BlockSpec((c, rkv), lambda mm, br, cx: (0, 0)),
+            pl.BlockSpec((c, dr), lambda mm, br, cx: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((rows, rkv), lambda mm, br, cx: (0, 0)),
+        scratch_shapes=[pltpu.VMEM((m * t + c, rkv), jnp.float32),
+                        pltpu.VMEM((m * t + c, dr), jnp.float32)],
+    )
+    o_lat = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((rows, rkv), jnp.float32),
+        interpret=interpret,
+    )(block_row, ctx_arr, ql_r, qr_r, c_scale.reshape(1, rkv),
+      c_zero.reshape(1, rkv), kr_scale.reshape(1, dr), kr_zero.reshape(1, dr),
+      c_vals, kr_vals, c_chunk[0], kr_chunk[0])
+    return o_lat.reshape(1, c, h, rkv)

@@ -75,3 +75,146 @@ def paged_kv_decode_attention_ref(q: jax.Array,
     return kv_decode_attention_ref(
         q, gather(k_vals), k_scale[:, None], k_zero[:, None],
         gather(v_vals), gather(v_scale), gather(v_zero), lengths)
+
+
+def paged_kv_verify_attention_ref(q: jax.Array,
+                                  k_vals: jax.Array, k_scale: jax.Array,
+                                  k_zero: jax.Array, v_vals: jax.Array,
+                                  v_scale: jax.Array, v_zero: jax.Array,
+                                  block_tables: jax.Array,
+                                  lengths: jax.Array) -> jax.Array:
+    """Multi-token spec-decode verify oracle: one pool gather shared by all
+    G positions, each scored at its own causal length ``lengths + j + 1``.
+    Position j's attention is op-for-op the decode oracle at that length, so
+    verify stays bit-identical to G sequential decode steps (the greedy
+    spec-decode golden contract); hoisting the gather out of the j loop is
+    exact because every position reads the same post-append pool.
+
+    q: (B,G,H,D); pool leaves as in ``paged_kv_decode_attention_ref``;
+    lengths: (B,) pre-verify context lengths -> (B,G,H,D).
+    """
+    b, m = block_tables.shape
+    t = k_vals.shape[1]
+    g = q.shape[1]
+    gather = lambda pool: pool[block_tables].reshape(b, m * t, *pool.shape[2:])
+    kg, vg = gather(k_vals), gather(v_vals)
+    vsg, vzg = gather(v_scale), gather(v_zero)
+    ks, kz = k_scale[:, None], k_zero[:, None]
+    outs = [kv_decode_attention_ref(q[:, j], kg, ks, kz, vg, vsg, vzg,
+                                    lengths + j + 1)
+            for j in range(g)]
+    return jnp.stack(outs, axis=1)
+
+
+def mla_paged_verify_attention_ref(q_nope: jax.Array, q_rope: jax.Array,
+                                   w_uk: jax.Array, w_uv: jax.Array,
+                                   c_vals: jax.Array, c_scale: jax.Array,
+                                   c_zero: jax.Array, kr_vals: jax.Array,
+                                   kr_scale: jax.Array, kr_zero: jax.Array,
+                                   block_tables: jax.Array,
+                                   lengths: jax.Array) -> jax.Array:
+    """MLA multi-token verify oracle (absorbed latent-space attention).
+
+    q_nope: (B,G,H,dn); q_rope: (B,G,H,dr); c_vals: (N,T,rkv) int8 latent
+    pool with per-slot affine c_scale/c_zero: (B,rkv); kr_vals: (N,T,dr)
+    int8 rope keys with kr_scale/kr_zero: (B,dr); block_tables: (B,M);
+    lengths: (B,) -> (B,G,H,dv).  Same hoisted-gather construction as the
+    GQA verify oracle, delegating per position to ``mla_decode_ref``.
+    """
+    from repro.models.mla import mla_decode_ref
+    b, m = block_tables.shape
+    t = c_vals.shape[1]
+    g = q_nope.shape[1]
+    gather = lambda pool: pool[block_tables].reshape(b, m * t, pool.shape[-1])
+    cg, krg = gather(c_vals), gather(kr_vals)
+    cs, cz = c_scale[:, None], c_zero[:, None]
+    krs, krz = kr_scale[:, None], kr_zero[:, None]
+    outs = [mla_decode_ref(q_nope[:, j], q_rope[:, j], cg, cs, cz,
+                           krg, krs, krz, w_uk, w_uv, lengths + j + 1, None)
+            for j in range(g)]
+    return jnp.stack(outs, axis=1)
+
+
+def paged_prefix_chunk_attention_ref(q: jax.Array,
+                                     k_vals: jax.Array, k_scale: jax.Array,
+                                     k_zero: jax.Array, v_vals: jax.Array,
+                                     v_scale: jax.Array, v_zero: jax.Array,
+                                     k_chunk: jax.Array, v_chunk: jax.Array,
+                                     block_row: jax.Array,
+                                     ctx: jax.Array) -> jax.Array:
+    """Chunk-prefill attention against the INT8 block pool (one request).
+
+    The chunk's C queries attend to (a) the request's cached prefix, read
+    straight from the pool through its block-table row and dequantized with
+    the slot's frozen K affine / per-token V affine, and (b) the chunk's own
+    fresh fp K/V under a causal mask.  Pool positions >= ctx are masked (the
+    chunk was already written into the pool before attention runs), padding
+    query lanes just see their causal prefix and are never read.
+
+    q: (1,C,H,D); k_vals/v_vals: (N,T,KH,D) int8 pool; k_scale/k_zero:
+    (KH,D) the slot's frozen affine; v_scale/v_zero: (N,T,KH,1);
+    k_chunk/v_chunk: (1,C,KH,D) fp; block_row: (M,); ctx: () int32
+    -> (1,C,H,D) f32.
+    """
+    c, h, d = q.shape[1], q.shape[2], q.shape[3]
+    kh = k_chunk.shape[2]
+    g = h // kh
+    m, t = block_row.shape[0], k_vals.shape[1]
+    f32 = jnp.float32
+    k_pre = ((k_vals[block_row].astype(f32) - k_zero.astype(f32))
+             * k_scale.astype(f32)).reshape(m * t, kh, d)
+    v_pre = ((v_vals[block_row].astype(f32) - v_zero[block_row])
+             * v_scale[block_row]).reshape(m * t, kh, d)
+    k_all = jnp.concatenate([k_pre, k_chunk[0].astype(f32)], axis=0)
+    v_all = jnp.concatenate([v_pre, v_chunk[0].astype(f32)], axis=0)
+    qg = q[0].reshape(c, kh, g, d).astype(f32) / jnp.sqrt(d).astype(f32)
+    s = jnp.einsum("chgd,shd->hgcs", qg, k_all,
+                   preferred_element_type=jnp.float32)
+    col = jnp.arange(m * t + c)
+    keep = jnp.where(col[None, :] < m * t, col[None, :] < ctx,
+                     col[None, :] - m * t <= jnp.arange(c)[:, None])
+    s = jnp.where(keep[None, None], s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("hgcs,shd->chgd", w, v_all,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(1, c, h, d)
+
+
+def mla_paged_prefix_chunk_attention_ref(q_lat: jax.Array, q_rope: jax.Array,
+                                         c_vals: jax.Array, c_scale: jax.Array,
+                                         c_zero: jax.Array, kr_vals: jax.Array,
+                                         kr_scale: jax.Array, kr_zero: jax.Array,
+                                         c_chunk: jax.Array, kr_chunk: jax.Array,
+                                         block_row: jax.Array, ctx: jax.Array,
+                                         *, qk_nope_dim: int) -> jax.Array:
+    """MLA chunk-prefill attention in absorbed latent space.
+
+    q_lat: (1,C,H,rkv) absorbed queries (q_nope @ W_uk); q_rope: (1,C,H,dr);
+    c_vals: (N,T,rkv) int8 latent pool with per-slot affine c_scale/c_zero:
+    (rkv,); kr_vals: (N,T,dr) with kr_scale/kr_zero: (dr,); c_chunk:
+    (1,C,rkv) / kr_chunk: (1,C,dr) the chunk's fresh fp latent; block_row:
+    (M,); ctx: () -> o_lat (1,C,H,rkv) f32 (caller applies W_uv).  Same
+    masking rules as the GQA chunk oracle; the softmax scale is the expanded
+    head dim's ``1/sqrt(dn+dr)`` exactly as in ``mla_decode_ref``.
+    """
+    c, hh = q_lat.shape[1], q_lat.shape[2]
+    rkv, dr = q_lat.shape[3], q_rope.shape[3]
+    m, t = block_row.shape[0], c_vals.shape[1]
+    f32 = jnp.float32
+    scale = 1.0 / jnp.sqrt(qk_nope_dim + dr)
+    c_pre = ((c_vals[block_row].astype(f32) - c_zero) * c_scale
+             ).reshape(m * t, rkv)
+    kr_pre = ((kr_vals[block_row].astype(f32) - kr_zero) * kr_scale
+              ).reshape(m * t, dr)
+    c_all = jnp.concatenate([c_pre, c_chunk[0].astype(f32)], axis=0)
+    kr_all = jnp.concatenate([kr_pre, kr_chunk[0].astype(f32)], axis=0)
+    s_lat = jnp.einsum("chr,sr->hcs", q_lat[0].astype(f32), c_all)
+    s_rope = jnp.einsum("chd,sd->hcs", q_rope[0].astype(f32), kr_all)
+    s = (s_lat + s_rope) * scale
+    col = jnp.arange(m * t + c)
+    keep = jnp.where(col[None, :] < m * t, col[None, :] < ctx,
+                     col[None, :] - m * t <= jnp.arange(c)[:, None])
+    s = jnp.where(keep[None], s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    o_lat = jnp.einsum("hcs,sr->chr", w, c_all)
+    return o_lat[None]

@@ -370,10 +370,11 @@ def _block_prefill_chunk(p_blk, h, pool_blk, spool_blk, cfg: ModelConfig, *,
                          block_size: int, is_first: bool, state_slot):
     """One pattern repeat of a prefill *chunk* (B=1) against the block pool.
 
-    The chunk's queries attend to the request's cached prefix (gathered +
-    dequantized from the pool) plus the chunk itself — position-exact
-    right-aligned handling, no left-pad.  ``is_first`` (static) skips the
-    prefix gather and freezes the per-channel K scales.  SSM layers carry
+    The chunk's queries attend to the request's cached prefix (read straight
+    from the INT8 pool through the block-table row —
+    ``ops.paged_prefix_chunk_attention``) plus the chunk itself —
+    position-exact right-aligned handling, no left-pad.  ``is_first``
+    (static) skips the prefix read and freezes the per-channel K scales.  SSM layers carry
     conv/SSD state across chunk boundaries through the state pool
     (``state_slot``): read -> chunk-exact scan -> write back quantized.
     """
@@ -381,12 +382,6 @@ def _block_prefill_chunk(p_blk, h, pool_blk, spool_blk, cfg: ModelConfig, *,
     new_spool: Dict[str, Any] = {}
     pos1d = positions[0] if positions.ndim > 1 else positions
     c = h.shape[1]
-    mt = block_row.shape[0] * block_size
-    # prefix kv positions: real 0..ctx-1; the rest pushed past any query pos
-    pre_pos = jnp.arange(mt)
-    pre_pos = jnp.where(pre_pos < ctx, pre_pos, 2**30)
-    # chunk kv positions: padding lanes sit after every valid query anyway
-    # (positions increase monotonically), so pos1d works unmodified.
 
     for i, spec in enumerate(cfg.layer_pattern):
         p = p_blk[f"p{i}"]
@@ -401,14 +396,13 @@ def _block_prefill_chunk(p_blk, h, pool_blk, spool_blk, cfg: ModelConfig, *,
                 out = flash_attention(q, k, v, q_positions=pos1d,
                                       kv_positions=pos1d, chunk=cfg.attn_chunk)
             else:
-                k_pre, v_pre = pgc.gqa_gather_prefix(entry, block_row, slot,
-                                                     x.dtype)
-                k_cat = jnp.concatenate([k_pre[None], k], axis=1)
-                v_cat = jnp.concatenate([v_pre[None], v], axis=1)
-                out = flash_attention(q, k_cat, v_cat, q_positions=pos1d,
-                                      kv_positions=jnp.concatenate([pre_pos, pos1d]),
-                                      chunk=cfg.attn_chunk)
-            mix = qdot(out.reshape(1, c, -1), p["attn"]["wo"])
+                # prefix read straight from the INT8 pool by block table —
+                # no dense gather (kernels/paged_attention.py chunk kernel)
+                out = ops.paged_prefix_chunk_attention(
+                    q, entry["k_vals"], entry["k_scale"][slot],
+                    entry["k_zero"][slot], entry["v_vals"], entry["v_scale"],
+                    entry["v_zero"], k, v, block_row, ctx)
+            mix = qdot(out.astype(x.dtype).reshape(1, c, -1), p["attn"]["wo"])
             new_pool[f"p{i}"] = entry
         elif spec.mixer == "mla":
             entry = pool_blk[f"p{i}"]
@@ -422,23 +416,33 @@ def _block_prefill_chunk(p_blk, h, pool_blk, spool_blk, cfg: ModelConfig, *,
             dn, dr = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim
             dv = cfg.v_head_dim
             if is_first:
-                c_all, kr_all, kv_pos = c_kv, k_rope, pos1d
+                s_all = c_kv.shape[1]
+                kv = qdot(c_kv, p["attn"]["kv_b"]).reshape(1, s_all, h_heads,
+                                                           dn + dv)
+                k_nope, v_full = kv[..., :dn], kv[..., dn:]
+                k_cat = jnp.concatenate(
+                    [k_nope, jnp.broadcast_to(k_rope[:, :, None, :],
+                                              (1, s_all, h_heads, dr))],
+                    axis=-1)
+                q_cat = jnp.concatenate([q_nope, q_rope], axis=-1)
+                out = flash_attention(q_cat, k_cat, v_full, q_positions=pos1d,
+                                      kv_positions=pos1d, chunk=cfg.attn_chunk)
             else:
-                c_pre, kr_pre = pgc.mla_gather_prefix(entry, block_row, slot,
-                                                      x.dtype)
-                c_all = jnp.concatenate([c_pre[None], c_kv], axis=1)
-                kr_all = jnp.concatenate([kr_pre[None], k_rope], axis=1)
-                kv_pos = jnp.concatenate([pre_pos, pos1d])
-            s_all = c_all.shape[1]
-            kv = qdot(c_all, p["attn"]["kv_b"]).reshape(1, s_all, h_heads, dn + dv)
-            k_nope, v_full = kv[..., :dn], kv[..., dn:]
-            k_cat = jnp.concatenate(
-                [k_nope, jnp.broadcast_to(kr_all[:, :, None, :],
-                                          (1, s_all, h_heads, dr))], axis=-1)
-            q_cat = jnp.concatenate([q_nope, q_rope], axis=-1)
-            out = flash_attention(q_cat, k_cat, v_full, q_positions=pos1d,
-                                  kv_positions=kv_pos, chunk=cfg.attn_chunk)
-            mix = qdot(out.reshape(1, c, h_heads * dv), p["attn"]["wo"])
+                # absorbed latent-space attention against the pool prefix —
+                # no dense gather, no K/V re-expansion of cached tokens
+                w_uk, w_uv = mla_absorbed_weights(p["attn"], cfg)
+                q_lat = jnp.einsum("bchd,rhd->bchr",
+                                   q_nope.astype(jnp.float32),
+                                   w_uk.astype(jnp.float32))
+                o_lat = ops.mla_paged_prefix_chunk_attention(
+                    q_lat, q_rope, entry["c_vals"], entry["c_scale"][slot],
+                    entry["c_zero"][slot], entry["kr_vals"],
+                    entry["kr_scale"][slot], entry["kr_zero"][slot],
+                    c_kv, k_rope, block_row, ctx, qk_nope_dim=dn)
+                out = jnp.einsum("bchr,rhd->bchd", o_lat,
+                                 w_uv.astype(jnp.float32))
+            mix = qdot(out.astype(x.dtype).reshape(1, c, h_heads * dv),
+                       p["attn"]["wo"])
             new_pool[f"p{i}"] = entry
         else:  # ssm: state pool carry across chunk boundaries
             sentry = spool_blk[f"p{i}"]
@@ -596,9 +600,10 @@ def _block_verify_paged(p_blk, h, pool_blk, cfg: ModelConfig, *,
     h: (B, G, D) — position j of lane b sits at sequence position
     ``lengths[b] + j``.  Per layer the pass appends all G tokens' KV into the
     block pool with the *decode* quantization ops (frozen per-slot K affine,
-    fresh per-token V scales), then computes each position's attention with
-    the *decode* kernel at its own causal length — op-for-op identical to G
-    sequential ``_block_decode_paged`` steps, which is what makes greedy
+    fresh per-token V scales), then scores all G positions in a single
+    verify-attention launch (``ops.paged_verify_attention``) — each position
+    masked at its own causal length, so the result is op-for-op identical to
+    G sequential ``_block_decode_paged`` steps, which is what makes greedy
     spec-decode output bit-identical to plain paged decode.  Positions
     ``j >= vlens[b]`` write to the trash block (their logits are ignored by
     the host); entries past each query's causal length are masked by the
@@ -621,12 +626,10 @@ def _block_verify_paged(p_blk, h, pool_blk, cfg: ModelConfig, *,
                 entry = pgc.gqa_paged_append(entry, k[:, j], v[:, j],
                                              bt_j, lengths + j,
                                              block_size=block_size)
-            outs = [ops.paged_decode_attention(
-                        q[:, j], entry["k_vals"], entry["k_scale"],
-                        entry["k_zero"], entry["v_vals"], entry["v_scale"],
-                        entry["v_zero"], block_tables, lengths + j + 1)
-                    for j in range(g)]
-            out = jnp.stack(outs, axis=1)                          # (B,G,H,D)
+            out = ops.paged_verify_attention(
+                q, entry["k_vals"], entry["k_scale"], entry["k_zero"],
+                entry["v_vals"], entry["v_scale"], entry["v_zero"],
+                block_tables, lengths)                             # (B,G,H,D)
             mix = qdot(out.astype(x.dtype).reshape(b, g, -1), p["attn"]["wo"])
             new_pool[f"p{i}"] = entry
         elif spec.mixer == "mla":
@@ -639,15 +642,12 @@ def _block_verify_paged(p_blk, h, pool_blk, cfg: ModelConfig, *,
                 entry = pgc.mla_paged_append(entry, c_t[:, j], kr_t[:, j],
                                              bt_j, lengths + j,
                                              block_size=block_size)
-            gath = pgc.mla_gather_batch(entry, block_tables)
             w_uk, w_uv = mla_absorbed_weights(p["attn"], cfg)
-            outs = [mla_decode_ref(q_nope[:, j], q_rope[:, j],
-                                   gath["c_vals"], gath["c_scale"],
-                                   gath["c_zero"], gath["kr_vals"],
-                                   gath["kr_scale"], gath["kr_zero"],
-                                   w_uk, w_uv, lengths + j + 1, cfg)
-                    for j in range(g)]
-            out = jnp.stack(outs, axis=1)
+            out = ops.mla_paged_verify_attention(
+                q_nope, q_rope, w_uk, w_uv,
+                entry["c_vals"], entry["c_scale"], entry["c_zero"],
+                entry["kr_vals"], entry["kr_scale"], entry["kr_zero"],
+                block_tables, lengths)                             # (B,G,H,dv)
             mix = qdot(out.astype(x.dtype).reshape(b, g, -1), p["attn"]["wo"])
             new_pool[f"p{i}"] = entry
         else:

@@ -129,10 +129,17 @@ class PrefixEntry:
     chain match must stay within one tag — mixing donors would dequantize
     some blocks with the wrong scales.  ``meta`` carries the publisher's
     slot-scale snapshot (restored into the matcher's slot on a hit).
+    ``parent`` is the chain digest of the previous block (b"" for block 0)
+    and ``tokens`` the block's raw int32 tokens — together they let a new
+    request find donors for *partial* (sub-block) prefix reuse: candidates
+    share the full-prefix parent, and the common token run with ``tokens``
+    is how many cached positions a device copy of the block can seed.
     """
     block: int
     tag: int
     meta: Any = None
+    parent: bytes = b""
+    tokens: Any = None
 
 
 class BlockAllocator:
@@ -264,7 +271,8 @@ class BlockAllocator:
             self.decref(b)
 
     # -- prefix index ---------------------------------------------------------
-    def publish(self, b: int, key: bytes, tag: int, meta: Any = None) -> bool:
+    def publish(self, b: int, key: bytes, tag: int, meta: Any = None,
+                parent: bytes = b"", tokens: Any = None) -> bool:
         """Register a *full, immutable* block under its content-chain key.
 
         First publisher wins: if ``key`` is already indexed, or ``b`` is
@@ -276,12 +284,18 @@ class BlockAllocator:
             raise BlockPoolError(f"publish of non-active block {b}")
         if key in self._index or self._key_of[b] is not None:
             return False
-        self._index[key] = PrefixEntry(block=b, tag=tag, meta=meta)
+        self._index[key] = PrefixEntry(block=b, tag=tag, meta=meta,
+                                       parent=parent, tokens=tokens)
         self._key_of[b] = key
         return True
 
     def lookup(self, key: bytes) -> Optional[PrefixEntry]:
         return self._index.get(key)
+
+    def children_of(self, parent: bytes) -> List[PrefixEntry]:
+        """Published blocks whose chain parent is ``parent`` — the candidate
+        donors for a partial (sub-block) match at that chain position."""
+        return [e for e in self._index.values() if e.parent == parent]
 
     def acquire(self, key: bytes) -> Optional[int]:
         """Take a reference on the indexed block for ``key`` (prefix hit):

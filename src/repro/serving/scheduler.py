@@ -118,6 +118,11 @@ class SchedulerConfig:
     ema_alpha: float = 0.9
     seed: int = 0
     prefix_cache: bool = True            # publish/match full prompt blocks
+    partial_prefix: bool = False         # sub-block sharing: after the full-
+                                         # block chain match, device-copy the
+                                         # longest matching partial tail of a
+                                         # published block into the request's
+                                         # first private block
     num_state_slots: int = 0             # SSM state-pool slots (0 = max_batch)
     priority_age_steps: int = 0          # waiting requests gain +1 effective
                                          # priority every N steps (0 = off) —
@@ -338,6 +343,7 @@ class Scheduler:
                       "decode_steps": 0, "decode_tokens": 0, "first_tokens": 0,
                       "preemptions": 0, "steps": 0, "failed_alloc": 0,
                       "prefix_hits": 0, "prefix_hit_tokens": 0,
+                      "prefix_partial_tokens": 0,
                       "prefix_query_tokens": 0, "cow_copies": 0,
                       "spec_rounds": 0, "spec_lane_rounds": 0,
                       "spec_proposed": 0, "spec_accepted": 0,
@@ -603,18 +609,71 @@ class Scheduler:
             if tag is None:
                 tag, meta = e.tag, e.meta
             matched.append(self.alloc.acquire(run.chain[j]))
-        if not matched:
+        if matched:
+            for j, b in enumerate(matched):
+                self.block_tables[slot, j] = b
+            run.ctx = len(matched) * bs
+            run.published_upto = len(matched)
+            run.scale_tag = tag
+            run.snapshot = meta
+            if meta is not None:
+                self.pool = restore_slot_scales(self.pool, slot, meta)
+        part = (self._match_partial(slot, run, tag)
+                if self.scfg.partial_prefix else 0)
+        if not matched and not part:
             return
-        for j, b in enumerate(matched):
-            self.block_tables[slot, j] = b
-        run.ctx = len(matched) * bs
-        run.published_upto = len(matched)
-        run.scale_tag = tag
-        run.snapshot = meta
-        if meta is not None:
-            self.pool = restore_slot_scales(self.pool, slot, meta)
         self.stats["prefix_hits"] += 1
         self.stats["prefix_hit_tokens"] += run.ctx
+
+    def _match_partial(self, slot: int, run: _Run, tag) -> int:
+        """Sub-block prefix reuse after the full-block chain match.
+
+        The first unmatched block position is checked against every published
+        block with the same chain parent; the donor with the longest common
+        token run is device-copied into a fresh *private* block (the donor
+        stays immutable and shared), the copy becomes the request's first
+        writable block, and ``ctx`` starts mid-block past the copied tokens.
+        The donor's frozen scales are adopted when no full block matched (the
+        copied int8 codes only dequantize correctly under the donor's
+        affine); with a full-chain match the donor must carry the same scale
+        tag.  Returns the number of partially-matched tokens."""
+        bs = self.scfg.block_size
+        j = run.ctx // bs                      # first unmatched block index
+        if j >= self.scfg.max_blocks_per_req:
+            return 0
+        # cap one token short of the target so the final chunk always runs
+        avail = min(int(run.target.shape[-1]) - 1 - j * bs, bs)
+        if avail <= 0:
+            return 0
+        parent = run.chain[j - 1] if j else b""
+        blk = np.asarray(run.target[..., j * bs:(j + 1) * bs], np.int32)
+        got = self.alloc.alloc(1)              # before scanning: alloc may
+        if got is None:                        # LRU-evict a candidate donor
+            return 0
+        best, best_r = None, 0
+        for e in self.alloc.children_of(parent):
+            if e.tokens is None or (tag is not None and e.tag != tag):
+                continue
+            width = min(e.tokens.shape[-1], blk.shape[-1], avail)
+            neq = (e.tokens[..., :width] != blk[..., :width])
+            neq = neq.reshape(-1, width).any(axis=0)
+            r = int(np.argmax(neq)) if neq.any() else width
+            if r > best_r:
+                best, best_r = e, r
+        if best is None or best_r <= 0:
+            self.alloc.decref(got[0])          # unpublished active -> FREE
+            return 0
+        self.pool = self._cow_fn(self.pool, jnp.int32(best.block),
+                                 jnp.int32(got[0]))
+        self.block_tables[slot, j] = got[0]
+        run.ctx = j * bs + best_r
+        if run.scale_tag is None:              # no full match: adopt donor
+            run.scale_tag = best.tag
+            run.snapshot = best.meta
+            if best.meta is not None:
+                self.pool = restore_slot_scales(self.pool, slot, best.meta)
+        self.stats["prefix_partial_tokens"] += best_r
+        return best_r
 
     def _schedule_decode(self) -> List[int]:
         """Ensure every decoding slot has a writable block for its next
@@ -1057,9 +1116,13 @@ class Scheduler:
             return
         if run.snapshot is None:
             run.snapshot = snapshot_slot_scales(self.pool, s)
+        bs = self.scfg.block_size
         for j in range(run.published_upto, full):
+            tokens = np.asarray(run.target[..., j * bs:(j + 1) * bs], np.int32)
             self.alloc.publish(int(self.block_tables[s, j]), run.chain[j],
-                               run.scale_tag, run.snapshot)
+                               run.scale_tag, run.snapshot,
+                               parent=run.chain[j - 1] if j else b"",
+                               tokens=tokens)
         run.published_upto = full
 
     def _stopped(self, run: _Run, tok) -> bool:

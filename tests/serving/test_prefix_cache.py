@@ -108,6 +108,48 @@ def test_divergent_prompt_reuses_common_prefix_only():
     eng.scheduler.alloc.check()
 
 
+def test_partial_prefix_sub_block_reuse():
+    """With ``partial_prefix`` on, a prompt diverging *inside* block 1 also
+    reuses the donor's matched sub-block tail: tokens 16..19 are device-
+    copied into a private block, so the hit covers 16 full + 4 partial
+    tokens.  The donor block stays published and intact for future matches."""
+    eng = _engine(partial_prefix=True)
+    sched = eng.scheduler
+    eng.add_request(Request(uid=0, prompt=PROMPT48.copy(), max_new_tokens=6))
+    eng.run()
+    other = PROMPT48.copy()
+    other[20:] = (other[20:] + 1) % 128           # diverge inside block 1
+    eng.add_request(Request(uid=1, prompt=other, max_new_tokens=6))
+    eng.run()
+    m = eng.metrics()
+    assert sched.stats["prefix_partial_tokens"] == 4
+    assert m["prefix_hit_tokens"] == 20           # 16 full + 4 partial
+    assert all(len(r.generated) == 6 for r in eng.finished)
+    # donor's block 1 is still indexed under the cold run's chain
+    donor_chain = _prefix_keys(PROMPT48, 16)
+    assert sched.alloc.lookup(donor_chain[1]) is not None
+    sched.alloc.check()
+
+
+def test_partial_prefix_identical_prompt():
+    """An identical resubmission under ``partial_prefix`` matches 32 full +
+    15 partial tokens (capped one short of the target so the final chunk
+    still seeds the first sampled token) and still completes."""
+    eng = _engine(partial_prefix=True)
+    eng.add_request(Request(uid=0, prompt=PROMPT48.copy(), max_new_tokens=8))
+    eng.run()
+    cold_chunks = eng.stats["prefill_chunks"]
+    eng.add_request(Request(uid=1, prompt=PROMPT48.copy(), max_new_tokens=8))
+    eng.run()
+    m = eng.metrics()
+    assert eng.scheduler.stats["prefix_partial_tokens"] == 15
+    assert m["prefix_hit_tokens"] == 47           # 32 full + 15 partial
+    assert eng.stats["prefill_chunks"] == cold_chunks + 1
+    out = {r.uid: r.generated for r in eng.finished}
+    assert len(out[0]) == len(out[1]) == 8
+    eng.scheduler.alloc.check()
+
+
 def test_prefix_cache_disabled():
     eng = _engine(prefix_cache=False)
     for uid in range(2):
