@@ -187,7 +187,9 @@ def run(smoke: bool = False):
     emit(hyb_rows, "experiments/bench/serving_hybrid.csv")
     spec_rows = _spec_sweep(smoke)
     emit(spec_rows, "experiments/bench/serving_spec.csv")
-    return rows + rep_rows + hyb_rows + spec_rows
+    shard_rows = _sharded_sweep(smoke)
+    emit(shard_rows, "experiments/bench/serving_sharded.csv")
+    return rows + rep_rows + hyb_rows + spec_rows + shard_rows
 
 
 def _replica_row(point, eng, wall):
@@ -297,6 +299,83 @@ def _hybrid_sweep(smoke):
         "wall_s": round(wall, 2),
     })
     return rows
+
+
+# Runs inside a subprocess: the parent bench process keeps its default
+# single-device view, while the sweep sees 8 host devices (same pattern as
+# tests/serving/test_sharded.py).  The meshless PagedServeEngine run is the
+# token-parity reference; every mesh row reports whether the 2D data x model
+# composition reproduced it token-for-token (the gather-based-TP contract),
+# plus per-device pool bytes — the column that shrinks as the model axis
+# cuts the kv-head-sharded pool.
+_SHARDED_SWEEP_CODE = """
+import dataclasses, json
+import jax
+import numpy as np
+from benchmarks.bench_serving import (SCFG, SERVE_CFG, _drive,
+                                      _shared_prefix_requests)
+from repro.models import init_params
+from repro.serving.engine import PagedServeEngine
+from repro.serving.replica import ReplicaConfig, ReplicatedServeEngine
+
+scfg = dataclasses.replace(SCFG, num_blocks=48)
+params = init_params(SERVE_CFG, jax.random.PRNGKey(0))
+
+def traffic():
+    return _shared_prefix_requests(np.random.default_rng(29), N_REQ, MAX_NEW_T,
+                                   prefix_len=32, groups=2)
+
+def outputs(eng):
+    return {int(r.uid): [int(t) for t in r.generated] for r in eng.finished}
+
+ref = PagedServeEngine(params, SERVE_CFG, scfg)
+_drive(ref, traffic(), 4.0)
+want = outputs(ref)
+
+for d, m in [(1, 1), (2, 1), (1, 2), (2, 2)]:
+    mesh = jax.make_mesh((d, m), ("data", "model"))
+    eng = ReplicatedServeEngine(
+        params, SERVE_CFG, scfg,
+        ReplicaConfig(n_replicas=d, policy="round_robin"), mesh=mesh)
+    wall = _drive(eng, traffic(), 4.0)
+    mt = eng.metrics()
+    per = mt["per_replica"]
+    print(json.dumps({
+        "point": "mesh_%dx%d" % (d, m),
+        "data_shards": d,
+        "model_shards": m,
+        "tokens_per_s": round(mt["tokens_per_s"], 2),
+        "cache_bytes": sum(p["cache_nbytes"] for p in per),
+        "cache_bytes_per_device": max(p["cache_nbytes_per_device"]
+                                      for p in per),
+        "tokens_match": outputs(eng) == want,
+        "wall_s": round(wall, 2),
+    }))
+"""
+
+
+def _sharded_sweep(smoke):
+    """2D ``data x model`` mesh-shape sweep {1x1, 2x1, 1x2, 2x2}: tokens/s,
+    per-device pool bytes, and token parity against the unsharded engine —
+    the serving counterpart of the distributed train benches."""
+    import json
+    import os
+    import subprocess
+    import sys
+    n = 6 if smoke else N_REQUESTS
+    max_new = 4 if smoke else MAX_NEW
+    env = dict(os.environ)
+    env.update({"PYTHONPATH": "src",
+                "XLA_FLAGS": "--xla_force_host_platform_device_count=8",
+                "JAX_PLATFORMS": "cpu"})
+    code = f"N_REQ, MAX_NEW_T = {n}, {max_new}\n" + _SHARDED_SWEEP_CODE
+    r = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                       text=True, timeout=1800, env=env)
+    if r.returncode != 0:
+        raise RuntimeError("sharded sweep subprocess failed:\n"
+                           + r.stdout + "\n" + r.stderr)
+    return [json.loads(line) for line in r.stdout.splitlines()
+            if line.startswith("{")]
 
 
 def _spec_sweep(smoke):

@@ -48,6 +48,52 @@ def spec_regression_gate(path: str = "experiments/bench/serving_spec.csv"):
     return None
 
 
+def sharded_parity_gate(path: str = "experiments/bench/serving_sharded.csv"):
+    """Return an error string if any mesh shape diverged from the unsharded
+    engine.
+
+    Gather-based TP's entire contract is that the 2D ``data x model`` mesh
+    composition is a pure layout change: every sweep row carries a
+    ``tokens_match`` column comparing its greedy output token-for-token
+    against the meshless reference run.  Any ``False`` means a cross-shard
+    reduction crept back into a serving matmul (fp reassociation crossing
+    the pool quantizers' round() boundaries) — a correctness regression the
+    unit suite can miss if the drift lands between its golden checkpoints.
+    """
+    try:
+        with open(path) as f:
+            rows = list(csv.DictReader(f))
+        if not rows:
+            return f"sharded gate: {path} is empty"
+    except OSError as e:
+        return f"sharded gate: cannot read {path} ({e!r})"
+    bad = [r["point"] for r in rows
+           if str(r.get("tokens_match", "")).lower() != "true"]
+    if bad:
+        return (f"sharded gate: sharded-vs-unsharded token divergence at "
+                f"{bad} ({path})")
+    return None
+
+
+def pallas_interpret_gate():
+    """Smoke-mode gate: re-run the paged kernel parity subset with
+    REPRO_FORCE_PALLAS=1 (pallas kernels in interpret mode on a CPU host),
+    so the bench loop exercises the real kernel bodies — not just the jnp
+    oracles the default CPU path falls back to."""
+    import os
+    import subprocess
+    env = dict(os.environ)
+    env.update({"PYTHONPATH": "src", "REPRO_FORCE_PALLAS": "1"})
+    r = subprocess.run(
+        [sys.executable, "-m", "pytest", "-x", "-q",
+         "tests/kernels/test_paged_suite.py"],
+        capture_output=True, text=True, timeout=1800, env=env)
+    if r.returncode != 0:
+        return ("pallas interpret gate: paged kernel parity subset failed "
+                "under REPRO_FORCE_PALLAS=1\n" + r.stdout[-2000:])
+    return None
+
+
 def main() -> None:
     p = argparse.ArgumentParser()
     p.add_argument("--only", default=None)
@@ -85,6 +131,18 @@ def main() -> None:
         # when that bench actually ran — --only runs must not judge a stale
         # file): speculation must still pay for itself in wall-clock
         err = spec_regression_gate()
+        if err:
+            failures += 1
+            print(err, file=sys.stderr)
+        # correctness gate on the freshly written sharded-mesh sweep: any
+        # mesh shape whose greedy tokens diverge from the unsharded engine
+        # turns the bench run red
+        err = sharded_parity_gate()
+        if err:
+            failures += 1
+            print(err, file=sys.stderr)
+    if args.smoke and "kernels" in ran:
+        err = pallas_interpret_gate()
         if err:
             failures += 1
             print(err, file=sys.stderr)

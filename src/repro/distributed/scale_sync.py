@@ -20,7 +20,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.experimental.shard_map import shard_map
-from jax.sharding import Mesh, PartitionSpec as P
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core.online import EmaScaleState
 
@@ -70,9 +70,16 @@ def reduce_ema_states(states: Sequence[EmaScaleState], *,
         raise ValueError("reduce_ema_states needs at least one state")
     if len(states) == 1:
         return states[0]
-    d = jnp.stack([jnp.asarray(s.delta) for s in states])      # (N, ...)
-    m = jnp.stack([jnp.asarray(s.mu) for s in states])
+    # per-replica states may be committed to *disjoint* device slices of a
+    # 2D serving mesh (each replica samples on its own data-slice) —
+    # jnp.stack refuses to mix committed placements, so pull to host first
+    # and re-place along the reduce axis for the collective fast path
+    d = np.stack([np.asarray(jax.device_get(s.delta)) for s in states])
+    m = np.stack([np.asarray(jax.device_get(s.mu)) for s in states])
     if mesh is not None and mesh.shape.get(axis, 1) == len(states):
+        d = jax.device_put(d, NamedSharding(mesh, P(axis)))
+        m = jax.device_put(m, NamedSharding(mesh, P(axis)))
+
         @partial(shard_map, mesh=mesh, in_specs=(P(axis), P(axis)),
                  out_specs=(P(), P()), check_rep=False)
         def _reduce(dl, ml):

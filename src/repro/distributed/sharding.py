@@ -166,21 +166,46 @@ _PARAM_RULES = [
     (r"norm|gamma|scale",          (None,)),
 ]
 
+# Serving (paged-inference) overrides: gather-based tensor parallelism.
+# Row-parallel weights keep their contraction dim REPLICATED — the activation
+# is all-gathered just before the matmul (data movement only), so every fp
+# reduction stays device-local and the sharded engine is bit-identical to the
+# unsharded one.  The alternative (Megatron-style partial-sum + psum) floats
+# ~1-ulp reassociation diffs into the pool's int8 ``round()`` boundaries,
+# which compound into greedy argmax flips — serving's token-parity contract
+# forbids that.  Column-parallel projections keep the model-axis sharding:
+# each output column sees its full contraction locally.  ``fsdp`` (the data
+# axis) is dropped entirely: inside a replica it is the replica axis, not a
+# weight-shard axis.
+_SERVING_PARAM_OVERRIDES = [
+    (r"experts.*w_out",            ("experts", None, None)),
+    (r"shared.*w_out",             (None, None)),
+    (r"\bwo\b|wo$",                (None, None)),
+    (r"w_out",                     (None, None)),
+    (r"out_proj",                  (None, None)),
+]
 
-def param_logical_axes(path: str, ndim: int) -> Tuple[Optional[str], ...]:
+
+def param_logical_axes(path: str, ndim: int,
+                       serving: bool = False) -> Tuple[Optional[str], ...]:
     p = path.lower()
-    for pat, axes in _PARAM_RULES:
+    table = (_SERVING_PARAM_OVERRIDES + _PARAM_RULES) if serving \
+        else _PARAM_RULES
+    for pat, axes in table:
         if re.search(pat, p):
             axes = tuple(axes)
+            if serving:
+                axes = tuple(None if a == "fsdp" else a for a in axes)
             if len(axes) < ndim:                       # leading scan/stack dims
                 axes = (None,) * (ndim - len(axes)) + axes
             return axes[:ndim] if len(axes) >= ndim else axes
     return (None,) * ndim
 
 
-def param_spec(mesh: Mesh, path: str, shape: Tuple[int, ...]) -> P:
+def param_spec(mesh: Mesh, path: str, shape: Tuple[int, ...],
+               serving: bool = False) -> P:
     """PartitionSpec for one parameter; drops non-divisible axes."""
-    axes = param_logical_axes(path, len(shape))
+    axes = param_logical_axes(path, len(shape), serving=serving)
     ctx = _current()
     rules = ctx[1] if ctx else DEFAULT_RULES
     parts = []
@@ -221,15 +246,104 @@ def blocked_state_spec(mesh: Mesh, param_path: str, shape: Tuple[int, ...]) -> P
     return P(*parts)
 
 
-def tree_param_shardings(mesh: Mesh, params) -> "jax.tree_util.PyTreeDef":
+def mesh_fingerprint(mesh: Optional[Mesh],
+                     rules: Optional[Dict[str, Tuple[str, ...]]] = None):
+    """Hashable identity of (mesh, rule table) for jit-cache keys.
+
+    Two engines whose meshes differ in axis layout *or* device assignment
+    must not share a compiled step (the in/out shardings baked into the
+    executable differ), so the fingerprint covers axis names, sizes, the
+    flat device ids, and any rule overrides.  ``None`` mesh -> ``None``.
+    """
+    if mesh is None:
+        return None
+    dev = tuple(int(d.id) for d in mesh.devices.flat)
+    shape = tuple((str(a), int(mesh.shape[a])) for a in mesh.axis_names)
+    rule_items = tuple(sorted((k, tuple(v)) for k, v in (rules or {}).items()))
+    return (shape, dev, rule_items)
+
+
+# ---------------------------------------------------------------------------
+# Paged pool / SSM state-pool partition specs (serving)
+# ---------------------------------------------------------------------------
+
+# leaf name -> logical axes (arity must match the leaf rank *including* the
+# leading scan-repeat dim).  GQA block leaves shard the kv-head axis over
+# `model` (kv_heads rule); MLA latent leaves are replicated (latent -> ());
+# SSM ssd leaves shard the head axis.  Block/slot/token axes never shard —
+# the host-side allocator indexes them freely.
+_POOL_RULES: Dict[str, Tuple[Optional[str], ...]] = {
+    # GQA paged KV pool
+    "k_vals":  (None, None, None, "kv_heads", None),
+    "v_vals":  (None, None, None, "kv_heads", None),
+    "v_scale": (None, None, None, "kv_heads", None),
+    "v_zero":  (None, None, None, "kv_heads", None),
+    "k_scale": (None, None, "kv_heads", None),
+    "k_zero":  (None, None, "kv_heads", None),
+    # MLA latent pool: latent channel axis is replicated
+    "c_vals":  (None, None, None, None),
+    "kr_vals": (None, None, None, None),
+    "c_scale": (None, None, None),
+    "c_zero":  (None, None, None),
+    "kr_scale": (None, None, None),
+    "kr_zero": (None, None, None),
+    # SSM state pool
+    "conv":      (None, None, None, None),
+    "ssd_vals":  (None, None, "heads", None, None),
+    "ssd_scale": (None, None, "heads"),
+}
+
+
+def pool_spec(mesh: Mesh, name: str, shape: Tuple[int, ...]) -> P:
+    """PartitionSpec for one pool leaf; drops non-divisible axes."""
+    axes = _POOL_RULES.get(name, (None,) * len(shape))
+    if len(axes) != len(shape):
+        axes = (None,) * len(shape)
+    ctx = _current()
+    rules = ctx[1] if ctx else DEFAULT_RULES
+    parts = []
+    for dim, ax in zip(shape, axes):
+        if ax is None:
+            parts.append(None)
+            continue
+        cand = tuple(a for a in rules.get(ax, ()) if a in mesh.axis_names)
+        size = int(np.prod([mesh.shape[a] for a in cand])) if cand else 1
+        if size > 1 and dim % size == 0:
+            parts.append(cand[0] if len(cand) == 1 else tuple(cand))
+        else:
+            parts.append(None)
+    return P(*parts)
+
+
+def tree_pool_shardings(mesh: Mesh, pool) -> "jax.tree_util.PyTreeDef":
+    """NamedSharding pytree for a paged-cache / state-pool dict keyed by the
+    *last* path component (pool dicts nest as ``{"p0": {"k_vals": ...}}``)."""
+    def visit(path, leaf):
+        name = str(getattr(path[-1], "key", None)
+                   or getattr(path[-1], "name", None)
+                   or str(path[-1]).lstrip(".")) if path else ""
+        if hasattr(leaf, "shape"):
+            return NamedSharding(mesh, pool_spec(mesh, name, leaf.shape))
+        return NamedSharding(mesh, P())
+    return jax.tree_util.tree_map_with_path(visit, pool)
+
+
+def tree_param_shardings(mesh: Mesh, params,
+                         serving: bool = False) -> "jax.tree_util.PyTreeDef":
     """NamedSharding pytree matching ``params`` (works on ShapeDtypeStructs
-    and on QTensor-containing trees: QTensor fields inherit from the path)."""
+    and on QTensor-containing trees: QTensor fields inherit from the path).
+
+    ``serving=True`` applies the gather-based-TP overrides (row-parallel
+    weights replicated on their contraction dim) — the paged engines' bit-
+    stability contract requires every matmul reduction to be device-local.
+    """
     def visit(path, leaf):
         ps = "/".join(
             str(getattr(k, "key", None) or getattr(k, "idx", None)
                 or getattr(k, "name", None) or str(k).lstrip("."))
             for k in path)
         if hasattr(leaf, "shape"):
-            return NamedSharding(mesh, param_spec(mesh, ps, leaf.shape))
+            return NamedSharding(
+                mesh, param_spec(mesh, ps, leaf.shape, serving=serving))
         return NamedSharding(mesh, P())
     return jax.tree_util.tree_map_with_path(visit, params)

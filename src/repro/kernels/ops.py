@@ -15,10 +15,14 @@ REPRO_FORCE_PALLAS=1, interpret mode — used by integration tests).
 from __future__ import annotations
 
 import os
+from functools import partial
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
 
 from repro.core.qtensor import QTensor
 from . import ref
@@ -35,6 +39,30 @@ def _use_pallas() -> Optional[dict]:
     if jax.default_backend() == "tpu":
         return {"interpret": False}
     return None
+
+
+def _tp_plan(kh: int, h: int):
+    """Tensor-parallel routing plan for the GQA paged kernels.
+
+    When serving rules bind ``kv_heads`` to live mesh axes with product
+    ``n > 1`` and both head counts divide, each device should run the paged
+    kernel over *its own* head slice — attention is head-local, and the q
+    head block [i*H/n, (i+1)*H/n) attends exactly kv heads
+    [i*KH/n, (i+1)*KH/n) (heads are grouped kv-major), so the per-shard
+    launches compute the same floats as one wide launch.  Returns
+    ``(mesh, axis)`` or None (unsharded / oracle / non-divisible — the
+    caller falls back to the shard-oblivious single launch)."""
+    from repro.distributed import sharding as shd
+    mesh = shd.active_mesh()
+    if mesh is None:
+        return None
+    axes = shd.resolve("kv_heads")
+    if not axes:
+        return None
+    n = int(np.prod([mesh.shape[a] for a in axes]))
+    if n <= 1 or kh % n or h % n:
+        return None
+    return mesh, (axes[0] if len(axes) == 1 else tuple(axes))
 
 
 def quantize_rowwise(x2d: jax.Array):
@@ -106,9 +134,24 @@ def paged_decode_attention(q, k_vals, k_scale, k_zero, v_vals, v_scale, v_zero,
     dense engine's oracle — golden-parity contract)."""
     pk = _use_pallas()
     if pk is not None:
-        return paged_kv_decode_attention(q, k_vals, k_scale, k_zero,
-                                         v_vals, v_scale, v_zero,
-                                         block_tables, lengths, **pk)
+        fn = partial(paged_kv_decode_attention, **pk)
+        tp = _tp_plan(k_vals.shape[-2], q.shape[-2])
+        if tp is not None:
+            mesh, ax = tp
+            fn = shard_map(
+                fn, mesh=mesh,
+                in_specs=(P(None, ax, None),        # q (B,H,D)
+                          P(None, None, ax, None),  # k_vals (N,T,KH,D)
+                          P(None, ax, None),        # k_scale (B,KH,D)
+                          P(None, ax, None),        # k_zero
+                          P(None, None, ax, None),  # v_vals
+                          P(None, None, ax, None),  # v_scale (N,T,KH,1)
+                          P(None, None, ax, None),  # v_zero
+                          P(None, None), P(None)),  # block_tables, lengths
+                out_specs=P(None, ax, None),
+                check_rep=False)
+        return fn(q, k_vals, k_scale, k_zero, v_vals, v_scale, v_zero,
+                  block_tables, lengths)
     return ref.paged_kv_decode_attention_ref(q, k_vals, k_scale, k_zero,
                                              v_vals, v_scale, v_zero,
                                              block_tables, lengths)
@@ -122,9 +165,24 @@ def paged_verify_attention(q, k_vals, k_scale, k_zero, v_vals, v_scale,
     the greedy spec-decode golden contract.  q: (B,G,H,D) -> (B,G,H,D)."""
     pk = _use_pallas()
     if pk is not None:
-        return pa.paged_kv_verify_attention(q, k_vals, k_scale, k_zero,
-                                            v_vals, v_scale, v_zero,
-                                            block_tables, lengths, **pk)
+        fn = partial(pa.paged_kv_verify_attention, **pk)
+        tp = _tp_plan(k_vals.shape[-2], q.shape[-2])
+        if tp is not None:
+            mesh, ax = tp
+            fn = shard_map(
+                fn, mesh=mesh,
+                in_specs=(P(None, None, ax, None),  # q (B,G,H,D)
+                          P(None, None, ax, None),  # k_vals
+                          P(None, ax, None),        # k_scale (B,KH,D)
+                          P(None, ax, None),        # k_zero
+                          P(None, None, ax, None),  # v_vals
+                          P(None, None, ax, None),  # v_scale
+                          P(None, None, ax, None),  # v_zero
+                          P(None, None), P(None)),  # block_tables, lengths
+                out_specs=P(None, None, ax, None),
+                check_rep=False)
+        return fn(q, k_vals, k_scale, k_zero, v_vals, v_scale, v_zero,
+                  block_tables, lengths)
     return ref.paged_kv_verify_attention_ref(q, k_vals, k_scale, k_zero,
                                              v_vals, v_scale, v_zero,
                                              block_tables, lengths)
@@ -164,10 +222,26 @@ def paged_prefix_chunk_attention(q, k_vals, k_scale, k_zero, v_vals, v_scale,
     oracle elsewhere).  q: (1,C,H,D) -> (1,C,H,D) f32."""
     pk = _use_pallas()
     if pk is not None:
-        return pa.paged_prefix_chunk_attention(q, k_vals, k_scale, k_zero,
-                                               v_vals, v_scale, v_zero,
-                                               k_chunk, v_chunk, block_row,
-                                               ctx, **pk)
+        fn = partial(pa.paged_prefix_chunk_attention, **pk)
+        tp = _tp_plan(k_vals.shape[-2], q.shape[-2])
+        if tp is not None:
+            mesh, ax = tp
+            fn = shard_map(
+                fn, mesh=mesh,
+                in_specs=(P(None, None, ax, None),  # q (1,C,H,D)
+                          P(None, None, ax, None),  # k_vals (N,T,KH,D)
+                          P(ax, None),              # k_scale[slot] (KH,D)
+                          P(ax, None),              # k_zero[slot]
+                          P(None, None, ax, None),  # v_vals
+                          P(None, None, ax, None),  # v_scale
+                          P(None, None, ax, None),  # v_zero
+                          P(None, None, ax, None),  # k_chunk (1,C,KH,D)
+                          P(None, None, ax, None),  # v_chunk
+                          P(None), P()),            # block_row, ctx
+                out_specs=P(None, None, ax, None),
+                check_rep=False)
+        return fn(q, k_vals, k_scale, k_zero, v_vals, v_scale, v_zero,
+                  k_chunk, v_chunk, block_row, ctx)
     return ref.paged_prefix_chunk_attention_ref(q, k_vals, k_scale, k_zero,
                                                 v_vals, v_scale, v_zero,
                                                 k_chunk, v_chunk, block_row,

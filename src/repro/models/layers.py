@@ -87,13 +87,21 @@ def swiglu_init(key, d: int, f: int, dtype=jnp.float32):
     }
 
 
-def swiglu_apply(p, x: jax.Array, act_name: str = "silu") -> jax.Array:
+def swiglu_apply(p, x: jax.Array, act_name: str = "silu", *,
+                 gather: bool = False) -> jax.Array:
     """Gated FFN: act(x @ w_gate) * (x @ w_up) @ w_out, TP-sharded on f.
 
     Weights may be QTensors (quantized runtime path) — qdot dispatches.
+    ``gather=True`` (paged serving): all-gather the f-sharded hidden so the
+    (replicated) ``w_out`` reduction stays device-local — gather-based TP
+    keeps the sharded engine bit-identical to the unsharded one.  Training
+    keeps the row-parallel f-sharding (partial-sum psum is cheaper there and
+    bit-stability is not contractual).
     """
     h = act(act_name)(qdot(x, p["w_gate"])) * qdot(x, p["w_up"])
-    if h.ndim == 3:
+    if gather:
+        h = constrain(h, "batch", *([None] * (h.ndim - 1)))
+    elif h.ndim == 3:
         h = constrain(h, "batch", "seq", "ffn")
     elif h.ndim == 2:                      # flattened-token callers (MoE shared)
         h = constrain(h, "batch", "ffn")

@@ -52,6 +52,11 @@ def mla_queries(p, x: jax.Array, cfg: ModelConfig, positions: jax.Array):
     q = qdot(q, p["q_b"]).reshape(b, s, h, dn + dr)
     q_nope, q_rope = q[..., :dn], q[..., dn:]
     q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    # TP boundary: q_b is column-parallel over `heads`, so the paged MLA
+    # kernels (and the absorbed einsums) see head-sharded queries while the
+    # latent cache stays replicated
+    q_nope = constrain(q_nope, "batch", None, "heads", None)
+    q_rope = constrain(q_rope, "batch", None, "heads", None)
     return q_nope, q_rope
 
 

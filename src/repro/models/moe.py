@@ -75,7 +75,8 @@ def _route(logits: jax.Array, k: int, capacity: int) -> Tuple[jax.Array, jax.Arr
     return dispatch, combine, aux
 
 
-def moe_apply(p, x: jax.Array, cfg: ModelConfig) -> Tuple[jax.Array, jax.Array]:
+def moe_apply(p, x: jax.Array, cfg: ModelConfig, *,
+              gather: bool = False) -> Tuple[jax.Array, jax.Array]:
     """x: (B, S, D) -> (out, aux_loss).
 
     GShard-style grouped dispatch: tokens are split into routing groups of
@@ -128,7 +129,10 @@ def moe_apply(p, x: jax.Array, cfg: ModelConfig) -> Tuple[jax.Array, jax.Array]:
     ew = p["experts"]
     h = act(cfg.act_fn)(jnp.einsum("egcd,edf->egcf", dispatched, _ew(ew["w_gate"])))
     h = h * jnp.einsum("egcd,edf->egcf", dispatched, _ew(ew["w_up"]))
-    h = constrain(h, "experts", "moe_groups", None, "expert_ffn")
+    # gather=True (paged serving): all-gather the f-sharded hidden so the
+    # (replicated) w_out contraction stays device-local — bit-stable TP
+    h = constrain(h, "experts", "moe_groups", None,
+                  None if gather else "expert_ffn")
     expert_out = jnp.einsum("egcf,efd->egcd", h, _ew(ew["w_out"]))
     expert_out = constrain(expert_out, "experts", "moe_groups", None, None)
     # reshard e->g (all-to-all) BEFORE the combine einsum so it stays local
@@ -139,5 +143,6 @@ def moe_apply(p, x: jax.Array, cfg: ModelConfig) -> Tuple[jax.Array, jax.Array]:
     out = constrain(out, "moe_groups", None, None)
     out = out.reshape(b * s, d)
     if cfg.n_shared_experts:
-        out = out + swiglu_apply(p["shared"], x.reshape(b * s, d), cfg.act_fn)
+        out = out + swiglu_apply(p["shared"], x.reshape(b * s, d), cfg.act_fn,
+                                 gather=gather)
     return out.reshape(b, s, d), aux * cfg.router_aux_coef

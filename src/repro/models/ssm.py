@@ -248,8 +248,12 @@ def ssm_decode_step(p, x_t: jax.Array, state: Dict, cfg: ModelConfig
     y = jnp.einsum("bhpn,bn->bhp", hs, c_t.astype(jnp.float32))
     y = y + p["D"][None, :, None] * xh
     y = y.reshape(bsz, di)
-    y = rms_norm((y * jax.nn.silu(z.astype(jnp.float32))).astype(dt_c),
-                 p["gn_gamma"], cfg.norm_eps)
+    # all-gather the inner-sharded gated activation: both the rms_norm's
+    # cross-channel reduction and the (replicated) out_proj contraction must
+    # stay device-local for bit-stable sharded serving
+    y = constrain((y * jax.nn.silu(z.astype(jnp.float32))).astype(dt_c),
+                  "batch", None)
+    y = rms_norm(y, p["gn_gamma"], cfg.norm_eps)
     out = qdot(y, p["out_proj"])
     return out, {"ssm": hs,
                  "conv": jnp.concatenate([new_cx, new_cb, new_cc], axis=-1)}
@@ -316,8 +320,11 @@ def ssm_prefill_chunk(p, x: jax.Array, cfg: ModelConfig, *,
                               p["A_log"], b_mat, c_mat, p["D"],
                               cfg.ssm_chunk, init_ssd)
     y = y.reshape(bsz, c, di)
-    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(dt_c),
-                 p["gn_gamma"], cfg.norm_eps)
+    # all-gather before the cross-channel rms_norm + (replicated) out_proj:
+    # keeps every reduction device-local (bit-stable sharded serving)
+    y = constrain(y * jax.nn.silu(z.astype(jnp.float32)).astype(dt_c),
+                  "batch", None, None)
+    y = rms_norm(y, p["gn_gamma"], cfg.norm_eps)
     out = qdot(y, p["out_proj"])
     new_tail = jax.lax.dynamic_slice_in_dim(full, chunk_len, k1, axis=1)
     return out, {"ssm": final_state, "conv": new_tail}

@@ -365,6 +365,16 @@ def forward_decode(params, tokens_t, cache, cfg: ModelConfig):
 # Paged-cache entry points (block-table path — serving/scheduler.py)
 # ---------------------------------------------------------------------------
 
+def _gather_heads(out):
+    """All-gather a head-sharded attention output before the (replicated)
+    ``wo`` matmul.  Serving TP is gather-based: the projection's reduction
+    stays device-local, so sharded paged decode is bit-identical to the
+    unsharded engine (a partial-sum psum would reassociate fp adds and
+    cross int8 round() boundaries in the pool quantizers).  No-op when no
+    mesh is bound."""
+    return constrain(out, "batch", *([None] * (out.ndim - 1)))
+
+
 def _block_prefill_chunk(p_blk, h, pool_blk, spool_blk, cfg: ModelConfig, *,
                          positions, slot, block_row, ctx, chunk_len,
                          block_size: int, is_first: bool, state_slot):
@@ -402,7 +412,8 @@ def _block_prefill_chunk(p_blk, h, pool_blk, spool_blk, cfg: ModelConfig, *,
                     q, entry["k_vals"], entry["k_scale"][slot],
                     entry["k_zero"][slot], entry["v_vals"], entry["v_scale"],
                     entry["v_zero"], k, v, block_row, ctx)
-            mix = qdot(out.astype(x.dtype).reshape(1, c, -1), p["attn"]["wo"])
+            mix = qdot(_gather_heads(out.astype(x.dtype).reshape(1, c, -1)),
+                       p["attn"]["wo"])
             new_pool[f"p{i}"] = entry
         elif spec.mixer == "mla":
             entry = pool_blk[f"p{i}"]
@@ -441,8 +452,9 @@ def _block_prefill_chunk(p_blk, h, pool_blk, spool_blk, cfg: ModelConfig, *,
                     c_kv, k_rope, block_row, ctx, qk_nope_dim=dn)
                 out = jnp.einsum("bchr,rhd->bchd", o_lat,
                                  w_uv.astype(jnp.float32))
-            mix = qdot(out.astype(x.dtype).reshape(1, c, h_heads * dv),
-                       p["attn"]["wo"])
+            mix = qdot(
+                _gather_heads(out.astype(x.dtype).reshape(1, c, h_heads * dv)),
+                p["attn"]["wo"])
             new_pool[f"p{i}"] = entry
         else:  # ssm: state pool carry across chunk boundaries
             sentry = spool_blk[f"p{i}"]
@@ -451,14 +463,17 @@ def _block_prefill_chunk(p_blk, h, pool_blk, spool_blk, cfg: ModelConfig, *,
                                           chunk_len=chunk_len,
                                           is_first=is_first)
             new_spool[f"p{i}"] = spl.write_state(sentry, state_slot, work)
-        h = h + mix
+        # chunk/verify activations keep seq unsharded (the chunk is small;
+        # sharding C over `model` would fight the TP head sharding) — the
+        # constraint marks the row-parallel wo/w_out reduce-scatter boundary
+        h = h + constrain(mix, "batch", None, "embed")
         if spec.ffn != "none":
             y = rms_norm(h, p["norm_ffn"], cfg.norm_eps)
             if spec.ffn == "dense":
-                f = swiglu_apply(p["ffn"], y, cfg.act_fn)
+                f = swiglu_apply(p["ffn"], y, cfg.act_fn, gather=True)
             else:
-                f, _ = moe_apply(p["moe"], y, cfg)
-            h = h + f
+                f, _ = moe_apply(p["moe"], y, cfg, gather=True)
+            h = h + constrain(f, "batch", None, "embed")
     return h, new_pool, new_spool
 
 
@@ -475,6 +490,7 @@ def forward_prefill_chunk(params, tokens, pool, cfg: ModelConfig, *,
     """
     spool = {} if state_pool is None else state_pool
     h, _ = embed_tokens(params, tokens, cfg)
+    h = constrain(h, "batch", None, "embed")
     b, s, _ = h.shape
     positions = jnp.broadcast_to(ctx + jnp.arange(s)[None, :], (b, s))
 
@@ -522,7 +538,8 @@ def _block_decode_paged(p_blk, h, pool_blk, spool_blk, cfg: ModelConfig, *,
                 q[:, 0], entry["k_vals"], entry["k_scale"], entry["k_zero"],
                 entry["v_vals"], entry["v_scale"], entry["v_zero"],
                 block_tables, lengths + 1)
-            mix = qdot(out.astype(x.dtype).reshape(b, -1), p["attn"]["wo"])
+            mix = qdot(_gather_heads(out.astype(x.dtype).reshape(b, -1)),
+                       p["attn"]["wo"])
             new_pool[f"p{i}"] = entry
         elif spec.mixer == "mla":
             entry = pool_blk[f"p{i}"]
@@ -537,23 +554,25 @@ def _block_decode_paged(p_blk, h, pool_blk, spool_blk, cfg: ModelConfig, *,
                                  gath["c_vals"], gath["c_scale"], gath["c_zero"],
                                  gath["kr_vals"], gath["kr_scale"], gath["kr_zero"],
                                  w_uk, w_uv, lengths + 1, cfg)
-            mix = qdot(out.astype(x.dtype).reshape(b, -1), p["attn"]["wo"])
+            mix = qdot(_gather_heads(out.astype(x.dtype).reshape(b, -1)),
+                       p["attn"]["wo"])
             new_pool[f"p{i}"] = entry
         else:  # ssm: O(1) recurrent update through the state slot pool
             sentry = spool_blk[f"p{i}"]
             work = spl.read_state(sentry, state_slots)
             mix, work = ssm_decode_step(p["ssm"], x, work, cfg)
             new_spool[f"p{i}"] = spl.write_state(sentry, state_slots, work)
-        h = h + mix.astype(h.dtype)
+        h = h + constrain(mix.astype(h.dtype), "batch", "embed")
 
         if spec.ffn != "none":
             y = rms_norm(h, p["norm_ffn"], cfg.norm_eps)
             if spec.ffn == "dense":
-                f = swiglu_apply(p["ffn"], y[:, None, :], cfg.act_fn)[:, 0]
+                f = swiglu_apply(p["ffn"], y[:, None, :], cfg.act_fn,
+                                 gather=True)[:, 0]
             else:
-                f, _ = moe_apply(p["moe"], y[:, None, :], cfg)
+                f, _ = moe_apply(p["moe"], y[:, None, :], cfg, gather=True)
                 f = f[:, 0]
-            h = h + f.astype(h.dtype)
+            h = h + constrain(f.astype(h.dtype), "batch", "embed")
     return h, new_pool, new_spool
 
 
@@ -577,7 +596,7 @@ def forward_decode_paged(params, tokens_t, pool, block_tables, lengths,
                 for i in range(cfg.n_codebooks))
     else:
         h = params["embed"]["tok"][tokens_t]
-    h = h.astype(dt)                                       # (B, D)
+    h = constrain(h.astype(dt), "batch", "embed")          # (B, D)
 
     def body(h, xs):
         p_blk, pool_blk, spool_blk = xs
@@ -630,7 +649,8 @@ def _block_verify_paged(p_blk, h, pool_blk, cfg: ModelConfig, *,
                 q, entry["k_vals"], entry["k_scale"], entry["k_zero"],
                 entry["v_vals"], entry["v_scale"], entry["v_zero"],
                 block_tables, lengths)                             # (B,G,H,D)
-            mix = qdot(out.astype(x.dtype).reshape(b, g, -1), p["attn"]["wo"])
+            mix = qdot(_gather_heads(out.astype(x.dtype).reshape(b, g, -1)),
+                       p["attn"]["wo"])
             new_pool[f"p{i}"] = entry
         elif spec.mixer == "mla":
             entry = pool_blk[f"p{i}"]
@@ -648,21 +668,22 @@ def _block_verify_paged(p_blk, h, pool_blk, cfg: ModelConfig, *,
                 entry["c_vals"], entry["c_scale"], entry["c_zero"],
                 entry["kr_vals"], entry["kr_scale"], entry["kr_zero"],
                 block_tables, lengths)                             # (B,G,H,dv)
-            mix = qdot(out.astype(x.dtype).reshape(b, g, -1), p["attn"]["wo"])
+            mix = qdot(_gather_heads(out.astype(x.dtype).reshape(b, g, -1)),
+                       p["attn"]["wo"])
             new_pool[f"p{i}"] = entry
         else:
             raise NotImplementedError(
                 "spec-decode verify has no SSM rewind path; gate via "
                 "spec_decode.ensure_spec_supported before building the step")
-        h = h + mix.astype(h.dtype)
+        h = h + constrain(mix.astype(h.dtype), "batch", None, "embed")
 
         if spec.ffn != "none":
             y = rms_norm(h, p["norm_ffn"], cfg.norm_eps)
             if spec.ffn == "dense":
-                f = swiglu_apply(p["ffn"], y, cfg.act_fn)
+                f = swiglu_apply(p["ffn"], y, cfg.act_fn, gather=True)
             else:
-                f, _ = moe_apply(p["moe"], y, cfg)
-            h = h + f.astype(h.dtype)
+                f, _ = moe_apply(p["moe"], y, cfg, gather=True)
+            h = h + constrain(f.astype(h.dtype), "batch", None, "embed")
     return h, new_pool
 
 
@@ -687,6 +708,7 @@ def forward_verify_paged(params, tokens, pool, block_tables, lengths, vlens,
     """
     dt = cfg.compute_dtype
     h = params["embed"]["tok"][tokens].astype(dt)          # (B, G, D)
+    h = constrain(h, "batch", None, "embed")
 
     def body(h, xs):
         p_blk, pool_blk = xs

@@ -302,11 +302,18 @@ class PagedServeEngine:
     the win; ``draft_nbytes()`` the memory bill.
     """
 
-    def __init__(self, params, cfg: ModelConfig, scfg=None):
+    def __init__(self, params, cfg: ModelConfig, scfg=None, *, mesh=None,
+                 rules=None):
+        """``mesh``: optional ``jax.sharding.Mesh`` for tensor-parallel
+        (``model`` axis) and expert-parallel (``data`` axis) serving inside
+        this single engine — params, KV pool and the fused step are committed
+        to the mesh (see ``Scheduler``); greedy output stays token-for-token
+        identical to the unsharded engine."""
         from repro.serving.scheduler import (Scheduler, SchedulerConfig,
                                              ensure_paged_supported)
         ensure_paged_supported(cfg)
-        self.scheduler = Scheduler(params, cfg, scfg or SchedulerConfig())
+        self.scheduler = Scheduler(params, cfg, scfg or SchedulerConfig(),
+                                   mesh=mesh, rules=rules)
 
     @property
     def finished(self) -> List[Request]:

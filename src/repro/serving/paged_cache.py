@@ -615,3 +615,23 @@ def paged_cache_nbytes(pool) -> int:
         if hasattr(leaf, "nbytes"):
             total += leaf.nbytes
     return total
+
+
+def per_device_nbytes(tree) -> int:
+    """Max over devices of the bytes one device actually holds for ``tree``.
+
+    For a pool sharded over the ``model`` axis this is what HBM sees per
+    chip: the ``kv_heads``-sharded leaves contribute ``nbytes / model`` each,
+    replicated leaves contribute in full.  On an unsharded tree every leaf
+    has exactly one addressable shard, so this degenerates to
+    :func:`paged_cache_nbytes`."""
+    per: dict = {}
+    for leaf in jax.tree_util.tree_leaves(tree):
+        shards = getattr(leaf, "addressable_shards", None)
+        if shards:
+            for s in shards:
+                d = getattr(s, "device", None)
+                per[d] = per.get(d, 0) + int(s.data.nbytes)
+        elif hasattr(leaf, "nbytes"):
+            per[None] = per.get(None, 0) + int(leaf.nbytes)
+    return max(per.values()) if per else 0

@@ -46,11 +46,25 @@ import time
 from typing import Any, Dict, List, Optional
 
 import numpy as np
+from jax.sharding import Mesh
 
 from repro.serving.scheduler import (Scheduler, SchedulerConfig,
                                      _prefix_keys, ensure_paged_supported)
 
 ROUTING_POLICIES = ("round_robin", "least_loaded", "prefix_affinity")
+
+
+def _replica_submesh(mesh, i: int):
+    """Replica ``i``'s device slice: the full ``model`` axis at data-index
+    ``i``.  The data axis survives with size 1 so the rule table needs no
+    rewriting — size-1 axes are dropped by the divisibility fallback, and
+    ``experts`` (EP over ``data``) degenerates to replicated inside one
+    replica while ``heads``/``ffn``/``vocab`` still shard over ``model``."""
+    ax = list(mesh.axis_names)
+    if "data" not in ax:
+        return mesh
+    dev = np.take(mesh.devices, [i], axis=ax.index("data"))
+    return Mesh(dev, mesh.axis_names)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -118,11 +132,18 @@ class ReplicatedServeEngine:
         # one copy of the draft weights per fleet, not per replica
         self.replicas = []
         draft_built = None
-        for nb, ss in zip(self.shards, slot_shards):
+        for i, (nb, ss) in enumerate(zip(self.shards, slot_shards)):
+            # with a live mesh each replica is pinned to its own data-axis
+            # device slice (a (1, model) submesh): its params are committed
+            # tensor-parallel over `model`, its pool kv-head-sharded over the
+            # same devices, and its fused step compiles against exactly that
+            # slice — replicas stepped via step_launch/step_consume then run
+            # concurrently on disjoint devices
+            sub = _replica_submesh(mesh, i) if mesh is not None else None
             rep = Scheduler(params, cfg,
                             dataclasses.replace(scfg, num_blocks=nb,
                                                 num_state_slots=ss),
-                            draft_built=draft_built)
+                            draft_built=draft_built, mesh=sub)
             if rep.draft is not None and draft_built is None:
                 draft_built = (rep.draft.dparams, rep.draft.dcfg)
             self.replicas.append(rep)
@@ -191,14 +212,18 @@ class ReplicatedServeEngine:
         return i
 
     def step(self) -> bool:
-        """One frontend iteration: step every replica that has work, then
-        sync EMA scale state on the configured cadence."""
+        """One frontend iteration: *launch* every replica's fused step before
+        consuming any of them (jax dispatch is async, so replicas pinned to
+        disjoint device slices overlap their compute instead of serializing
+        through this host loop), then sync EMA scale state on the configured
+        cadence."""
         if self._t_start is None:
             self._t_start = time.perf_counter()
+        launched = [(r, r.step_launch())
+                    for r in self.replicas if r.has_work]
         progressed = False
-        for r in self.replicas:
-            if r.has_work:
-                progressed = r.step() or progressed
+        for r, ctx in launched:
+            progressed = r.step_consume(ctx) or progressed
         self._steps += 1
         if progressed:
             self._t_last = time.perf_counter()

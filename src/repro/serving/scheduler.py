@@ -71,14 +71,16 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.online import EmaScaleState
+from repro.distributed import sharding as shd
 from repro.models.config import ModelConfig
 from repro.models.transformer import (forward_decode_paged,
                                       forward_prefill_chunk,
                                       forward_verify_paged)
 from repro.serving.paged_cache import (BlockAllocator, PagedCacheConfig,
                                        copy_pool_block, init_paged_cache,
-                                       paged_cache_nbytes, restore_slot_scales,
-                                       rewind_tail, snapshot_slot_scales)
+                                       paged_cache_nbytes, per_device_nbytes,
+                                       restore_slot_scales, rewind_tail,
+                                       snapshot_slot_scales)
 from repro.serving.spec_decode import (DraftProposer, SpecConfig,
                                        ensure_spec_supported)
 from repro.serving.state_pool import (StateAllocator, init_state_pool,
@@ -118,11 +120,19 @@ class SchedulerConfig:
     ema_alpha: float = 0.9
     seed: int = 0
     prefix_cache: bool = True            # publish/match full prompt blocks
-    partial_prefix: bool = False         # sub-block sharing: after the full-
+    partial_prefix: bool = True          # sub-block sharing: after the full-
                                          # block chain match, device-copy the
                                          # longest matching partial tail of a
                                          # published block into the request's
                                          # first private block
+    partial_min_tokens: int = 4          # shortest common run worth a partial
+                                         # hit: shorter runs trade a full
+                                         # block copy + the donor's frozen K
+                                         # affine (computed on an unrelated
+                                         # prompt) for skipping a token or
+                                         # two of prefill — a bad perf trade
+                                         # that also perturbs warm-request
+                                         # quantization scales
     num_state_slots: int = 0             # SSM state-pool slots (0 = max_batch)
     priority_age_steps: int = 0          # waiting requests gain +1 effective
                                          # priority every N steps (0 = off) —
@@ -248,29 +258,48 @@ def _chunk_bucket(c: int, cap: int) -> int:
     return min(b, max(cap, c))
 
 
-# one jitted fused step per (cfg, block_size) and one CoW copy, shared by
-# every Scheduler instance: N replicas of the same model reuse a single
-# compilation cache instead of paying the identical compile per engine
+# one jitted fused step per (cfg, block_size, mesh fingerprint) and one CoW
+# copy, shared by every Scheduler instance: N replicas of the same model over
+# the same (sub)mesh reuse a single compilation cache instead of paying the
+# identical compile per engine.  The fingerprint keeps sharded and unsharded
+# engines — or engines on different meshes — from colliding on one
+# executable whose baked-in shardings only fit one of them.
 _STEP_FN_CACHE: Dict[Any, Any] = {}
 _COW_FN: Any = None
 
 
-def _step_fn_for(cfg: ModelConfig, block_size: int):
-    key = (cfg, block_size)
+def _mesh_traced(impl, mesh, rules):
+    """Close ``impl`` over an ``axis_rules`` binding so the sharding
+    constraints inside the model code are active *at trace time* (the rules
+    live in a thread-local read while jit traces, not at call time)."""
+    if mesh is None:
+        return impl
+
+    def traced(*args, do_prefill, do_decode, pf_first):
+        with shd.axis_rules(mesh, rules):
+            return impl(*args, do_prefill=do_prefill, do_decode=do_decode,
+                        pf_first=pf_first)
+    return traced
+
+
+def _step_fn_for(cfg: ModelConfig, block_size: int, mesh=None, rules=None):
+    key = (cfg, block_size, shd.mesh_fingerprint(mesh, rules))
     fn = _STEP_FN_CACHE.get(key)
     if fn is None:
-        fn = jax.jit(partial(_step_impl, cfg=cfg, block_size=block_size),
+        base = partial(_step_impl, cfg=cfg, block_size=block_size)
+        fn = jax.jit(_mesh_traced(base, mesh, rules),
                      static_argnames=("do_prefill", "do_decode", "pf_first"),
                      donate_argnums=(1, 2))
         _STEP_FN_CACHE[key] = fn
     return fn
 
 
-def _spec_fn_for(cfg: ModelConfig, block_size: int):
-    key = (cfg, block_size, "spec")
+def _spec_fn_for(cfg: ModelConfig, block_size: int, mesh=None, rules=None):
+    key = (cfg, block_size, "spec", shd.mesh_fingerprint(mesh, rules))
     fn = _STEP_FN_CACHE.get(key)
     if fn is None:
-        fn = jax.jit(partial(_spec_step_impl, cfg=cfg, block_size=block_size),
+        base = partial(_spec_step_impl, cfg=cfg, block_size=block_size)
+        fn = jax.jit(_mesh_traced(base, mesh, rules),
                      static_argnames=("do_prefill", "do_decode", "pf_first"),
                      donate_argnums=(1, 2))
         _STEP_FN_CACHE[key] = fn
@@ -288,12 +317,23 @@ class Scheduler:
     """Paged continuous-batching scheduler (host-side control plane)."""
 
     def __init__(self, params, cfg: ModelConfig, scfg: SchedulerConfig, *,
-                 draft_built=None):
+                 draft_built=None, mesh=None, rules=None):
         """``draft_built``: optional pre-built draft ``(params, cfg)`` pair
         handed to the proposer so replica fleets quantize the draft once
         (see ``ReplicatedServeEngine``); ignored when ``scfg.spec`` is
-        unset."""
+        unset.
+
+        ``mesh``/``rules``: optional ``jax.sharding.Mesh`` (+ logical-axis
+        rule overrides) for tensor/expert-parallel serving *inside* this
+        scheduler.  Params are committed to ``param_spec`` shardings
+        (``heads``/``kv_heads``/``ffn``/``vocab`` over ``model``, experts
+        over ``data``) and the KV block pool / SSM state pool to
+        kv-head-sharded layouts pinned to the mesh's devices; the fused step
+        is traced under ``axis_rules(mesh, rules)`` so activation
+        constraints in the model code become real collective boundaries."""
         ensure_paged_supported(cfg)
+        self.mesh = mesh
+        self.rules = rules
         self.params = params
         self.cfg = cfg
         self.scfg = scfg
@@ -314,6 +354,20 @@ class Scheduler:
         # reduction over the whole prefix and cannot be adopted from a donor,
         # so hybrid configs must prefill every token themselves
         self._prefix_on = scfg.prefix_cache and not self._has_ssm
+        if mesh is not None:
+            # commit params + pools to their mesh placements now: jit infers
+            # in_shardings from committed inputs, so the traced constraints
+            # and the actual layouts agree from the first step (no silent
+            # full-replication resharding on entry)
+            with shd.axis_rules(mesh, rules):
+                self.params = jax.device_put(
+                    params,
+                    shd.tree_param_shardings(mesh, params, serving=True))
+                self.pool = jax.device_put(
+                    self.pool, shd.tree_pool_shardings(mesh, self.pool))
+                if self.spool:
+                    self.spool = jax.device_put(
+                        self.spool, shd.tree_pool_shardings(mesh, self.spool))
         self.block_tables = np.full(
             (scfg.max_batch, scfg.max_blocks_per_req), self.trash, np.int32)
         self.slots: List[Optional[_Run]] = [None] * scfg.max_batch
@@ -323,7 +377,7 @@ class Scheduler:
         self._scale_tag = 0                # scale-freeze epoch counter
         self._rng = jax.random.PRNGKey(scfg.seed)
         self.scale_state = EmaScaleState.init()
-        self._step_fn = _step_fn_for(cfg, scfg.block_size)
+        self._step_fn = _step_fn_for(cfg, scfg.block_size, mesh, rules)
         self._cow_fn = _shared_cow_fn()
         # speculative decoding: the draft proposer holds one dense-cache lane
         # per decode slot; the verify step replaces the one-token decode
@@ -335,7 +389,7 @@ class Scheduler:
             self.draft = DraftProposer(params, cfg, self.spec,
                                        max_batch=scfg.max_batch, capacity=cap,
                                        built=draft_built)
-            self._spec_fn = _spec_fn_for(cfg, scfg.block_size)
+            self._spec_fn = _spec_fn_for(cfg, scfg.block_size, mesh, rules)
         else:
             self.draft = None
             self._spec_fn = None
@@ -384,6 +438,17 @@ class Scheduler:
         """One iteration: admit -> schedule decode (or a speculative verify
         round) + one prefill chunk -> run the fused jitted step ->
         sample/retire."""
+        return self.step_consume(self.step_launch())
+
+    def step_launch(self) -> Optional[Dict[str, Any]]:
+        """Admit/schedule and *dispatch* the fused device step, without
+        blocking on its results.  jax dispatch is async: the returned context
+        holds logits futures that ``step_consume`` materializes.  Splitting
+        the step here lets ``ReplicatedServeEngine`` launch every replica's
+        step before consuming any of them, so replicas (each pinned to its
+        own ``data``-axis device slice) genuinely compute concurrently
+        instead of serializing through the host control loop.  Returns None
+        when there is no work this step."""
         if self._t_start is None:
             self._t_start = time.perf_counter()
         self._admit()
@@ -402,7 +467,7 @@ class Scheduler:
                 # proposal and the wide verify entirely
                 vlens = None
         if not dec_slots and pf is None:
-            return False
+            return None
         self.stats["steps"] += 1
         self._util_sum += self.alloc.utilization
         self._util_peak = max(self._util_peak, self.alloc.utilization)
@@ -415,17 +480,29 @@ class Scheduler:
                 self.params, self.pool, self.spool, *args["device"],
                 do_prefill=pf is not None, do_decode=True,
                 pf_first=(pf is None or pf[1] == 0))
-            self._consume_spec(dec_slots, vlens, drafts, ver_logits)
-        else:
-            args = self._build_args(dec_slots, pf)
-            pf_logits, dec_logits, self.pool, self.spool = self._step_fn(
-                self.params, self.pool, self.spool, *args["device"],
-                do_prefill=pf is not None, do_decode=bool(dec_slots),
-                pf_first=(pf is None or pf[1] == 0))
-            if dec_slots:
-                self._consume_decode(dec_slots, dec_logits)
+            return {"dec_slots": dec_slots, "vlens": vlens, "drafts": drafts,
+                    "pf": pf, "pf_logits": pf_logits,
+                    "ver_logits": ver_logits}
+        args = self._build_args(dec_slots, pf)
+        pf_logits, dec_logits, self.pool, self.spool = self._step_fn(
+            self.params, self.pool, self.spool, *args["device"],
+            do_prefill=pf is not None, do_decode=bool(dec_slots),
+            pf_first=(pf is None or pf[1] == 0))
+        return {"dec_slots": dec_slots, "vlens": None, "drafts": None,
+                "pf": pf, "pf_logits": pf_logits, "dec_logits": dec_logits}
+
+    def step_consume(self, launched: Optional[Dict[str, Any]]) -> bool:
+        """Block on a ``step_launch`` context's logits and sample/retire."""
+        if launched is None:
+            return False
+        dec_slots, pf = launched["dec_slots"], launched["pf"]
+        if launched["vlens"] is not None:
+            self._consume_spec(dec_slots, launched["vlens"],
+                               launched["drafts"], launched["ver_logits"])
+        elif dec_slots:
+            self._consume_decode(dec_slots, launched["dec_logits"])
         if pf is not None:
-            self._consume_prefill(pf, pf_logits)
+            self._consume_prefill(pf, launched["pf_logits"])
         self._t_last = time.perf_counter()
         return True
 
@@ -503,6 +580,9 @@ class Scheduler:
             "cache_util_avg": self._util_sum / steps,
             "cache_util_peak": self._util_peak,
             "cache_nbytes": paged_cache_nbytes(self.pool),
+            # what one device actually holds: shrinks with the `model` axis
+            # for kv-head-sharded pools, == cache_nbytes when unsharded
+            "cache_nbytes_per_device": per_device_nbytes(self.pool),
             "preemptions": self.stats["preemptions"],
             "failed_alloc": self.stats["failed_alloc"],
             "decode_steps": self.stats["decode_steps"],
@@ -528,6 +608,12 @@ class Scheduler:
                                      max(self.stats["spec_lane_rounds"], 1)),
             "spec_draft_nbytes": (self.draft.nbytes()
                                   if self.draft is not None else 0),
+            # lane rebuild split: pool-gather bootstraps (self-drafts) vs
+            # dense prefills (re-quantized / truncated drafts, fallback)
+            "spec_draft_prefills": (self.draft.prefills
+                                    if self.draft is not None else 0),
+            "spec_draft_bootstraps": (self.draft.bootstraps
+                                      if self.draft is not None else 0),
             # SSM state pool (hybrid patterns; zeros otherwise): slot
             # occupancy and the INT8 pool's allocated bytes
             "state_slots": (self.state_alloc.num_slots
@@ -660,7 +746,7 @@ class Scheduler:
             r = int(np.argmax(neq)) if neq.any() else width
             if r > best_r:
                 best, best_r = e, r
-        if best is None or best_r <= 0:
+        if best is None or best_r < max(1, self.scfg.partial_min_tokens):
             self.alloc.decref(got[0])          # unpublished active -> FREE
             return 0
         self.pool = self._cow_fn(self.pool, jnp.int32(best.block),
@@ -797,11 +883,15 @@ class Scheduler:
         for s in spec_slots:
             run = self.slots[s]
             if not self.draft.aligned(s, run.ctx):
-                # only misaligned lanes (fresh admission, preemption resume)
-                # pay the O(ctx) sequence rebuild + dense prefill
-                seq = _with_generated(np.asarray(run.req.prompt),
-                                      run.req.generated)
-                self.draft.ensure(s, seq, run.ctx)
+                # misaligned lanes (fresh admission, preemption resume):
+                # self-drafts rebuild by dequantizing the slot's pool blocks
+                # (one gather); everything else pays the O(ctx) sequence
+                # rebuild + dense prefill
+                if not self.draft.ensure_from_pool(
+                        s, self.pool, self.block_tables[s], run.ctx):
+                    seq = _with_generated(np.asarray(run.req.prompt),
+                                          run.req.generated)
+                    self.draft.ensure(s, seq, run.ctx)
             pending[s] = run.pending
         return self.draft.propose(spec_slots, pending)
 

@@ -207,6 +207,43 @@ def _init_batch_cache(one_cache, b: int):
     return {"entries": entries, "length": jnp.zeros((b,), jnp.int32)}
 
 
+def _bootstrap_impl(pool, block_row, slot, ctx, *, cfg: ModelConfig,
+                    smax: int):
+    """Build one lane's dense draft cache straight from the target's paged
+    pool: gather + dequantize the slot's blocks (per-slot frozen K affine,
+    per-token V scales), zero the positions past ``ctx`` (trash-block
+    garbage), and re-quantize into the dense-cache layout the draft decodes
+    against.  For a ``draft_bits=0`` self-draft the pool K/V *is* what the
+    target attends to, so the lane starts at least as aligned as a fresh
+    dense prefill — at the cost of one gather instead of an O(ctx) forward
+    pass."""
+    from repro.serving import kv_cache as kvc
+    from repro.serving import paged_cache as pgc
+    dt = jnp.dtype(cfg.compute_dtype)
+    entries = {}
+    for i in range(len(cfg.layer_pattern)):
+        entry = pool[f"p{i}"]
+        k, v = jax.vmap(                       # pool leaves carry a leading
+            lambda e: pgc.gqa_gather_prefix(   # scan-repeat axis the paged
+                e, block_row, slot, dt))(entry)  # gather is oblivious to
+        mask = (jnp.arange(k.shape[1]) < ctx)[None, :, None, None]
+        k = jnp.where(mask, k, 0)[:, :smax]
+        v = jnp.where(mask, v, 0)[:, :smax]
+        entries[f"p{i}"] = jax.vmap(
+            lambda kk, vv: kvc.gqa_cache_entry(kk[None], vv[None], smax))(k, v)
+    return {"entries": entries,
+            "length": jnp.asarray(ctx, jnp.int32)[None]}
+
+
+def _bootstrap_fn_for(dcfg: ModelConfig, smax: int):
+    key = ("bootstrap", dcfg, smax)
+    fn = _DRAFT_FN_CACHE.get(key)
+    if fn is None:
+        fn = jax.jit(partial(_bootstrap_impl, cfg=dcfg, smax=smax))
+        _DRAFT_FN_CACHE[key] = fn
+    return fn
+
+
 class DraftProposer:
     """Per-slot draft state + batched gamma-token proposal.
 
@@ -244,7 +281,19 @@ class DraftProposer:
         self._propose = _propose_fn_for(self.dcfg, self.gamma)
         self._prefill = _prefill_fn_for(self.dcfg, self.smax)
         self._insert = _insert_fn()
-        self.prefills = 0                 # draft lane (re)builds, for metrics
+        # A pure self-draft (full depth, shared weights) attends to exactly
+        # the K/V the target holds in its block pool, so a misaligned lane
+        # can be rebuilt by gathering + re-quantizing pool blocks instead of
+        # re-running an O(ctx) dense prefill.  Pool entries only exist for
+        # attn positions, hence the all-attn requirement (spec decode
+        # already rejects SSM; MLA lanes still take the dense-prefill path).
+        self.can_bootstrap = (
+            spec.draft_bits == 0 and spec.draft_layers == 0
+            and all(s.mixer == "attn" for s in cfg.layer_pattern))
+        self._bootstrap = _bootstrap_fn_for(self.dcfg, self.smax) \
+            if self.can_bootstrap else None
+        self.prefills = 0                 # dense lane (re)builds, for metrics
+        self.bootstraps = 0               # pool-gather lane rebuilds
 
     # -- lane lifecycle -------------------------------------------------------
     def aligned(self, slot: int, ctx: int) -> bool:
@@ -277,6 +326,27 @@ class DraftProposer:
         self.lens[slot] = s
         self.valid[slot] = True
         self.prefills += 1
+
+    def ensure_from_pool(self, slot: int, pool, block_row, ctx: int) -> bool:
+        """Bootstrap lane ``slot`` to context ``ctx`` by dequantizing the
+        target's pool blocks (PR 6 remainder) — no dense prefill, no token
+        replay.  Returns False when this proposer cannot bootstrap (caller
+        falls back to ``ensure``).  Only the draft's *acceptance rate* rides
+        on lane content, never emitted tokens (greedy verify is lossless),
+        and for a self-draft the pool is the best lane content available."""
+        if self._bootstrap is None or ctx <= 0:
+            return False
+        if self.aligned(slot, ctx):
+            return True
+        one = self._bootstrap(pool, jnp.asarray(block_row, jnp.int32),
+                              jnp.int32(slot), jnp.int32(ctx))
+        if self._cache is None:
+            self._cache = _init_batch_cache(one, self.max_batch)
+        self._cache = self._insert(self._cache, one, slot)
+        self.lens[slot] = int(ctx)
+        self.valid[slot] = True
+        self.bootstraps += 1
+        return True
 
     def invalidate(self, slot: int) -> None:
         """Slot vacated (finish / preemption): the lane's content is dead."""

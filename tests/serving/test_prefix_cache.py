@@ -41,7 +41,9 @@ def _engine(params=PARAMS, cfg=CFG, **kw):
 
 
 def _golden_prefix_hit(params, cfg):
-    eng = _engine(params, cfg)
+    # full-block-chain matching in isolation (partial_prefix defaults on now;
+    # the partial-hit goldens below cover the sub-block layer)
+    eng = _engine(params, cfg, partial_prefix=False)
     eng.add_request(Request(uid=0, prompt=PROMPT48.copy(), max_new_tokens=8))
     eng.run()
     cold_chunks = eng.stats["prefill_chunks"]
@@ -95,7 +97,7 @@ def test_prefix_hit_shares_physical_blocks():
 def test_divergent_prompt_reuses_common_prefix_only():
     """A prompt sharing only the first block matches 16 tokens; the suffix
     is prefilled normally and generation completes."""
-    eng = _engine()
+    eng = _engine(partial_prefix=False)
     eng.add_request(Request(uid=0, prompt=PROMPT48.copy(), max_new_tokens=6))
     eng.run()
     other = PROMPT48.copy()
@@ -148,6 +150,91 @@ def test_partial_prefix_identical_prompt():
     out = {r.uid: r.generated for r in eng.finished}
     assert len(out[0]) == len(out[1]) == 8
     eng.scheduler.alloc.check()
+
+
+def test_partial_prefix_divergence_at_chunk_boundary():
+    """Divergence exactly at a chunk (= block) boundary: the full-block chain
+    match covers blocks 0..1 and the partial matcher finds a zero-length
+    common run in block 2 — it must hand its probe block back (no leak, no
+    spurious partial tokens) and the warm output must equal a cold run of
+    the same divergent prompt."""
+    other = PROMPT48.copy()
+    other[32:] = (other[32:] + 1) % 128           # diverge at token 32
+    cold = _engine()
+    cold.add_request(Request(uid=0, prompt=other.copy(), max_new_tokens=6))
+    cold.run()
+    baseline = cold.finished[0].generated
+
+    eng = _engine()
+    eng.add_request(Request(uid=0, prompt=PROMPT48.copy(), max_new_tokens=6))
+    eng.run()
+    eng.add_request(Request(uid=1, prompt=other.copy(), max_new_tokens=6))
+    eng.run()
+    sched = eng.scheduler
+    assert sched.stats["prefix_partial_tokens"] == 0
+    assert eng.metrics()["prefix_hit_tokens"] == 32
+    warm = next(r for r in eng.finished if r.uid == 1)
+    assert warm.generated == baseline
+    sched.alloc.check()
+
+
+def test_partial_prefix_donor_shorter_than_chunk():
+    """A donor whose whole prompt is shorter than one prefill chunk (and so
+    published only one sub-chunk block) must not confuse the partial matcher:
+    the unpublished tail block has no index entry, so the warm request takes
+    the one full-block hit, zero partial tokens, and still emits exactly the
+    cold-run tokens."""
+    donor = (np.arange(12, dtype=np.int32) * 11) % 128
+    warm_prompt = np.concatenate(
+        [donor, (np.arange(8, dtype=np.int32) * 3) % 128])
+    cold = _engine(block_size=8, prefill_chunk=16, max_blocks_per_req=6)
+    cold.add_request(Request(uid=0, prompt=warm_prompt.copy(),
+                             max_new_tokens=6))
+    cold.run()
+    baseline = cold.finished[0].generated
+
+    eng = _engine(block_size=8, prefill_chunk=16, max_blocks_per_req=6)
+    eng.add_request(Request(uid=0, prompt=donor.copy(), max_new_tokens=4))
+    eng.run()
+    eng.add_request(Request(uid=1, prompt=warm_prompt.copy(),
+                            max_new_tokens=6))
+    eng.run()
+    sched = eng.scheduler
+    assert sched.stats["prefix_partial_tokens"] == 0
+    assert eng.metrics()["prefix_hit_tokens"] == 8     # donor's one full block
+    warm = next(r for r in eng.finished if r.uid == 1)
+    assert warm.generated == baseline
+    sched.alloc.check()
+
+
+def test_partial_prefix_hit_then_preemption_resume():
+    """A request that admitted through a partial hit (sub-block device copy,
+    adopted donor scales) and is then preempted mid-decode must recompute and
+    finish with output identical to an undisturbed cold run — the
+    recompute-on-resume path replays prompt + generated and re-matches
+    whatever is still cached, partial copies included."""
+    cold = _engine()
+    cold.add_request(Request(uid=0, prompt=PROMPT48.copy(), max_new_tokens=8))
+    cold.run()
+    baseline = cold.finished[0].generated
+
+    eng = _engine()
+    sched = eng.scheduler
+    eng.add_request(Request(uid=0, prompt=PROMPT48.copy(), max_new_tokens=8))
+    eng.run()
+    eng.add_request(Request(uid=1, prompt=PROMPT48.copy(), max_new_tokens=8))
+    while not any(r is not None and r.req.uid == 1 and r.state == "decode"
+                  and len(r.req.generated) >= 2 for r in sched.slots):
+        assert eng.step(), "warm request never reached decode"
+    assert sched.stats["prefix_partial_tokens"] > 0    # partial hit happened
+    victim = next(s for s, r in enumerate(sched.slots)
+                  if r is not None and r.req.uid == 1)
+    sched._preempt(victim)
+    eng.run()
+    assert sched.stats["preemptions"] >= 1
+    warm = next(r for r in eng.finished if r.uid == 1)
+    assert warm.generated == baseline
+    sched.alloc.check()
 
 
 def test_prefix_cache_disabled():

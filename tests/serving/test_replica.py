@@ -213,6 +213,46 @@ def test_drain_replica_reroutes_waiting_requests():
         solo.drain_replica(0)
 
 
+def test_drain_replica_mid_spec_round_keeps_parity():
+    """Draining a replica while its lanes are mid-speculation — draft lanes
+    live, verify rounds already committed — must not perturb any output:
+    in-flight requests finish locally through further spec rounds, pristine
+    queued ones are re-routed to the survivor and still emit exactly the
+    tokens of an undrained run (spec decode is lossless on every replica, so
+    *where* a greedy request runs can never change *what* it emits)."""
+    import dataclasses
+    from repro.serving.spec_decode import SpecConfig
+    scfg = dataclasses.replace(SCFG, max_batch=2, spec=SpecConfig(gamma=3))
+
+    def serve(drain: bool):
+        eng = _engine(scfg=scfg, policy="round_robin")
+        for i in range(6):
+            eng.add_request(Request(
+                uid=i, prompt=((np.arange(16) + 3 * i) % 128).astype(np.int32),
+                max_new_tokens=8))
+        if drain:
+            # step until replica 0 has committed at least one verify round
+            # and still holds live draft lanes — mid-spec-round by definition
+            steps = 0
+            while eng.replicas[0].stats["spec_rounds"] == 0 and steps < 50:
+                eng.step()
+                steps += 1
+            assert eng.replicas[0].stats["spec_rounds"] > 0
+            assert any(eng.replicas[0].draft.valid)
+            moved = eng.drain_replica(0)
+            assert moved >= 1                    # uid 4 was still queued
+            assert not eng.replicas[0].has_work
+        eng.run()
+        for rep in eng.replicas:
+            rep.alloc.check()
+        assert len(eng.finished) == 6
+        return {r.uid: r.generated for r in eng.finished}
+
+    undrained = serve(False)
+    drained = serve(True)
+    assert drained == undrained
+
+
 # ---------------------------------------------------------------------------
 # EMA scale sync
 # ---------------------------------------------------------------------------

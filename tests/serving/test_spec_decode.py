@@ -73,6 +73,41 @@ def test_golden_spec_matches_plain_mla():
     assert spec.metrics()["spec_tokens_per_step"] > 1.0
 
 
+def test_spec_self_draft_bootstraps_from_pool():
+    """draft_bits=0 self-drafts rebuild misaligned lanes by gathering +
+    dequantizing the target's own pool blocks — zero dense draft prefills —
+    while greedy output stays token-for-token equal to plain paged decode.
+    Cheapened drafts (different weights -> different K/V) must keep taking
+    the dense-prefill path."""
+    plain = _paged()
+    spec = _paged(spec=SpecConfig(gamma=4))
+    for i, p in enumerate(GOLDEN_PROMPTS):
+        plain.add_request(Request(uid=i, prompt=p.copy(), max_new_tokens=8))
+        spec.add_request(Request(uid=i, prompt=p.copy(), max_new_tokens=8))
+    plain.run()
+    spec.run()
+    assert {r.uid: r.generated for r in plain.finished} == \
+           {r.uid: r.generated for r in spec.finished}
+    d = spec.scheduler.draft
+    assert d.can_bootstrap
+    assert d.prefills == 0                   # never ran a dense draft prefill
+    assert d.bootstraps >= len(GOLDEN_PROMPTS)
+    m = spec.metrics()
+    assert m["spec_draft_bootstraps"] == d.bootstraps
+    assert m["spec_draft_prefills"] == 0
+    # pool content is what the target attends to, so lane quality — and
+    # hence acceptance — must stay near the dense-prefill self-draft's
+    assert m["spec_tokens_per_step"] > 1.0
+    # a re-quantized draft attends with different weights: no bootstrap
+    low = _paged(spec=SpecConfig(gamma=2, draft_bits=4), max_batch=2)
+    low.add_request(Request(uid=0, prompt=GOLDEN_PROMPTS[0].copy(),
+                            max_new_tokens=4))
+    low.run()
+    assert not low.scheduler.draft.can_bootstrap
+    assert low.scheduler.draft.bootstraps == 0
+    assert low.scheduler.draft.prefills >= 1
+
+
 def test_spec_gamma_exceeds_remaining_output():
     """gamma larger than the whole remaining output budget: the verify span
     clamps per lane, output length and tokens stay exact."""
@@ -215,8 +250,10 @@ def test_spec_mixed_and_all_hot_temperature_lanes():
     assert want[0] == got[0]                 # greedy lane: exact parity
     assert len(got[1]) == 8                  # hot lane: full output
     # only the greedy lane ever built a draft lane — hot lanes are pinned
-    # to 1-token verifies and skip draft maintenance entirely
-    assert spec.scheduler.draft.prefills == 1
+    # to 1-token verifies and skip draft maintenance entirely (self-drafts
+    # rebuild via the pool-gather bootstrap, never a dense prefill)
+    d = spec.scheduler.draft
+    assert d.prefills == 0 and d.bootstraps == 1
     # all-hot: every span is 1 -> no draft proposals, no verify rounds
     hot = _paged(spec=SpecConfig(gamma=3), max_batch=2)
     hot.add_request(Request(uid=0, prompt=GOLDEN_PROMPTS[0].copy(),
@@ -225,6 +262,7 @@ def test_spec_mixed_and_all_hot_temperature_lanes():
     assert len(hot.finished[0].generated) == 6
     assert hot.metrics()["spec_rounds"] == 0
     assert hot.scheduler.draft.prefills == 0
+    assert hot.scheduler.draft.bootstraps == 0
 
 
 def test_spec_capability_gates():
