@@ -187,9 +187,11 @@ def run(smoke: bool = False):
     emit(hyb_rows, "experiments/bench/serving_hybrid.csv")
     spec_rows = _spec_sweep(smoke)
     emit(spec_rows, "experiments/bench/serving_spec.csv")
+    ladder_rows = _ladder_sweep(params, smoke)
+    emit(ladder_rows, "experiments/bench/serving_ladder.csv")
     shard_rows = _sharded_sweep(smoke)
     emit(shard_rows, "experiments/bench/serving_sharded.csv")
-    return rows + rep_rows + hyb_rows + spec_rows + shard_rows
+    return rows + rep_rows + hyb_rows + spec_rows + ladder_rows + shard_rows
 
 
 def _replica_row(point, eng, wall):
@@ -298,6 +300,76 @@ def _hybrid_sweep(smoke):
              if "ssd_vals" not in v}),
         "wall_s": round(wall, 2),
     })
+    return rows
+
+
+def _token_divergence(a, b):
+    """Fraction of generated tokens that differ between two runs of the
+    same traffic (length mismatches count as divergent positions)."""
+    tot = diff = 0
+    for uid, toks in a.items():
+        other = b.get(uid, [])
+        n = max(len(toks), len(other))
+        tot += n
+        diff += sum(1 for i in range(n)
+                    if i >= len(toks) or i >= len(other) or toks[i] != other[i])
+    return diff / max(tot, 1)
+
+
+def _ladder_sweep(params, smoke):
+    """Pool-pressure pair (``experiments/bench/serving_ladder.csv``): the
+    same grouped shared-prefix traffic on the same undersized pool, ladder
+    off vs on.  The off row is the divergence baseline (divergence 0 by
+    construction); the on row reports demotions/promotions, resident int4
+    halves, the peak *logical* block count (capacity_ratio > 1 is blocks
+    that only survived as packed halves), and its token divergence vs the
+    off run — the divergence-gated cost of the ladder's 8-code requant
+    error on promoted prefixes.  ``run.py``'s ladder gate reads this CSV."""
+    n = 18 if smoke else max(N_REQUESTS, 18)
+    max_new = 4 if smoke else 8
+    # 12 blocks vs a 6 x 48-token prefix working set (18 blocks): the INT8-
+    # only pool must evict whole prefixes, the ladder folds them to int4
+    # halves instead.  The low watermark keeps demotion a last resort (fold
+    # only when nearly dry) so packed halves accumulate.
+    base = dataclasses.replace(SCFG, num_blocks=12, max_batch=2,
+                               max_blocks_per_req=8, prefill_chunk=16,
+                               token_budget=64)
+
+    def traffic():
+        return _shared_prefix_requests(np.random.default_rng(31), n, max_new,
+                                       prefix_len=48, groups=6)
+
+    # throwaway warm-up engine: the module-level step-fn cache is shared, so
+    # both timed rows below see steady-state serving, not compiles
+    warm = PagedServeEngine(params, SERVE_CFG, base)
+    _drive(warm, traffic(), 1.0)
+
+    rows, outs = [], {}
+    for tag, ladder in [("ladder_off", False), ("ladder_on", True)]:
+        scfg = dataclasses.replace(base, ladder=ladder, ladder_watermark=0.15)
+        eng = PagedServeEngine(params, SERVE_CFG, scfg)
+        wall = _drive(eng, traffic(), 1.0)
+        m = eng.metrics()
+        outs[tag] = {int(r.uid): [int(t) for t in r.generated]
+                     for r in eng.finished}
+        rows.append({
+            "point": tag,
+            "ladder": int(ladder),
+            "cache_bytes": m["cache_nbytes"],
+            "effective_cache_bytes": m["effective_cache_bytes"],
+            "capacity_blocks_peak": m["prefix_cache_blocks_peak"],
+            "demotions": m["demotions"],
+            "promotions": m["promotions"],
+            "int4_blocks": m["int4_blocks"],
+            "prefix_hit_tokens": m["prefix_hit_tokens"],
+            "tokens_per_s": round(m["tokens_per_s"], 2),
+            "token_divergence": round(
+                _token_divergence(outs[tag], outs["ladder_off"]), 4),
+            "wall_s": round(wall, 2),
+        })
+    off_peak = max(rows[0]["capacity_blocks_peak"], 1)
+    for r in rows:
+        r["capacity_ratio"] = round(r["capacity_blocks_peak"] / off_peak, 3)
     return rows
 
 

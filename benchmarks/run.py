@@ -48,6 +48,44 @@ def spec_regression_gate(path: str = "experiments/bench/serving_spec.csv"):
     return None
 
 
+def ladder_gate(path: str = "experiments/bench/serving_ladder.csv"):
+    """Return an error string if the bit ladder lost its capacity win or
+    blew its divergence budget.
+
+    The ladder's contract (ISSUE 8): with the ladder *off* the engine is
+    bit-identical to the pre-codec scheduler, so the off row's token
+    divergence must be exactly 0; with the ladder *on* under pool pressure
+    the peak reusable prefix capacity (cached int8 blocks + demoted int4
+    halves) must reach >= 1.5x the INT8-only run, paid for by a *bounded*
+    token divergence — the 8-code promote requant may drift tokens, but a
+    divergence above 0.25 means the requant (or the promote plumbing) broke,
+    not just wobbled.
+    """
+    try:
+        with open(path) as f:
+            rows = {r["point"]: r for r in csv.DictReader(f)}
+        off, on = rows["ladder_off"], rows["ladder_on"]
+        off_div = float(off["token_divergence"])
+        on_div = float(on["token_divergence"])
+        ratio = float(on["capacity_ratio"])
+        demotions = int(on["demotions"])
+    except (OSError, KeyError, ValueError) as e:
+        return f"ladder gate: cannot read {path} ({e!r})"
+    if off_div != 0.0:
+        return (f"ladder gate: ladder-off run diverged from baseline "
+                f"({off_div}) — the codec refactor broke bit-identity ({path})")
+    if demotions == 0:
+        return (f"ladder gate: pressure sweep produced no demotions — the "
+                f"ladder never engaged, capacity claim untested ({path})")
+    if ratio < 1.5:
+        return (f"ladder gate: effective prefix-cache capacity ratio {ratio} "
+                f"< 1.5x INT8-only ({path})")
+    if on_div > 0.25:
+        return (f"ladder gate: ladder-on token divergence {on_div} exceeds "
+                f"the 0.25 bound ({path})")
+    return None
+
+
 def sharded_parity_gate(path: str = "experiments/bench/serving_sharded.csv"):
     """Return an error string if any mesh shape diverged from the unsharded
     engine.
@@ -131,6 +169,13 @@ def main() -> None:
         # when that bench actually ran — --only runs must not judge a stale
         # file): speculation must still pay for itself in wall-clock
         err = spec_regression_gate()
+        if err:
+            failures += 1
+            print(err, file=sys.stderr)
+        # capacity + divergence gate on the freshly written ladder sweep:
+        # ladder off must stay bit-identical, ladder on must buy >= 1.5x
+        # prefix capacity within the divergence budget
+        err = ladder_gate()
         if err:
             failures += 1
             print(err, file=sys.stderr)

@@ -157,3 +157,90 @@ def greedy_search(layers: Dict[str, jnp.ndarray],
     return SearchResult(assignment=assign, objective_trace=trace,
                         evaluations=evaluations, bytes_total=bytes_total,
                         bytes_fp16=bytes_fp16)
+
+
+def search_under_budget(layers: Dict[str, jnp.ndarray],
+                        budget_bytes: int,
+                        *,
+                        space: Sequence[int] = (4, 8),
+                        policy: str = "entropy",
+                        task_loss_fn: Optional[Callable[[Dict[str, int]], float]] = None,
+                        act_stats: Optional[Dict[str, np.ndarray]] = None,
+                        max_escalations: int = 24,
+                        bisect_rounds: int = 12) -> SearchResult:
+    """Greedy search constrained to ``sum_l Phi(b_l) <= budget_bytes``.
+
+    Eq. 35's lambda is the budget's Lagrange multiplier: a larger lambda
+    prices storage higher and pushes the greedy fixed point toward narrower
+    widths.  We escalate lambda geometrically until the assignment fits,
+    then bisect between the last infeasible/feasible pair to recover
+    accuracy the overshoot gave up.  Raises when even the all-min-bits
+    assignment cannot fit (the budget is simply too small for this model).
+    """
+    names = sorted(layers)
+    sizes = {n: int(np.prod(layers[n].shape)) for n in names}
+    floor = int(sum(storage_cost(sizes[n], min(space)) for n in names))
+    if floor > budget_bytes:
+        raise ValueError(
+            f"weight budget {budget_bytes} B is below the all-{min(space)}bit "
+            f"floor {floor} B — grow the budget or shrink the model")
+
+    def run(lam: float) -> SearchResult:
+        return greedy_search(layers, space=space, lam=lam, policy=policy,
+                             task_loss_fn=task_loss_fn, act_stats=act_stats)
+
+    lam = 1e-12
+    res = run(lam)
+    if res.bytes_total <= budget_bytes:
+        return res
+    lo = lam                      # infeasible side (too cheap to quantize)
+    for _ in range(max_escalations):
+        lam *= 10.0
+        res = run(lam)
+        if res.bytes_total <= budget_bytes:
+            break
+        lo = lam
+    else:
+        raise RuntimeError(
+            "lambda escalation failed to reach the weight budget — "
+            "storage-cost gradient never dominated the sensitivity model")
+    hi, best = lam, res           # feasible side
+    for _ in range(bisect_rounds):
+        mid = (lo * hi) ** 0.5    # geometric bisection over the lam decade
+        res = run(mid)
+        if res.bytes_total <= budget_bytes:
+            hi, best = mid, res
+        else:
+            lo = mid
+    return best
+
+
+def assign_weight_bitwidths(params, budget_bytes: int, *,
+                            method: str = "symmetric",
+                            space: Sequence[int] = (4, 8),
+                            policy: str = "entropy"):
+    """Re-quantize a params pytree with per-layer bitwidths under a budget.
+
+    The engine-build hook behind ``SchedulerConfig.weight_budget_mb``: the
+    policy-eligible weight matrices are extracted (``core.apply`` rules), the
+    budget search assigns each a width from ``space``, and the tree is
+    re-quantized with those widths as exact-path overrides.  A mixed QTensor
+    tree is dequantized first, so the search always scores the fp weights.
+    Returns ``(quantized_params, SearchResult)``.
+    """
+    from .apply import (QuantPolicy, dequantize_tree, extract_modules,
+                        quantize_tree)
+    from .qtensor import QTensor
+    mixed = any(isinstance(l, QTensor) for l in jax.tree_util.tree_leaves(
+        params, is_leaf=lambda l: isinstance(l, QTensor)))
+    fp = dequantize_tree(params, dtype=jnp.float32) if mixed else params
+    base = QuantPolicy(method=method)
+    mods = extract_modules(fp, base)
+    if not mods:
+        return params, None
+    layers = {path: w for path, w in mods}
+    result = search_under_budget(layers, budget_bytes, space=space,
+                                 policy=policy)
+    override = {path: bits for path, bits in result.assignment.items()}
+    qp = dataclasses.replace(base, bits_override=override)
+    return quantize_tree(fp, qp), result

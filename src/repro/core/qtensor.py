@@ -54,6 +54,36 @@ def storage_dtype(bits: int):
     return _STORAGE_DTYPE[bits]
 
 
+# ---------------------------------------------------------------------------
+# Nibble packing (two int4 codes per int8 byte)
+#
+# The serving cache codec (serving/codec.py) and the paged Pallas kernels
+# share these exact-integer helpers: the same ops run inside the kernel and
+# inside the jnp oracle, so packed-int4 attention stays *bitwise* equal to
+# its dense-gather reference.  Even channels land in the low nibble, odd
+# channels in the high nibble.
+# ---------------------------------------------------------------------------
+
+def pack_nibbles(codes: jax.Array) -> jax.Array:
+    """Pack signed 4-bit codes in [-8, 7] (last dim even) into an int8
+    carrier of half the width: ``out[..., i] = (codes[2i]+8) | (codes[2i+1]+8)<<4``."""
+    u = codes.astype(jnp.int32) + 8                    # 0..15
+    lo, hi = u[..., 0::2], u[..., 1::2]
+    byte = lo | (hi << 4)                              # 0..255
+    return ((byte + 128) % 256 - 128).astype(jnp.int8)
+
+
+def unpack_nibbles(packed: jax.Array) -> jax.Array:
+    """Inverse of :func:`pack_nibbles`: int8 carrier -> signed codes in
+    [-8, 7] with the last dim doubled.  Pure integer ops (no float round-trip)
+    so kernel and oracle decode identically."""
+    u = packed.astype(jnp.int32) & 255                 # unsigned byte view
+    lo = (u & 15) - 8
+    hi = (u >> 4) - 8
+    x = jnp.concatenate([lo[..., None], hi[..., None]], axis=-1)
+    return x.reshape(*packed.shape[:-1], packed.shape[-1] * 2)
+
+
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass(frozen=True)
 class QTensor:

@@ -25,7 +25,17 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.core.qtensor import unpack_nibbles
+
 NEG_INF = -2.0e38
+
+
+def _codes_f32(raw, bits: int):
+    """Pool codes -> f32: nibble-unpack first when the pool is packed INT4.
+    The bits==8 path is byte-identical to the pre-codec kernels."""
+    if bits == 4:
+        return unpack_nibbles(raw).astype(jnp.float32)
+    return raw.astype(jnp.float32)
 
 
 def _kernel(len_ref, q_ref, ks_ref, kz_ref, k_ref, v_ref, vs_ref, vz_ref,
@@ -131,7 +141,7 @@ def kv_decode_attention(q: jax.Array,
 
 def _paged_kernel(bt_ref, len_ref, q_ref, ks_ref, kz_ref, k_ref, v_ref,
                   vs_ref, vz_ref, o_ref, m_ref, l_ref, acc_ref, *,
-                  n_blk: int, t: int, scale: float):
+                  n_blk: int, t: int, scale: float, bits: int):
     """Same online-softmax body as ``_kernel``; the grid's third dim walks a
     request's *block table* instead of a contiguous sequence.  Dead table
     lanes (m*T >= length) skip the compute entirely, and the index maps
@@ -150,7 +160,7 @@ def _paged_kernel(bt_ref, len_ref, q_ref, ks_ref, kz_ref, k_ref, v_ref,
     @pl.when(m_idx * t < length)
     def _compute():
         q = q_ref[0, 0].astype(jnp.float32) * scale           # (G, D)
-        k_q = k_ref[0, 0].astype(jnp.float32)                 # (T, D)
+        k_q = _codes_f32(k_ref[0, 0], bits)                   # (T, D)
         k = (k_q - kz_ref[0, 0]) * ks_ref[0, 0]               # per-chan affine
         s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
                                 preferred_element_type=jnp.float32)  # (G, T)
@@ -163,7 +173,7 @@ def _paged_kernel(bt_ref, len_ref, q_ref, ks_ref, kz_ref, k_ref, v_ref,
         p = jnp.exp(s - m_new)
         alpha = jnp.exp(m_prev - m_new)
 
-        v_q = v_ref[0, 0].astype(jnp.float32)                 # (T, D)
+        v_q = _codes_f32(v_ref[0, 0], bits)                   # (T, D)
         v = (v_q - vz_ref[0, 0]) * vs_ref[0, 0]               # per-tok affine
         acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
             p, v, (((1,), (0,)), ((), ())),
@@ -184,16 +194,19 @@ def paged_kv_decode_attention(q: jax.Array,
                               v_scale: jax.Array, v_zero: jax.Array,
                               block_tables: jax.Array, lengths: jax.Array, *,
                               interpret: bool = False) -> jax.Array:
-    """Flash-decode over the paged INT8 pool.
+    """Flash-decode over the paged quantized pool.
 
-    q: (B, H, D); k_vals/v_vals: (N, T, KH, D) int8 block pool;
-    v_scale/v_zero: (N, T, KH, 1) f32; k_scale/k_zero: (B, KH, D) f32
-    per-slot frozen affine; block_tables: (B, M) int32 pool block ids
-    (dead table slots may point anywhere — masked by ``lengths``);
-    lengths: (B,) int32 -> (B, H, D) f32.
+    q: (B, H, D); k_vals/v_vals: (N, T, KH, Dp) code block pool, where
+    Dp == D for INT8 codes and D // 2 for nibble-packed INT4 (the codec
+    bitwidth is inferred from that shape); v_scale/v_zero: (N, T, KH, 1) f32;
+    k_scale/k_zero: (B, KH, D) f32 per-slot frozen affine; block_tables:
+    (B, M) int32 pool block ids (dead table slots may point anywhere —
+    masked by ``lengths``); lengths: (B,) int32 -> (B, H, D) f32.
     """
     b, h, d = q.shape
     t, kh = k_vals.shape[1], k_vals.shape[2]
+    dp = k_vals.shape[3]
+    bits = 8 if dp == d else 4
     m = block_tables.shape[1]
     g = h // kh
 
@@ -206,7 +219,7 @@ def paged_kv_decode_attention(q: jax.Array,
     kz_r = k_zero[:, :, None, :]
 
     kernel = functools.partial(_paged_kernel, n_blk=m, t=t,
-                               scale=1.0 / (d ** 0.5))
+                               scale=1.0 / (d ** 0.5), bits=bits)
 
     def _blk(bb, mm, ln, bt):
         # clamp dead table lanes to the last live block: consecutive grid
@@ -221,9 +234,9 @@ def paged_kv_decode_attention(q: jax.Array,
             pl.BlockSpec((1, 1, g, d), lambda bb, hh, mm, bt, ln: (bb, hh, 0, 0)),
             pl.BlockSpec((1, 1, 1, d), lambda bb, hh, mm, bt, ln: (bb, hh, 0, 0)),
             pl.BlockSpec((1, 1, 1, d), lambda bb, hh, mm, bt, ln: (bb, hh, 0, 0)),
-            pl.BlockSpec((1, 1, t, d),
+            pl.BlockSpec((1, 1, t, dp),
                          lambda bb, hh, mm, bt, ln: (_blk(bb, mm, ln, bt), hh, 0, 0)),
-            pl.BlockSpec((1, 1, t, d),
+            pl.BlockSpec((1, 1, t, dp),
                          lambda bb, hh, mm, bt, ln: (_blk(bb, mm, ln, bt), hh, 0, 0)),
             pl.BlockSpec((1, 1, t, 1),
                          lambda bb, hh, mm, bt, ln: (_blk(bb, mm, ln, bt), hh, 0, 0)),

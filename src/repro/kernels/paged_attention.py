@@ -1,5 +1,6 @@
 """Pallas TPU kernels: single-launch spec-decode verify + block-table chunk
-prefill over the paged INT8 KV pool.
+prefill over the paged KV pool (int8 or nibble-packed int4 codecs — the
+wrappers infer the codec from the pool-leaf carrier widths).
 
 Both kernels extend the ``paged_kv_decode_attention`` pattern — the grid's
 last dimension walks a request's block table, delivered to the index maps via
@@ -38,7 +39,19 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.core.qtensor import unpack_nibbles
+
 NEG_INF = -2.0e38
+
+
+def _codes_f32(raw: jax.Array, bits: int) -> jax.Array:
+    """Carrier bytes -> f32 code values.  Packed int4 (``bits == 4``)
+    unpacks nibbles with the same integer ops as the jnp oracles, so the
+    dequantized floats — and the whole attention output — stay bitwise equal
+    to the dense-gather reference for either codec."""
+    if bits == 4:
+        return unpack_nibbles(raw).astype(jnp.float32)
+    return raw.astype(jnp.float32)
 
 
 def _softmax_rows(s: jax.Array) -> jax.Array:
@@ -69,14 +82,14 @@ def _prescale_q(q: jax.Array, d: int) -> jax.Array:
 
 def _verify_kernel(bt_ref, len_ref, q_ref, ks_ref, kz_ref, k_ref, v_ref,
                    vs_ref, vz_ref, o_ref, kf_ref, vf_ref, *, n_blk: int,
-                   t: int, group: int):
+                   t: int, group: int, bits: int):
     b_idx = pl.program_id(0)
     m_idx = pl.program_id(2)
 
     # stream + dequantize this block once, shared by all G*group query rows
-    k = (k_ref[0, 0].astype(jnp.float32) - kz_ref[0, 0]) * ks_ref[0, 0]
+    k = (_codes_f32(k_ref[0, 0], bits) - kz_ref[0, 0]) * ks_ref[0, 0]
     kf_ref[pl.ds(m_idx * t, t), :] = k
-    v = (v_ref[0, 0].astype(jnp.float32) - vz_ref[0, 0]) * vs_ref[0, 0]
+    v = (_codes_f32(v_ref[0, 0], bits) - vz_ref[0, 0]) * vs_ref[0, 0]
     vf_ref[pl.ds(m_idx * t, t), :] = v
 
     @pl.when(m_idx == n_blk - 1)
@@ -103,12 +116,14 @@ def paged_kv_verify_attention(q: jax.Array,
     """All G verify positions against the paged pool in one launch.
 
     q: (B, G, H, D); pool leaves as in ``paged_kv_decode_attention``
-    (k_vals/v_vals (N, T, KH, D) int8, v_scale/v_zero (N, T, KH, 1),
+    (k_vals/v_vals (N, T, KH, D/pack) codes, v_scale/v_zero (N, T, KH, 1),
     k_scale/k_zero (B, KH, D) per-slot); block_tables: (B, M);
     lengths: (B,) pre-verify context lengths -> (B, G, H, D) f32.
     """
     b, gq, h, d = q.shape
     t, kh = k_vals.shape[1], k_vals.shape[2]
+    dp = k_vals.shape[3]                                  # carrier width
+    bits = 8 if dp == d else 4
     m = block_tables.shape[1]
     g = h // kh
     rows = gq * g
@@ -123,7 +138,8 @@ def paged_kv_verify_attention(q: jax.Array,
     ks_r = k_scale[:, :, None, :]                         # (B, KH, 1, D)
     kz_r = k_zero[:, :, None, :]
 
-    kernel = functools.partial(_verify_kernel, n_blk=m, t=t, group=g)
+    kernel = functools.partial(_verify_kernel, n_blk=m, t=t, group=g,
+                               bits=bits)
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,          # block_tables, lengths
         grid=(b, kh, m),
@@ -131,9 +147,9 @@ def paged_kv_verify_attention(q: jax.Array,
             pl.BlockSpec((1, 1, rows, d), lambda bb, hh, mm, bt, ln: (bb, hh, 0, 0)),
             pl.BlockSpec((1, 1, 1, d), lambda bb, hh, mm, bt, ln: (bb, hh, 0, 0)),
             pl.BlockSpec((1, 1, 1, d), lambda bb, hh, mm, bt, ln: (bb, hh, 0, 0)),
-            pl.BlockSpec((1, 1, t, d),
+            pl.BlockSpec((1, 1, t, dp),
                          lambda bb, hh, mm, bt, ln: (bt[bb, mm], hh, 0, 0)),
-            pl.BlockSpec((1, 1, t, d),
+            pl.BlockSpec((1, 1, t, dp),
                          lambda bb, hh, mm, bt, ln: (bt[bb, mm], hh, 0, 0)),
             pl.BlockSpec((1, 1, t, 1),
                          lambda bb, hh, mm, bt, ln: (bt[bb, mm], hh, 0, 0)),
@@ -158,13 +174,13 @@ def paged_kv_verify_attention(q: jax.Array,
 def _mla_verify_kernel(bt_ref, len_ref, ql_ref, qr_ref, cs_ref, cz_ref,
                        krs_ref, krz_ref, c_ref, kr_ref, o_ref, cf_ref,
                        krf_ref, *, n_blk: int, t: int, heads: int, dn: int,
-                       dr: int):
+                       dr: int, bits: int):
     b_idx = pl.program_id(0)
     m_idx = pl.program_id(1)
 
-    c = (c_ref[0].astype(jnp.float32) - cz_ref[0]) * cs_ref[0]
+    c = (_codes_f32(c_ref[0], bits) - cz_ref[0]) * cs_ref[0]
     cf_ref[pl.ds(m_idx * t, t), :] = c
-    kr = (kr_ref[0].astype(jnp.float32) - krz_ref[0]) * krs_ref[0]
+    kr = (_codes_f32(kr_ref[0], bits) - krz_ref[0]) * krs_ref[0]
     krf_ref[pl.ds(m_idx * t, t), :] = kr
 
     @pl.when(m_idx == n_blk - 1)
@@ -202,6 +218,8 @@ def mla_paged_verify_attention(q_lat: jax.Array, q_rope: jax.Array,
     b, gq, h, rkv = q_lat.shape
     dr = q_rope.shape[-1]
     t = c_vals.shape[1]
+    rkv_p, dr_p = c_vals.shape[-1], kr_vals.shape[-1]     # carrier widths
+    bits = 8 if rkv_p == rkv else 4
     m = block_tables.shape[1]
     rows = gq * h
 
@@ -209,7 +227,7 @@ def mla_paged_verify_attention(q_lat: jax.Array, q_rope: jax.Array,
     qr_r = q_rope.astype(jnp.float32).reshape(b, rows, dr)
 
     kernel = functools.partial(_mla_verify_kernel, n_blk=m, t=t, heads=h,
-                               dn=qk_nope_dim, dr=dr)
+                               dn=qk_nope_dim, dr=dr, bits=bits)
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,          # block_tables, lengths
         grid=(b, m),
@@ -220,8 +238,8 @@ def mla_paged_verify_attention(q_lat: jax.Array, q_rope: jax.Array,
             pl.BlockSpec((1, rkv), lambda bb, mm, bt, ln: (bb, 0)),
             pl.BlockSpec((1, dr), lambda bb, mm, bt, ln: (bb, 0)),
             pl.BlockSpec((1, dr), lambda bb, mm, bt, ln: (bb, 0)),
-            pl.BlockSpec((1, t, rkv), lambda bb, mm, bt, ln: (bt[bb, mm], 0, 0)),
-            pl.BlockSpec((1, t, dr), lambda bb, mm, bt, ln: (bt[bb, mm], 0, 0)),
+            pl.BlockSpec((1, t, rkv_p), lambda bb, mm, bt, ln: (bt[bb, mm], 0, 0)),
+            pl.BlockSpec((1, t, dr_p), lambda bb, mm, bt, ln: (bt[bb, mm], 0, 0)),
         ],
         out_specs=pl.BlockSpec((1, rows, rkv), lambda bb, mm, bt, ln: (bb, 0, 0)),
         scratch_shapes=[pltpu.VMEM((m * t, rkv), jnp.float32),
@@ -243,12 +261,12 @@ def mla_paged_verify_attention(q_lat: jax.Array, q_rope: jax.Array,
 
 def _chunk_kernel(br_ref, ctx_ref, q_ref, ks_ref, kz_ref, k_ref, v_ref,
                   vs_ref, vz_ref, kc_ref, vc_ref, o_ref, kf_ref, vf_ref, *,
-                  n_blk: int, t: int, group: int):
+                  n_blk: int, t: int, group: int, bits: int):
     m_idx = pl.program_id(1)
 
-    k = (k_ref[0, 0].astype(jnp.float32) - kz_ref[0]) * ks_ref[0]
+    k = (_codes_f32(k_ref[0, 0], bits) - kz_ref[0]) * ks_ref[0]
     kf_ref[pl.ds(m_idx * t, t), :] = k
-    v = (v_ref[0, 0].astype(jnp.float32) - vz_ref[0, 0]) * vs_ref[0, 0]
+    v = (_codes_f32(v_ref[0, 0], bits) - vz_ref[0, 0]) * vs_ref[0, 0]
     vf_ref[pl.ds(m_idx * t, t), :] = v
 
     @pl.when(m_idx == n_blk - 1)
@@ -287,6 +305,8 @@ def paged_prefix_chunk_attention(q: jax.Array,
     """
     c, h, d = q.shape[1], q.shape[2], q.shape[3]
     t, kh = k_vals.shape[1], k_vals.shape[2]
+    dp = k_vals.shape[3]                                  # carrier width
+    bits = 8 if dp == d else 4
     m = block_row.shape[0]
     g = h // kh
     rows = c * g
@@ -302,7 +322,8 @@ def paged_prefix_chunk_attention(q: jax.Array,
     vz_r = v_zero.transpose(0, 2, 1, 3)
     ctx_arr = jnp.asarray(ctx, jnp.int32).reshape(1)
 
-    kernel = functools.partial(_chunk_kernel, n_blk=m, t=t, group=g)
+    kernel = functools.partial(_chunk_kernel, n_blk=m, t=t, group=g,
+                               bits=bits)
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,          # block_row, ctx
         grid=(kh, m),
@@ -310,8 +331,8 @@ def paged_prefix_chunk_attention(q: jax.Array,
             pl.BlockSpec((1, rows, d), lambda hh, mm, br, cx: (hh, 0, 0)),
             pl.BlockSpec((1, d), lambda hh, mm, br, cx: (hh, 0)),
             pl.BlockSpec((1, d), lambda hh, mm, br, cx: (hh, 0)),
-            pl.BlockSpec((1, 1, t, d), lambda hh, mm, br, cx: (br[mm], hh, 0, 0)),
-            pl.BlockSpec((1, 1, t, d), lambda hh, mm, br, cx: (br[mm], hh, 0, 0)),
+            pl.BlockSpec((1, 1, t, dp), lambda hh, mm, br, cx: (br[mm], hh, 0, 0)),
+            pl.BlockSpec((1, 1, t, dp), lambda hh, mm, br, cx: (br[mm], hh, 0, 0)),
             pl.BlockSpec((1, 1, t, 1), lambda hh, mm, br, cx: (br[mm], hh, 0, 0)),
             pl.BlockSpec((1, 1, t, 1), lambda hh, mm, br, cx: (br[mm], hh, 0, 0)),
             pl.BlockSpec((1, c, d), lambda hh, mm, br, cx: (hh, 0, 0)),
@@ -334,12 +355,12 @@ def paged_prefix_chunk_attention(q: jax.Array,
 def _mla_chunk_kernel(br_ref, ctx_ref, ql_ref, qr_ref, cs_ref, cz_ref,
                       krs_ref, krz_ref, c_ref, kr_ref, cc_ref, krc_ref,
                       o_ref, cf_ref, krf_ref, *, n_blk: int, t: int,
-                      heads: int, dn: int, dr: int):
+                      heads: int, dn: int, dr: int, bits: int):
     m_idx = pl.program_id(0)
 
-    c = (c_ref[0].astype(jnp.float32) - cz_ref[0]) * cs_ref[0]
+    c = (_codes_f32(c_ref[0], bits) - cz_ref[0]) * cs_ref[0]
     cf_ref[pl.ds(m_idx * t, t), :] = c
-    kr = (kr_ref[0].astype(jnp.float32) - krz_ref[0]) * krs_ref[0]
+    kr = (_codes_f32(kr_ref[0], bits) - krz_ref[0]) * krs_ref[0]
     krf_ref[pl.ds(m_idx * t, t), :] = kr
 
     @pl.when(m_idx == n_blk - 1)
@@ -382,6 +403,8 @@ def mla_paged_prefix_chunk_attention(q_lat: jax.Array, q_rope: jax.Array,
     c, h, rkv = q_lat.shape[1], q_lat.shape[2], q_lat.shape[3]
     dr = q_rope.shape[-1]
     t = c_vals.shape[1]
+    rkv_p, dr_p = c_vals.shape[-1], kr_vals.shape[-1]     # carrier widths
+    bits = 8 if rkv_p == rkv else 4
     m = block_row.shape[0]
     rows = c * h
 
@@ -390,7 +413,7 @@ def mla_paged_prefix_chunk_attention(q_lat: jax.Array, q_rope: jax.Array,
     ctx_arr = jnp.asarray(ctx, jnp.int32).reshape(1)
 
     kernel = functools.partial(_mla_chunk_kernel, n_blk=m, t=t, heads=h,
-                               dn=qk_nope_dim, dr=dr)
+                               dn=qk_nope_dim, dr=dr, bits=bits)
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,          # block_row, ctx
         grid=(m,),
@@ -401,8 +424,8 @@ def mla_paged_prefix_chunk_attention(q_lat: jax.Array, q_rope: jax.Array,
             pl.BlockSpec((1, rkv), lambda mm, br, cx: (0, 0)),
             pl.BlockSpec((1, dr), lambda mm, br, cx: (0, 0)),
             pl.BlockSpec((1, dr), lambda mm, br, cx: (0, 0)),
-            pl.BlockSpec((1, t, rkv), lambda mm, br, cx: (br[mm], 0, 0)),
-            pl.BlockSpec((1, t, dr), lambda mm, br, cx: (br[mm], 0, 0)),
+            pl.BlockSpec((1, t, rkv_p), lambda mm, br, cx: (br[mm], 0, 0)),
+            pl.BlockSpec((1, t, dr_p), lambda mm, br, cx: (br[mm], 0, 0)),
             pl.BlockSpec((c, rkv), lambda mm, br, cx: (0, 0)),
             pl.BlockSpec((c, dr), lambda mm, br, cx: (0, 0)),
         ],

@@ -5,7 +5,21 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.core.qtensor import storage_dtype, unpack_nibbles
+
 NEG_INF = -2.0e38
+
+
+def _unpack_pool(pool: jax.Array, full_dim: int) -> jax.Array:
+    """Nibble-unpack a paged-pool code leaf when the codec packed it.
+
+    The pool stores codes in its last dim; a packed-INT4 pool halves that
+    dim while the matching scale/query keeps ``full_dim``.  Unpacking is
+    elementwise per byte, so doing it before the block-table gather is
+    exact — the same integer ops the Pallas kernels run in-register."""
+    if pool.shape[-1] == full_dim:
+        return pool
+    return unpack_nibbles(pool)
 
 
 def fused_quant_ref(x: jax.Array, eps: float = 1e-8):
@@ -14,7 +28,8 @@ def fused_quant_ref(x: jax.Array, eps: float = 1e-8):
     x: (M, K) -> (q int8 (M,K), scale f32 (M,1))."""
     amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1, keepdims=True)
     scale = jnp.maximum(amax, eps) / 127.0
-    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -128, 127).astype(jnp.int8)
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale),
+                 -128, 127).astype(storage_dtype(8))
     return q, scale
 
 
@@ -65,12 +80,15 @@ def paged_kv_decode_attention_ref(q: jax.Array,
     dense oracle (identical float path — the scheduler's golden-parity tests
     rely on this).
 
-    q: (B,H,D); k_vals/v_vals: (N,T,KH,D) int8 pool; v_scale/v_zero:
-    (N,T,KH,1); k_scale/k_zero: (B,KH,D) per-slot; block_tables: (B,M);
-    lengths: (B,) -> (B,H,D).
+    q: (B,H,D); k_vals/v_vals: (N,T,KH,Dp) code pool (Dp == D for INT8,
+    D // 2 nibble-packed for INT4); v_scale/v_zero: (N,T,KH,1); k_scale/
+    k_zero: (B,KH,D) per-slot; block_tables: (B,M); lengths: (B,) -> (B,H,D).
     """
     b, m = block_tables.shape
     t = k_vals.shape[1]
+    d = q.shape[-1]
+    k_vals = _unpack_pool(k_vals, d)
+    v_vals = _unpack_pool(v_vals, d)
     gather = lambda pool: pool[block_tables].reshape(b, m * t, *pool.shape[2:])
     return kv_decode_attention_ref(
         q, gather(k_vals), k_scale[:, None], k_zero[:, None],
@@ -96,6 +114,9 @@ def paged_kv_verify_attention_ref(q: jax.Array,
     b, m = block_tables.shape
     t = k_vals.shape[1]
     g = q.shape[1]
+    d = q.shape[-1]
+    k_vals = _unpack_pool(k_vals, d)
+    v_vals = _unpack_pool(v_vals, d)
     gather = lambda pool: pool[block_tables].reshape(b, m * t, *pool.shape[2:])
     kg, vg = gather(k_vals), gather(v_vals)
     vsg, vzg = gather(v_scale), gather(v_zero)
@@ -125,6 +146,8 @@ def mla_paged_verify_attention_ref(q_nope: jax.Array, q_rope: jax.Array,
     b, m = block_tables.shape
     t = c_vals.shape[1]
     g = q_nope.shape[1]
+    c_vals = _unpack_pool(c_vals, c_scale.shape[-1])
+    kr_vals = _unpack_pool(kr_vals, kr_scale.shape[-1])
     gather = lambda pool: pool[block_tables].reshape(b, m * t, pool.shape[-1])
     cg, krg = gather(c_vals), gather(kr_vals)
     cs, cz = c_scale[:, None], c_zero[:, None]
@@ -160,6 +183,8 @@ def paged_prefix_chunk_attention_ref(q: jax.Array,
     kh = k_chunk.shape[2]
     g = h // kh
     m, t = block_row.shape[0], k_vals.shape[1]
+    k_vals = _unpack_pool(k_vals, d)
+    v_vals = _unpack_pool(v_vals, d)
     f32 = jnp.float32
     k_pre = ((k_vals[block_row].astype(f32) - k_zero.astype(f32))
              * k_scale.astype(f32)).reshape(m * t, kh, d)
@@ -200,6 +225,8 @@ def mla_paged_prefix_chunk_attention_ref(q_lat: jax.Array, q_rope: jax.Array,
     c, hh = q_lat.shape[1], q_lat.shape[2]
     rkv, dr = q_lat.shape[3], q_rope.shape[3]
     m, t = block_row.shape[0], c_vals.shape[1]
+    c_vals = _unpack_pool(c_vals, rkv)
+    kr_vals = _unpack_pool(kr_vals, dr)
     f32 = jnp.float32
     scale = 1.0 / jnp.sqrt(qk_nope_dim + dr)
     c_pre = ((c_vals[block_row].astype(f32) - c_zero) * c_scale

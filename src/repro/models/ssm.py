@@ -34,7 +34,7 @@ from typing import Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.qtensor import int_range
+from repro.core.qtensor import int_range, storage_dtype
 from repro.distributed.sharding import constrain
 from repro.kernels.ops import qdot
 from .config import ModelConfig
@@ -334,20 +334,23 @@ def ssm_prefill_chunk(p, x: jax.Array, cfg: ModelConfig, *,
 # State quantization (the serving caches' round-trip at pool boundaries)
 # ---------------------------------------------------------------------------
 
-def quantize_ssd_state(state: jax.Array, eps: float = 1e-8
+def quantize_ssd_state(state: jax.Array, eps: float = 1e-8, bits: int = 8
                        ) -> Tuple[jax.Array, jax.Array]:
-    """Symmetric-absmax INT8 over the trailing (P, N) plane.
+    """Symmetric-absmax over the trailing (P, N) plane at ``bits`` width.
 
-    state: (..., H, P, N) f32 -> (vals int8 same shape, scale f32 (..., H)).
-    One scale per (slot, head) — fine-grained enough that a single outlier
-    head cannot blow up every head's resolution (FineQuant-style grouping),
-    small enough that the scale tensor is noise next to the codes.
+    state: (..., H, P, N) f32 -> (vals int codes same shape, scale f32
+    (..., H)).  One scale per (slot, head) — fine-grained enough that a
+    single outlier head cannot blow up every head's resolution
+    (FineQuant-style grouping), small enough that the scale tensor is noise
+    next to the codes.  Codes always ride an int8 carrier; narrower widths
+    just clip tighter (the state pool's codec packs them, see
+    ``serving/state_pool.py``).
     """
-    qmin, qmax = int_range(8)
+    qmin, qmax = int_range(bits)
     amax = jnp.max(jnp.abs(state), axis=(-2, -1))
     scale = jnp.maximum(amax, eps) / float(qmax)
     vals = jnp.clip(jnp.round(state / scale[..., None, None]), qmin,
-                    qmax).astype(jnp.int8)
+                    qmax).astype(storage_dtype(8))
     return vals, scale.astype(jnp.float32)
 
 

@@ -11,6 +11,9 @@ Two cache backends share the SimQuant INT8 quantization math:
   * ``state_pool``  — fixed-size slot pool for SSM conv/SSD state (INT8 +
                       per-slot scales), so hybrid Jamba/Mamba patterns serve
                       through the paged scheduler too.
+  * ``codec``       — the cache codec registry (INT8 / packed INT4) owning
+                      block-pool storage layout plus the demote/promote
+                      device ops behind the scheduler's pressure bit ladder.
 
 ``replica`` scales the paged stack out: ``ReplicatedServeEngine`` runs N
 scheduler replicas over sharded block pools (and state-slot budgets) with
@@ -25,15 +28,15 @@ identical to plain decode while emitting ``1 + accepted`` tokens per step.
 """
 from . import kv_cache
 
-__all__ = ["kv_cache", "paged_cache", "state_pool", "engine", "scheduler",
-           "replica", "spec_decode"]
+__all__ = ["kv_cache", "codec", "paged_cache", "state_pool", "engine",
+           "scheduler", "replica", "spec_decode"]
 
 
 # lazy: the paged/engine modules pull in the models package (heavier);
 # kv_cache only touches models.config, which the seed already paid
 def __getattr__(name):
-    if name in ("paged_cache", "state_pool", "engine", "scheduler", "replica",
-                "spec_decode"):
+    if name in ("codec", "paged_cache", "state_pool", "engine", "scheduler",
+                "replica", "spec_decode"):
         import importlib
         return importlib.import_module(f".{name}", __name__)
     raise AttributeError(name)

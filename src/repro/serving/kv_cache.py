@@ -33,7 +33,7 @@ from typing import Dict, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.qtensor import int_range
+from repro.core.qtensor import int_range, storage_dtype
 from repro.core.methods.simquant import quantize_keys, quantize_values
 from repro.distributed.sharding import constrain
 from repro.models.config import ModelConfig
@@ -83,14 +83,14 @@ def gqa_cache_append(entry: Dict[str, jax.Array], k_t: jax.Array, v_t: jax.Array
     k_scale = entry["k_scale"][:, 0]            # (B,KH,D)
     k_zero = entry["k_zero"][:, 0]
     k_q = jnp.clip(jnp.round(k_t.astype(jnp.float32) / k_scale) + k_zero,
-                   qmin, qmax).astype(jnp.int8)
+                   qmin, qmax).astype(storage_dtype(8))
 
     vmin = jnp.min(v_t, axis=-1, keepdims=True).astype(jnp.float32)
     vmax = jnp.max(v_t, axis=-1, keepdims=True).astype(jnp.float32)
     v_scale = jnp.maximum((vmax - vmin) / (qmax - qmin), 1e-8)
     v_zero = qmin - jnp.round(vmin / v_scale)
     v_q = jnp.clip(jnp.round(v_t.astype(jnp.float32) / v_scale) + v_zero,
-                   qmin, qmax).astype(jnp.int8)
+                   qmin, qmax).astype(storage_dtype(8))
 
     bidx = jnp.arange(b)
     new = dict(entry)
@@ -128,7 +128,7 @@ def mla_cache_append(entry: Dict[str, jax.Array], c_t: jax.Array, kr_t: jax.Arra
         scale = entry[f"{name}_scale"][:, 0]
         zero = entry[f"{name}_zero"][:, 0]
         q = jnp.clip(jnp.round(x_t.astype(jnp.float32) / scale) + zero,
-                     qmin, qmax).astype(jnp.int8)
+                     qmin, qmax).astype(storage_dtype(8))
         bidx = jnp.arange(x_t.shape[0])
         new[f"{name}_vals"] = entry[f"{name}_vals"].at[bidx, pos].set(q)
     return new

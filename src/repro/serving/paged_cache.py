@@ -1,19 +1,22 @@
-"""Paged SimQuant INT8 KV cache: block-pool storage + refcounted allocator.
+"""Paged SimQuant KV cache: block-pool storage + refcounted allocator.
 
 The dense cache in ``kv_cache.py`` pre-allocates ``max_slots x smax`` tokens
 per layer — memory scales with the *configured* maximum, not with live
 traffic.  This module stores quantized KV entries in fixed-size token blocks
 (vLLM-style paged attention, arXiv:2309.06180) so memory scales with live
-tokens:
+tokens.  The code bitwidth is owned by a :class:`~repro.serving.codec.
+CacheCodec` — ``int8`` (one code per byte, the layout below) or packed
+``int4`` (two codes per byte: every ``*_vals`` last dim halves while the
+scale rows keep the full dim, which is how readers infer the codec):
 
-  GQA:  k_vals  int8 (R, N+1, T, KH, D)   block pool (last block = trash)
-        v_vals  int8 (R, N+1, T, KH, D)
-        v_scale f32  (R, N+1, T, KH, 1)   per-token affine V (online)
-        v_zero  f32  (R, N+1, T, KH, 1)
-        k_scale f32  (R, B,   KH, D)      per-*slot* per-channel K affine,
-        k_zero  f32  (R, B,   KH, D)      frozen at the first prefill chunk
-  MLA:  c_vals  int8 (R, N+1, T, rkv) + per-slot scale/zero (R, B, rkv)
-        kr_vals int8 (R, N+1, T, dr)  + per-slot scale/zero (R, B, dr)
+  GQA:  k_vals  codes (R, N+1, T, KH, D/pack)  block pool (last = trash)
+        v_vals  codes (R, N+1, T, KH, D/pack)
+        v_scale f32   (R, N+1, T, KH, 1)   per-token affine V (online)
+        v_zero  f32   (R, N+1, T, KH, 1)
+        k_scale f32   (R, B,   KH, D)      per-*slot* per-channel K affine,
+        k_zero  f32   (R, B,   KH, D)      frozen at the first prefill chunk
+  MLA:  c_vals  codes (R, N+1, T, rkv/pack) + per-slot scale/zero (R, B, rkv)
+        kr_vals codes (R, N+1, T, dr/pack)  + per-slot scale/zero (R, B, dr)
 
 ``R`` is the scan-repeat axis (pattern positions nest inside, exactly like
 the dense cache); ``N`` is the shared block count, ``T`` the tokens/block,
@@ -47,8 +50,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.qtensor import int_range
+from repro.core.qtensor import int_range, pack_nibbles, unpack_nibbles
 from repro.models.config import ModelConfig
+from repro.serving.codec import STORAGE_DTYPE, get_codec
 
 TRASH = -1  # host-side marker; resolved to the pool's trash block id on use
 
@@ -81,11 +85,15 @@ class PagedCacheConfig:
 # Pool allocation
 # ---------------------------------------------------------------------------
 
-def init_paged_cache(cfg: ModelConfig, pcfg: PagedCacheConfig) -> Dict[str, Any]:
+def init_paged_cache(cfg: ModelConfig, pcfg: PagedCacheConfig,
+                     codec="int8") -> Dict[str, Any]:
     """Zero-filled block pool pytree: {"p{i}": leaves (R, ...)} per pattern
     position.  SSM mixers have no sequence axis to page — their fixed-size
     conv/SSD state lives in the slot pool (``state_pool.init_state_pool``),
-    so hybrid patterns simply skip those positions here."""
+    so hybrid patterns simply skip those positions here.  ``codec`` picks
+    the code layout: packed codecs shrink every ``*_vals`` last dim by the
+    pack factor while scale rows keep the full dim."""
+    cd = get_codec(codec)
     r = cfg.n_repeats
     npool = pcfg.num_blocks + 1                     # + trash block
     t, b = pcfg.block_size, pcfg.max_batch
@@ -93,9 +101,10 @@ def init_paged_cache(cfg: ModelConfig, pcfg: PagedCacheConfig) -> Dict[str, Any]
     for i, spec in enumerate(cfg.layer_pattern):
         if spec.mixer == "attn":
             kh, d = cfg.kv_heads, cfg.hd
+            dp = cd.packed_dim(d)
             entries[f"p{i}"] = {
-                "k_vals": jnp.zeros((r, npool, t, kh, d), jnp.int8),
-                "v_vals": jnp.zeros((r, npool, t, kh, d), jnp.int8),
+                "k_vals": jnp.zeros((r, npool, t, kh, dp), STORAGE_DTYPE),
+                "v_vals": jnp.zeros((r, npool, t, kh, dp), STORAGE_DTYPE),
                 "v_scale": jnp.zeros((r, npool, t, kh, 1), jnp.float32),
                 "v_zero": jnp.zeros((r, npool, t, kh, 1), jnp.float32),
                 "k_scale": jnp.ones((r, b, kh, d), jnp.float32),
@@ -104,15 +113,23 @@ def init_paged_cache(cfg: ModelConfig, pcfg: PagedCacheConfig) -> Dict[str, Any]
         elif spec.mixer == "mla":
             rkv, dr = cfg.kv_lora_rank, cfg.qk_rope_head_dim
             entries[f"p{i}"] = {
-                "c_vals": jnp.zeros((r, npool, t, rkv), jnp.int8),
+                "c_vals": jnp.zeros((r, npool, t, cd.packed_dim(rkv)), STORAGE_DTYPE),
                 "c_scale": jnp.ones((r, b, rkv), jnp.float32),
                 "c_zero": jnp.zeros((r, b, rkv), jnp.float32),
-                "kr_vals": jnp.zeros((r, npool, t, dr), jnp.int8),
+                "kr_vals": jnp.zeros((r, npool, t, cd.packed_dim(dr)), STORAGE_DTYPE),
                 "kr_scale": jnp.ones((r, b, dr), jnp.float32),
                 "kr_zero": jnp.zeros((r, b, dr), jnp.float32),
             }
         # ssm: no sequence axis — state_pool.py owns those positions
     return entries
+
+
+def _entry_bits(entry: Dict[str, jax.Array]) -> int:
+    """Infer the codec bitwidth from leaf shapes: a packed value leaf's last
+    dim is half its scale row's (scales always keep the full channel dim)."""
+    if "k_vals" in entry:
+        return 8 if entry["k_vals"].shape[-1] == entry["k_scale"].shape[-1] else 4
+    return 8 if entry["c_vals"].shape[-1] == entry["c_scale"].shape[-1] else 4
 
 
 class BlockPoolError(RuntimeError):
@@ -134,12 +151,18 @@ class PrefixEntry:
     request find donors for *partial* (sub-block) prefix reuse: candidates
     share the full-prefix parent, and the common token run with ``tokens``
     is how many cached positions a device copy of the block can seed.
+
+    ``bits``/``half`` track the bit ladder: a demoted entry (``bits == 4``)
+    lives as packed int4 codes in half ``half`` of the PACKED physical block
+    ``block`` and must be promoted back to a fresh int8 block before use.
     """
     block: int
     tag: int
     meta: Any = None
     parent: bytes = b""
     tokens: Any = None
+    bits: int = 8
+    half: int = 0
 
 
 class BlockAllocator:
@@ -152,17 +175,23 @@ class BlockAllocator:
       ACTIVE --decref to 0, unpublished--> FREE
       CACHED --acquire--> ACTIVE(ref=1)     (prefix hit revives it)
       CACHED --alloc under pressure--> ACTIVE (LRU entry evicted + recycled)
+      CACHED x2 --demote_oldest_pair--> PACKED + FREE   (bit ladder down)
+      PACKED half --promote--> ACTIVE(ref=1) on a fresh block (ladder up)
 
     ``free`` is decref: a block is only recycled when its last reference
     drops, so one physical block can back many block-table rows (prefix
     sharing).  Published blocks outlive their references as CACHED entries
     until memory pressure reclaims them, giving an LRU prefix cache for free.
+    Under harder pressure the bit ladder demotes the two LRU-oldest CACHED
+    blocks into *one* PACKED physical block of int4 codes (the codec's
+    ``demote_pair_blocks`` is the device half), freeing the other — so two
+    logical prefix blocks survive in one block of bytes.
 
     Conservation invariant (checked by ``check()`` and the property tests):
-    ``num_free + num_cached + num_active == num_blocks``.
+    ``num_free + num_cached + num_active + num_packed == num_blocks``.
     """
 
-    FREE, ACTIVE, CACHED = 0, 1, 2
+    FREE, ACTIVE, CACHED, PACKED = 0, 1, 2, 3
 
     def __init__(self, num_blocks: int):
         self.num_blocks = num_blocks
@@ -172,7 +201,12 @@ class BlockAllocator:
         self._key_of: List[Optional[bytes]] = [None] * num_blocks
         self._cached: "OrderedDict[int, bytes]" = OrderedDict()  # LRU: old first
         self._index: Dict[bytes, PrefixEntry] = {}
+        # bit ladder: PACKED physical block -> [key of half 0, key of half 1]
+        self._packed: Dict[int, List[Optional[bytes]]] = {}
+        self._packed_lru: "OrderedDict[int, None]" = OrderedDict()
         self.cache_evictions = 0          # cached blocks reclaimed by alloc()
+        self.demotions = 0                # logical blocks demoted int8 -> int4
+        self.promotions = 0               # logical blocks promoted int4 -> int8
 
     # -- accounting -----------------------------------------------------------
     @property
@@ -184,9 +218,20 @@ class BlockAllocator:
         return len(self._cached)
 
     @property
+    def num_packed(self) -> int:
+        """Physical blocks holding two demoted int4 halves (bit ladder)."""
+        return len(self._packed)
+
+    @property
+    def int4_blocks(self) -> int:
+        """Logical prefix blocks currently resident as packed int4 halves."""
+        return sum(1 for halves in self._packed.values()
+                   for key in halves if key is not None)
+
+    @property
     def num_available(self) -> int:
-        """Blocks an alloc() can hand out: free + reclaimable cached."""
-        return len(self._free) + len(self._cached)
+        """Blocks an alloc() can hand out: free + reclaimable cached/packed."""
+        return len(self._free) + len(self._cached) + len(self._packed)
 
     @property
     def num_used(self) -> int:
@@ -213,28 +258,67 @@ class BlockAllocator:
         return e is not None and e.block == b
 
     # -- alloc / refcounting --------------------------------------------------
-    def alloc(self, n: int = 1) -> Optional[List[int]]:
+    def alloc(self, n: int = 1, exclude=()) -> Optional[List[int]]:
         """Allocate ``n`` blocks at refcount 1, or None (all-or-nothing).
 
         Free blocks are recycled LIFO (cache-warm first); under pressure the
         least-recently-cached prefix blocks are evicted from the index and
-        reused.
+        reused, then (bit ladder) the least-recently-packed physical blocks
+        — each of those evictions kills up to two demoted prefix entries.
+        ``exclude`` blocks are never handed out nor evicted (the promote
+        path must not recycle the packed block it is reading from).
         """
-        if n > self.num_available:
+        exclude = frozenset(exclude)
+        avail = self.num_available
+        for b in exclude:
+            if self._state[b] != self.ACTIVE:
+                avail -= 1
+        if n > avail:
             return None
-        out = []
+        held: List[int] = []
+        out: List[int] = []
         for _ in range(n):
-            if self._free:
-                b = self._free.pop()
-            else:
-                b, key = self._cached.popitem(last=False)   # LRU victim
-                del self._index[key]
-                self._key_of[b] = None
-                self.cache_evictions += 1
+            b = None
+            while self._free:
+                cand = self._free.pop()
+                if cand in exclude:
+                    held.append(cand)
+                    continue
+                b = cand
+                break
+            if b is None:
+                for cand in self._cached:                   # LRU victim
+                    if cand not in exclude:
+                        b = cand
+                        break
+                if b is not None:
+                    key = self._cached.pop(b)
+                    del self._index[key]
+                    self._key_of[b] = None
+                    self.cache_evictions += 1
+            if b is None:
+                for cand in self._packed_lru:               # ladder victim
+                    if cand not in exclude:
+                        b = cand
+                        break
+                if b is not None:
+                    self._evict_packed(b)
+            if b is None:
+                raise BlockPoolError("alloc accounting out of sync")
             self._state[b] = self.ACTIVE
             self._ref[b] = 1
             out.append(b)
+        self._free.extend(reversed(held))
         return out
+
+    def _evict_packed(self, b: int) -> None:
+        """Drop a PACKED physical block and every demoted entry it holds."""
+        halves = self._packed.pop(b)
+        self._packed_lru.pop(b)
+        for key in halves:
+            if key is not None:
+                del self._index[key]
+                self.cache_evictions += 1
 
     def incref(self, b: int) -> None:
         if self._state[b] != self.ACTIVE:
@@ -299,10 +383,14 @@ class BlockAllocator:
 
     def acquire(self, key: bytes) -> Optional[int]:
         """Take a reference on the indexed block for ``key`` (prefix hit):
-        revives a CACHED block to ACTIVE(ref=1), increfs an ACTIVE one."""
+        revives a CACHED block to ACTIVE(ref=1), increfs an ACTIVE one.
+        Demoted (int4) entries cannot be acquired directly — callers must go
+        through :meth:`promote` onto a freshly allocated block first."""
         e = self._index.get(key)
         if e is None:
             return None
+        if e.bits != 8:
+            raise BlockPoolError(f"acquire of demoted entry {key!r}; promote first")
         b = e.block
         if self._state[b] == self.CACHED:
             del self._cached[b]
@@ -312,17 +400,75 @@ class BlockAllocator:
             self._ref[b] += 1
         return b
 
+    # -- bit ladder -----------------------------------------------------------
+    def demote_oldest_pair(self):
+        """Demote the two LRU-oldest CACHED blocks into one PACKED block.
+
+        Host bookkeeping only — the caller must mirror it on-device with
+        ``codec.demote_pair_blocks(pool, src_a, src_b, dst)`` using the
+        returned ids.  The first victim's physical block becomes the packed
+        destination (half 0 = first victim, half 1 = second); the second
+        victim's block is freed.  Returns ``(key_a, key_b, src_a, src_b,
+        dst)`` or None if fewer than two blocks are cached.
+        """
+        if len(self._cached) < 2:
+            return None
+        b_a, key_a = self._cached.popitem(last=False)
+        b_b, key_b = self._cached.popitem(last=False)
+        dst = b_a
+        e_a, e_b = self._index[key_a], self._index[key_b]
+        e_a.block, e_a.bits, e_a.half = dst, 4, 0
+        e_b.block, e_b.bits, e_b.half = dst, 4, 1
+        self._key_of[b_a] = None
+        self._key_of[b_b] = None
+        self._state[dst] = self.PACKED
+        self._packed[dst] = [key_a, key_b]
+        self._packed_lru[dst] = None
+        self._state[b_b] = self.FREE
+        self._free.append(b_b)
+        self.demotions += 2
+        return key_a, key_b, b_a, b_b, dst
+
+    def promote(self, key: bytes, new_block: int):
+        """Rebind the demoted entry ``key`` onto ``new_block`` (which must
+        come from ``alloc(1, exclude={entry.block})`` — ACTIVE at ref 1, so
+        the caller holds the reference exactly as after ``acquire``).
+
+        Returns ``(phys, half)`` for the device half
+        (``codec.promote_block(pool, phys, half, new_block)``); when the
+        packed block's other half is already gone the physical block is
+        freed.
+        """
+        e = self._index.get(key)
+        if e is None or e.bits != 4:
+            raise BlockPoolError(f"promote of non-demoted entry {key!r}")
+        if self._state[new_block] != self.ACTIVE or self._ref[new_block] != 1:
+            raise BlockPoolError(f"promote target {new_block} not freshly allocated")
+        phys, half = e.block, e.half
+        halves = self._packed[phys]
+        halves[half] = None
+        e.block, e.bits, e.half = new_block, 8, 0
+        self._key_of[new_block] = key
+        if halves[0] is None and halves[1] is None:
+            del self._packed[phys]
+            self._packed_lru.pop(phys)
+            self._state[phys] = self.FREE
+            self._free.append(phys)
+        self.promotions += 1
+        return phys, half
+
     # -- invariants -----------------------------------------------------------
     def check(self) -> None:
         """Assert the conservation invariant and internal consistency (used
         by the property tests; cheap enough to call after every op)."""
         active = [b for b in range(self.num_blocks)
                   if self._state[b] == self.ACTIVE]
-        if len(self._free) + len(self._cached) + len(active) != self.num_blocks:
+        if len(self._free) + len(self._cached) + len(active) \
+                + len(self._packed) != self.num_blocks:
             raise BlockPoolError(
                 f"conservation violated: free={len(self._free)} "
                 f"cached={len(self._cached)} active={len(active)} "
-                f"!= {self.num_blocks}")
+                f"packed={len(self._packed)} != {self.num_blocks}")
         for b in self._free:
             if self._state[b] != self.FREE or self._ref[b] != 0:
                 raise BlockPoolError(f"free-list block {b} in bad state")
@@ -334,8 +480,27 @@ class BlockAllocator:
         for b in active:
             if self._ref[b] <= 0:
                 raise BlockPoolError(f"active block {b} with ref 0")
+        if set(self._packed) != set(self._packed_lru):
+            raise BlockPoolError("packed set and packed LRU out of sync")
+        for b, halves in self._packed.items():
+            if self._state[b] != self.PACKED or self._ref[b] != 0:
+                raise BlockPoolError(f"packed block {b} in bad state")
+            if halves[0] is None and halves[1] is None:
+                raise BlockPoolError(f"packed block {b} holds no residents")
+            for h, key in enumerate(halves):
+                if key is None:
+                    continue
+                e = self._index.get(key)
+                if e is None or e.block != b or e.bits != 4 or e.half != h:
+                    raise BlockPoolError(
+                        f"packed half {b}/{h} not indexed consistently")
         for key, e in self._index.items():
-            if self._key_of[e.block] != key:
+            if e.bits == 4:
+                halves = self._packed.get(e.block)
+                if halves is None or halves[e.half] != key:
+                    raise BlockPoolError(
+                        f"demoted entry {key!r} not back-linked")
+            elif self._key_of[e.block] != key:
                 raise BlockPoolError(f"index entry {key!r} not back-linked")
 
 
@@ -365,7 +530,8 @@ def gqa_chunk_write(entry: Dict[str, jax.Array], k: jax.Array, v: jax.Array, *,
     decode append path.  V always gets fresh per-token scales.
     """
     c = k.shape[0]
-    qmin, qmax = int_range(8)
+    bits = _entry_bits(entry)
+    qmin, qmax = int_range(bits)
     valid = (jnp.arange(c) < chunk_len)[:, None, None]
     new = dict(entry)
 
@@ -377,21 +543,23 @@ def gqa_chunk_write(entry: Dict[str, jax.Array], k: jax.Array, v: jax.Array, *,
         xmax = jnp.max(jnp.where(valid, k, -big), axis=0)
         delta = jnp.maximum((xmax - xmin) / (qmax - qmin), 1e-8)   # (KH,D)
         zero = qmin - jnp.round(xmin / delta)
-        k_q = jnp.clip(jnp.round(k / delta) + zero, qmin, qmax).astype(jnp.int8)
+        k_q = jnp.clip(jnp.round(k / delta) + zero, qmin, qmax)
         new["k_scale"] = entry["k_scale"].at[slot].set(delta.astype(jnp.float32))
         new["k_zero"] = entry["k_zero"].at[slot].set(zero.astype(jnp.float32))
     else:
         delta = entry["k_scale"][slot]                             # (KH,D) f32
         zero = entry["k_zero"][slot]
         k_q = jnp.clip(jnp.round(k.astype(jnp.float32) / delta) + zero,
-                       qmin, qmax).astype(jnp.int8)
+                       qmin, qmax)
+    k_q = pack_nibbles(k_q) if bits == 4 else k_q.astype(STORAGE_DTYPE)
 
     # per-token V affine — mirrors quantize_values()
     vmin = jnp.min(v, axis=-1, keepdims=True)
     vmax = jnp.max(v, axis=-1, keepdims=True)
     v_scale = jnp.maximum((vmax - vmin) / (qmax - qmin), 1e-8)     # (C,KH,1)
     v_zero = qmin - jnp.round(vmin / v_scale)
-    v_q = jnp.clip(jnp.round(v / v_scale) + v_zero, qmin, qmax).astype(jnp.int8)
+    v_q = jnp.clip(jnp.round(v / v_scale) + v_zero, qmin, qmax)
+    v_q = pack_nibbles(v_q) if bits == 4 else v_q.astype(STORAGE_DTYPE)
 
     trash = entry["k_vals"].shape[0] - 1
     bids, offs = _scatter_ids(block_row, ctx, chunk_len, c, block_size, trash)
@@ -411,17 +579,20 @@ def gqa_paged_append(entry: Dict[str, jax.Array], k_t: jax.Array, v_t: jax.Array
     block-table entry is the trash block write harmlessly off to the side.
     """
     b = k_t.shape[0]
-    qmin, qmax = int_range(8)
+    bits = _entry_bits(entry)
+    qmin, qmax = int_range(bits)
     k_scale, k_zero = entry["k_scale"], entry["k_zero"]            # (B,KH,D)
     k_q = jnp.clip(jnp.round(k_t.astype(jnp.float32) / k_scale) + k_zero,
-                   qmin, qmax).astype(jnp.int8)
+                   qmin, qmax)
+    k_q = pack_nibbles(k_q) if bits == 4 else k_q.astype(STORAGE_DTYPE)
 
     vmin = jnp.min(v_t, axis=-1, keepdims=True).astype(jnp.float32)
     vmax = jnp.max(v_t, axis=-1, keepdims=True).astype(jnp.float32)
     v_scale = jnp.maximum((vmax - vmin) / (qmax - qmin), 1e-8)
     v_zero = qmin - jnp.round(vmin / v_scale)
     v_q = jnp.clip(jnp.round(v_t.astype(jnp.float32) / v_scale) + v_zero,
-                   qmin, qmax).astype(jnp.int8)
+                   qmin, qmax)
+    v_q = pack_nibbles(v_q) if bits == 4 else v_q.astype(STORAGE_DTYPE)
 
     bidx = jnp.arange(b)
     safe = jnp.clip(lengths // block_size, 0, block_tables.shape[1] - 1)
@@ -438,8 +609,10 @@ def gqa_paged_append(entry: Dict[str, jax.Array], k_t: jax.Array, v_t: jax.Array
 def gqa_gather_prefix(entry: Dict[str, jax.Array], block_row: jax.Array,
                       slot: jax.Array, dtype):
     """Dequantize one request's cached prefix: -> k, v (M*T, KH, D)."""
-    k_q = entry["k_vals"][block_row]                 # (M,T,KH,D)
+    k_q = entry["k_vals"][block_row]                 # (M,T,KH,D/pack)
     v_q = entry["v_vals"][block_row]
+    if _entry_bits(entry) == 4:
+        k_q, v_q = unpack_nibbles(k_q), unpack_nibbles(v_q)
     vs = entry["v_scale"][block_row]
     vz = entry["v_zero"][block_row]
     m, t = k_q.shape[0], k_q.shape[1]
@@ -457,7 +630,8 @@ def mla_chunk_write(entry: Dict[str, jax.Array], c_kv: jax.Array, kr: jax.Array,
                     chunk_len: jax.Array, block_size: int, is_first: bool):
     """Quantize one chunk's latent (C, rkv) + rope key (C, dr) into the pool."""
     cl = c_kv.shape[0]
-    qmin, qmax = int_range(8)
+    bits = _entry_bits(entry)
+    qmin, qmax = int_range(bits)
     valid = (jnp.arange(cl) < chunk_len)[:, None]
     trash = entry["c_vals"].shape[0] - 1
     bids, offs = _scatter_ids(block_row, ctx, chunk_len, cl, block_size, trash)
@@ -469,7 +643,7 @@ def mla_chunk_write(entry: Dict[str, jax.Array], c_kv: jax.Array, kr: jax.Array,
             xmax = jnp.max(jnp.where(valid, x, -big), axis=0)
             delta = jnp.maximum((xmax - xmin) / (qmax - qmin), 1e-8)
             zero = qmin - jnp.round(xmin / delta)
-            q = jnp.clip(jnp.round(x / delta) + zero, qmin, qmax).astype(jnp.int8)
+            q = jnp.clip(jnp.round(x / delta) + zero, qmin, qmax)
             new[f"{name}_scale"] = entry[f"{name}_scale"].at[slot].set(
                 delta.astype(jnp.float32))
             new[f"{name}_zero"] = entry[f"{name}_zero"].at[slot].set(
@@ -478,7 +652,8 @@ def mla_chunk_write(entry: Dict[str, jax.Array], c_kv: jax.Array, kr: jax.Array,
             delta = entry[f"{name}_scale"][slot]
             zero = entry[f"{name}_zero"][slot]
             q = jnp.clip(jnp.round(x.astype(jnp.float32) / delta) + zero,
-                         qmin, qmax).astype(jnp.int8)
+                         qmin, qmax)
+        q = pack_nibbles(q) if bits == 4 else q.astype(STORAGE_DTYPE)
         new[f"{name}_vals"] = entry[f"{name}_vals"].at[bids, offs].set(q)
     return new
 
@@ -487,7 +662,8 @@ def mla_paged_append(entry: Dict[str, jax.Array], c_t: jax.Array, kr_t: jax.Arra
                      block_tables: jax.Array, lengths: jax.Array, *,
                      block_size: int):
     """Decode append of one token's latent (B, rkv) + rope key (B, dr)."""
-    qmin, qmax = int_range(8)
+    bits = _entry_bits(entry)
+    qmin, qmax = int_range(bits)
     b = c_t.shape[0]
     bidx = jnp.arange(b)
     safe = jnp.clip(lengths // block_size, 0, block_tables.shape[1] - 1)
@@ -498,7 +674,8 @@ def mla_paged_append(entry: Dict[str, jax.Array], c_t: jax.Array, kr_t: jax.Arra
         scale = entry[f"{name}_scale"]               # (B, dim)
         zero = entry[f"{name}_zero"]
         q = jnp.clip(jnp.round(x_t.astype(jnp.float32) / scale) + zero,
-                     qmin, qmax).astype(jnp.int8)
+                     qmin, qmax)
+        q = pack_nibbles(q) if bits == 4 else q.astype(STORAGE_DTYPE)
         new[f"{name}_vals"] = entry[f"{name}_vals"].at[bids, offs].set(q)
     return new
 
@@ -506,9 +683,12 @@ def mla_paged_append(entry: Dict[str, jax.Array], c_t: jax.Array, kr_t: jax.Arra
 def mla_gather_prefix(entry: Dict[str, jax.Array], block_row: jax.Array,
                       slot: jax.Array, dtype):
     """Dequantize one request's cached latent prefix -> c (M*T, rkv), kr (M*T, dr)."""
+    bits = _entry_bits(entry)
     out = []
     for name in ("c", "kr"):
-        q = entry[f"{name}_vals"][block_row]         # (M,T,dim)
+        q = entry[f"{name}_vals"][block_row]         # (M,T,dim/pack)
+        if bits == 4:
+            q = unpack_nibbles(q)
         m, t, dim = q.shape
         scale = entry[f"{name}_scale"][slot]
         zero = entry[f"{name}_zero"][slot]
@@ -521,9 +701,12 @@ def mla_gather_batch(entry: Dict[str, jax.Array], block_tables: jax.Array):
     """Batched gather for decode: block pool -> dense (B, M*T, ...) views plus
     per-slot scales shaped for ``mla_decode_ref``."""
     b, m = block_tables.shape
+    bits = _entry_bits(entry)
     out = {}
     for name in ("c", "kr"):
-        q = entry[f"{name}_vals"][block_tables]      # (B,M,T,dim)
+        q = entry[f"{name}_vals"][block_tables]      # (B,M,T,dim/pack)
+        if bits == 4:
+            q = unpack_nibbles(q)
         out[f"{name}_vals"] = q.reshape(b, m * q.shape[2], q.shape[3])
         out[f"{name}_scale"] = entry[f"{name}_scale"][:, None]   # (B,1,dim)
         out[f"{name}_zero"] = entry[f"{name}_zero"][:, None]
@@ -614,6 +797,19 @@ def paged_cache_nbytes(pool) -> int:
     for leaf in jax.tree_util.tree_leaves(pool):
         if hasattr(leaf, "nbytes"):
             total += leaf.nbytes
+    return total
+
+
+def per_block_nbytes(pool) -> int:
+    """Bytes one pool block occupies across every block-indexed leaf — the
+    unit for the scheduler's effective-capacity accounting (a demoted int4
+    block holds a full logical block in half of one of these)."""
+    total = 0
+    for entry in pool.values():
+        for name in BLOCK_LEAVES:
+            if name in entry:
+                leaf = entry[name]
+                total += int(leaf.nbytes) // int(leaf.shape[1])
     return total
 
 

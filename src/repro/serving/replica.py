@@ -342,6 +342,18 @@ class ReplicatedServeEngine:
             "spec_draft_nbytes": sum(m["spec_draft_nbytes"] for m in per),
             "cache_nbytes": sum(m["cache_nbytes"] for m in per),
             "state_pool_nbytes": sum(m["state_pool_nbytes"] for m in per),
+            # cache codec / bit ladder fleet totals; the weight-bits summary
+            # comes from replica 0 (every replica quantized the same params
+            # under the same budget, so the assignments are identical)
+            "demotions": sum(m["demotions"] for m in per),
+            "promotions": sum(m["promotions"] for m in per),
+            "int4_blocks": sum(m["int4_blocks"] for m in per),
+            "effective_cache_bytes": sum(m["effective_cache_bytes"]
+                                         for m in per),
+            "state_prefix_hits": sum(m["state_prefix_hits"] for m in per),
+            "weight_bits_min": per[0]["weight_bits_min"],
+            "weight_bits_max": per[0]["weight_bits_max"],
+            "weight_bits_avg": per[0]["weight_bits_avg"],
             "scale_syncs": self.scale_syncs,
             "per_replica": per,
         }

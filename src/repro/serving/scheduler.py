@@ -34,9 +34,24 @@ synchronous slot loop:
     recurrent state instead of a growing KV; each admitted request holds one
     slot of the quantized state pool (``serving/state_pool.py``: conv tail
     bf16, SSD state INT8 + per-slot scales) from admission to finish, freed
-    at preemption (recompute-on-resume, like KV).  Prefix-cache matching is
-    disabled for hybrid configs: cached KV blocks cannot reconstruct the SSM
-    state at the matched boundary, so every token must prefill.
+    at preemption (recompute-on-resume, like KV).  Prefix matching is
+    *state-aware*: publishing a block boundary whose prefill chunk landed
+    exactly on it also snapshots the request's state-slot rows keyed by the
+    chain digest (bounded LRU, ``state_snap_cap``), and a match is trimmed
+    to the longest chain key holding a snapshot so the donor's exact
+    quantized SSM state is restored alongside the KV blocks.  Sub-block
+    partial matches stay disabled for hybrid configs (no state exists at a
+    mid-block boundary).
+  * **cache codec + pressure bit ladder** — the pool's storage layout comes
+    from ``serving/codec.py``: ``codec="int8"`` is today's bit-identical
+    layout, ``codec="int4"`` packs two codes per byte (capacity doubles,
+    divergence-gated).  With ``ladder=True`` (int8 pools only) the scheduler
+    demotes pairs of LRU-cold CACHED prefix blocks into single packed-int4
+    blocks whenever the free list drops below ``ladder_watermark`` of the
+    pool, promotes them back to int8 blocks on a prefix hit (packed blocks
+    are never kernel-read), and demotes cold hybrid state snapshots the
+    same way.  Ladder off means no demotion ever happens and serving stays
+    bit-identical to the pre-codec engine.
   * **speculative decoding** — with ``SchedulerConfig.spec`` set, a low-bit
     draft of the same checkpoint (``serving/spec_decode.py``) proposes
     ``gamma`` tokens per decoding request; the target verifies all
@@ -62,7 +77,7 @@ from __future__ import annotations
 import dataclasses
 import hashlib
 import time
-from collections import deque
+from collections import OrderedDict, deque
 from functools import partial
 from typing import Any, Deque, Dict, List, Optional
 
@@ -76,14 +91,17 @@ from repro.models.config import ModelConfig
 from repro.models.transformer import (forward_decode_paged,
                                       forward_prefill_chunk,
                                       forward_verify_paged)
+from repro.serving.codec import (demote_codes, demote_pair_blocks,
+                                 promote_block, promote_codes_full)
 from repro.serving.paged_cache import (BlockAllocator, PagedCacheConfig,
                                        copy_pool_block, init_paged_cache,
-                                       paged_cache_nbytes, per_device_nbytes,
-                                       restore_slot_scales, rewind_tail,
-                                       snapshot_slot_scales)
+                                       paged_cache_nbytes, per_block_nbytes,
+                                       per_device_nbytes, restore_slot_scales,
+                                       rewind_tail, snapshot_slot_scales)
 from repro.serving.spec_decode import (DraftProposer, SpecConfig,
                                        ensure_spec_supported)
 from repro.serving.state_pool import (StateAllocator, init_state_pool,
+                                      restore_state_slot, snapshot_state_slot,
                                       state_pool_nbytes)
 
 
@@ -146,6 +164,26 @@ class SchedulerConfig:
                                          # the overdue); 0 = off
     ttft_chunk: int = 16                 # shrunken chunk budget while other
                                          # requests are past the TTFT target
+    codec: str = "int8"                  # block/state pool storage codec
+                                         # ("int8" = bit-identical legacy
+                                         # layout, "int4" = packed nibbles,
+                                         # double capacity, divergence-gated)
+    ladder: bool = False                 # pressure-driven bit ladder: demote
+                                         # LRU-cold CACHED blocks (and cold
+                                         # hybrid state snapshots) to packed
+                                         # int4, promote on prefix hit; int8
+                                         # pools only
+    ladder_watermark: float = 0.25       # demote while num_free falls below
+                                         # this fraction of the pool
+    state_snap_cap: int = 32             # hybrid prefix snapshots kept (LRU)
+    state_snap_hot: int = 8              # newest snapshots kept int8 when the
+                                         # ladder demotes the cold shelf
+    weight_budget_mb: float = 0.0        # >0: per-layer weight bitwidths are
+                                         # re-assigned at engine build via
+                                         # core.bitwidth_search under this
+                                         # byte budget (0 = params untouched)
+    weight_bits_method: str = "symmetric"  # core.methods scheme the budget
+                                         # re-quantization uses
 
     @property
     def paged(self) -> PagedCacheConfig:
@@ -282,8 +320,12 @@ def _mesh_traced(impl, mesh, rules):
     return traced
 
 
-def _step_fn_for(cfg: ModelConfig, block_size: int, mesh=None, rules=None):
-    key = (cfg, block_size, shd.mesh_fingerprint(mesh, rules))
+def _step_fn_for(cfg: ModelConfig, block_size: int, mesh=None, rules=None,
+                 codec: str = "int8"):
+    # codec is in the key even though jit would re-specialize on the packed
+    # pool shapes anyway: two codecs must never race one cache entry's
+    # in-flight compilation or donation bookkeeping
+    key = (cfg, block_size, codec, shd.mesh_fingerprint(mesh, rules))
     fn = _STEP_FN_CACHE.get(key)
     if fn is None:
         base = partial(_step_impl, cfg=cfg, block_size=block_size)
@@ -294,8 +336,9 @@ def _step_fn_for(cfg: ModelConfig, block_size: int, mesh=None, rules=None):
     return fn
 
 
-def _spec_fn_for(cfg: ModelConfig, block_size: int, mesh=None, rules=None):
-    key = (cfg, block_size, "spec", shd.mesh_fingerprint(mesh, rules))
+def _spec_fn_for(cfg: ModelConfig, block_size: int, mesh=None, rules=None,
+                 codec: str = "int8"):
+    key = (cfg, block_size, codec, "spec", shd.mesh_fingerprint(mesh, rules))
     fn = _STEP_FN_CACHE.get(key)
     if fn is None:
         base = partial(_spec_step_impl, cfg=cfg, block_size=block_size)
@@ -332,28 +375,44 @@ class Scheduler:
         is traced under ``axis_rules(mesh, rules)`` so activation
         constraints in the model code become real collective boundaries."""
         ensure_paged_supported(cfg)
+        if scfg.ladder and scfg.codec != "int8":
+            raise ValueError(
+                "the bit ladder demotes int8 blocks to packed int4; it "
+                f"requires codec='int8' (got codec={scfg.codec!r})")
         self.mesh = mesh
         self.rules = rules
+        # per-layer weight bitwidths under a byte budget (engine-build hook):
+        # the policy-eligible matrices are re-quantized with the widths
+        # core.bitwidth_search assigns, before any sharding commit
+        self.weight_bits: Optional[Dict[str, int]] = None
+        if scfg.weight_budget_mb > 0:
+            from repro.core.bitwidth_search import assign_weight_bitwidths
+            params, wres = assign_weight_bitwidths(
+                params, int(scfg.weight_budget_mb * 2 ** 20),
+                method=scfg.weight_bits_method)
+            if wres is not None:
+                self.weight_bits = dict(wres.assignment)
         self.params = params
         self.cfg = cfg
         self.scfg = scfg
         self.pcfg = scfg.paged
         self.trash = self.pcfg.trash_block
-        self.pool = init_paged_cache(cfg, self.pcfg)
+        self.pool = init_paged_cache(cfg, self.pcfg, codec=scfg.codec)
         self.alloc = BlockAllocator(scfg.num_blocks)
         # hybrid (attention+SSM) patterns: fixed-size conv/SSD state lives in
         # a slot pool beside the KV block pool; a request holds one slot from
         # admission to finish (freed at preemption — recompute-on-resume).
         self._has_ssm = any(s.mixer == "ssm" for s in cfg.layer_pattern)
         self.state_trash = scfg.state_slots if self._has_ssm else 0
-        self.spool = init_state_pool(cfg, scfg.state_slots) \
+        self.spool = init_state_pool(cfg, scfg.state_slots, codec=scfg.codec) \
             if self._has_ssm else {}
         self.state_alloc = StateAllocator(scfg.state_slots) \
             if self._has_ssm else None
-        # prefix-cache matching maps KV blocks only; SSM state is a running
-        # reduction over the whole prefix and cannot be adopted from a donor,
-        # so hybrid configs must prefill every token themselves
-        self._prefix_on = scfg.prefix_cache and not self._has_ssm
+        self._prefix_on = scfg.prefix_cache
+        # hybrid prefix sharing: exact quantized state-slot rows captured at
+        # published block boundaries, keyed by the boundary's chain digest
+        # (a KV match is only usable up to a key whose state we can restore)
+        self._state_snaps: "OrderedDict[bytes, Dict[str, Any]]" = OrderedDict()
         if mesh is not None:
             # commit params + pools to their mesh placements now: jit infers
             # in_shardings from committed inputs, so the traced constraints
@@ -377,7 +436,8 @@ class Scheduler:
         self._scale_tag = 0                # scale-freeze epoch counter
         self._rng = jax.random.PRNGKey(scfg.seed)
         self.scale_state = EmaScaleState.init()
-        self._step_fn = _step_fn_for(cfg, scfg.block_size, mesh, rules)
+        self._step_fn = _step_fn_for(cfg, scfg.block_size, mesh, rules,
+                                     codec=scfg.codec)
         self._cow_fn = _shared_cow_fn()
         # speculative decoding: the draft proposer holds one dense-cache lane
         # per decode slot; the verify step replaces the one-token decode
@@ -389,7 +449,8 @@ class Scheduler:
             self.draft = DraftProposer(params, cfg, self.spec,
                                        max_batch=scfg.max_batch, capacity=cap,
                                        built=draft_built)
-            self._spec_fn = _spec_fn_for(cfg, scfg.block_size, mesh, rules)
+            self._spec_fn = _spec_fn_for(cfg, scfg.block_size, mesh, rules,
+                                         codec=scfg.codec)
         else:
             self.draft = None
             self._spec_fn = None
@@ -401,10 +462,15 @@ class Scheduler:
                       "prefix_query_tokens": 0, "cow_copies": 0,
                       "spec_rounds": 0, "spec_lane_rounds": 0,
                       "spec_proposed": 0, "spec_accepted": 0,
-                      "spec_emitted": 0}
+                      "spec_emitted": 0, "snap_demotions": 0,
+                      "snap_promotions": 0, "state_prefix_hits": 0}
         self._util_sum = 0.0
         self._util_peak = 0.0
         self._cached_sum = 0.0
+        self._logical_peak = 0          # peak logical-resident blocks
+        self._cache_peak = 0            # peak reusable prefix blocks (cached
+                                        # + int4 halves): the ladder's
+                                        # capacity-ratio numerator
         self._t_start: Optional[float] = None
         self._t_last = 0.0
 
@@ -451,6 +517,9 @@ class Scheduler:
         when there is no work this step."""
         if self._t_start is None:
             self._t_start = time.perf_counter()
+        if self.scfg.ladder:
+            self._maybe_demote()        # before admission: freed blocks and
+                                        # promote headroom help the matcher
         self._admit()
         dec_slots = self._live_decode(self._schedule_decode())
         vlens = (self._schedule_spec(dec_slots)
@@ -472,6 +541,9 @@ class Scheduler:
         self._util_sum += self.alloc.utilization
         self._util_peak = max(self._util_peak, self.alloc.utilization)
         self._cached_sum += self.alloc.cached_frac
+        self._logical_peak = max(self._logical_peak, self._logical_blocks())
+        self._cache_peak = max(self._cache_peak,
+                               self.alloc.num_cached + self.alloc.int4_blocks)
 
         if dec_slots and vlens:
             drafts = self._propose_drafts(dec_slots, vlens)
@@ -597,6 +669,29 @@ class Scheduler:
             "cached_blocks": self.alloc.num_cached,
             "cached_frac_avg": self._cached_sum / steps,
             "cow_copies": self.stats["cow_copies"],
+            # cache codec + bit ladder: logical blocks demoted/promoted
+            # (including hybrid state snapshots), packed residents right now,
+            # and the *logical* cache footprint — what an int8-only pool
+            # would need in bytes to hold the same resident blocks; its peak
+            # over the run is the ladder's capacity-ratio numerator
+            "demotions": self.alloc.demotions + self.stats["snap_demotions"],
+            "promotions": (self.alloc.promotions
+                           + self.stats["snap_promotions"]),
+            "int4_blocks": self.alloc.int4_blocks,
+            "effective_cache_bytes": (self._logical_blocks()
+                                      * per_block_nbytes(self.pool)),
+            "effective_cache_blocks_peak": self._logical_peak,
+            "prefix_cache_blocks_peak": self._cache_peak,
+            "state_prefix_hits": self.stats["state_prefix_hits"],
+            # per-layer weight bitwidths from the build-time budget search
+            # (zeros when weight_budget_mb == 0)
+            "weight_bits_min": (min(self.weight_bits.values())
+                                if self.weight_bits else 0),
+            "weight_bits_max": (max(self.weight_bits.values())
+                                if self.weight_bits else 0),
+            "weight_bits_avg": (sum(self.weight_bits.values())
+                                / len(self.weight_bits)
+                                if self.weight_bits else 0.0),
             # speculative decoding (zeros with spec=None): acceptance rate
             # over proposed draft tokens, mean emitted tokens per verified
             # lane-round (the >1 decode-speedup signal), and the draft's
@@ -694,7 +789,24 @@ class Scheduler:
                 break
             if tag is None:
                 tag, meta = e.tag, e.meta
-            matched.append(self.alloc.acquire(run.chain[j]))
+            if e.bits != 8:
+                b = self._promote_entry(run.chain[j], e)
+                if b is None:
+                    break              # pool too tight to lift the demoted
+                matched.append(b)      # promote() hands over the reference
+            else:
+                matched.append(self.alloc.acquire(run.chain[j]))
+        if self._has_ssm and matched:
+            # state-aware: the match must end at a boundary whose SSM state
+            # was snapshotted, or the restored KV would pair with a state
+            # computed over a different prefix
+            keep = 0
+            for j in range(len(matched)):
+                if run.chain[j] in self._state_snaps:
+                    keep = j + 1
+            for b in matched[keep:]:
+                self.alloc.decref(b)
+            matched = matched[:keep]
         if matched:
             for j, b in enumerate(matched):
                 self.block_tables[slot, j] = b
@@ -704,8 +816,12 @@ class Scheduler:
             run.snapshot = meta
             if meta is not None:
                 self.pool = restore_slot_scales(self.pool, slot, meta)
+            if self._has_ssm:
+                self._restore_state_snap(run, run.chain[len(matched) - 1])
+        # sub-block reuse needs no state (attention-only): no SSM state
+        # exists at a mid-block boundary, so hybrid configs skip it
         part = (self._match_partial(slot, run, tag)
-                if self.scfg.partial_prefix else 0)
+                if self.scfg.partial_prefix and not self._has_ssm else 0)
         if not matched and not part:
             return
         self.stats["prefix_hits"] += 1
@@ -740,6 +856,9 @@ class Scheduler:
         for e in self.alloc.children_of(parent):
             if e.tokens is None or (tag is not None and e.tag != tag):
                 continue
+            if e.bits != 8:
+                continue          # demoted donor: its block holds packed
+                                  # nibbles a plain CoW copy cannot read
             width = min(e.tokens.shape[-1], blk.shape[-1], avail)
             neq = (e.tokens[..., :width] != blk[..., :width])
             neq = neq.reshape(-1, width).any(axis=0)
@@ -760,6 +879,101 @@ class Scheduler:
                 self.pool = restore_slot_scales(self.pool, slot, best.meta)
         self.stats["prefix_partial_tokens"] += best_r
         return best_r
+
+    # -- bit ladder / state snapshots -----------------------------------------
+    def _logical_blocks(self) -> int:
+        """Logical blocks resident right now: live + cached int8 blocks plus
+        demoted entries surviving as packed halves.  With the ladder on this
+        can exceed ``num_blocks`` — that surplus is the capacity win."""
+        a = self.alloc
+        return a.num_used + a.num_cached + a.int4_blocks
+
+    def _maybe_demote(self) -> None:
+        """Pressure valve: while the free list sits below the watermark, fold
+        the two LRU-oldest CACHED prefix blocks into one packed-int4 block
+        (freeing the other).  Host bookkeeping and the device rewrite move
+        together; packed blocks never enter a block table, so no kernel ever
+        reads nibbles the promote path hasn't unpacked first."""
+        floor = self.scfg.ladder_watermark * self.scfg.num_blocks
+        while self.alloc.num_free < floor:
+            pair = self.alloc.demote_oldest_pair()
+            if pair is None:
+                break                 # < 2 cached blocks: nothing demotable
+            _key_a, _key_b, src_a, src_b, dst = pair
+            self.pool = demote_pair_blocks(self.pool, jnp.int32(src_a),
+                                           jnp.int32(src_b), jnp.int32(dst))
+        if self._has_ssm:
+            self._demote_old_snaps()
+
+    def _promote_entry(self, key: bytes, e) -> Optional[int]:
+        """Lift a ladder-demoted prefix entry back onto a fresh int8 block
+        before the matcher maps it.  The packed source is excluded from the
+        allocation so eviction cannot recycle the bytes being read.  Returns
+        the promoted block — ACTIVE at ref 1, the caller now holds that
+        reference (do NOT acquire again) — or None when the pool has no
+        block to give (the match just ends here)."""
+        got = self.alloc.alloc(1, exclude=(e.block,))
+        if got is None:
+            return None
+        src, half = self.alloc.promote(key, got[0])
+        self.pool = promote_block(self.pool, jnp.int32(src), jnp.int32(half),
+                                  jnp.int32(got[0]))
+        return got[0]
+
+    def _store_state_snap(self, key: bytes, slot: int) -> None:
+        """Capture the state-slot rows at a published block boundary (hybrid
+        prefix sharing), bounded by an LRU cap."""
+        if key in self._state_snaps:
+            self._state_snaps.move_to_end(key)
+            return
+        self._state_snaps[key] = snapshot_state_slot(self.spool, slot)
+        while len(self._state_snaps) > max(self.scfg.state_snap_cap, 1):
+            self._state_snaps.popitem(last=False)
+        if self.scfg.ladder:
+            self._demote_old_snaps()
+
+    def _demote_old_snaps(self) -> None:
+        """Ladder the snapshot shelf: every snapshot older than the
+        ``state_snap_hot`` newest gets its SSD codes demoted to packed int4
+        (same code-space requant as the block ladder; conv/scales stay)."""
+        if not self.scfg.ladder:
+            return
+        hot = max(self.scfg.state_snap_hot, 0)
+        cold = list(self._state_snaps)[:max(len(self._state_snaps) - hot, 0)]
+        for key in cold:
+            snap = self._state_snaps[key]
+            if not any("ssd_vals" in lv for lv in snap.values()):
+                continue              # already demoted
+            self._state_snaps[key] = {
+                pk: self._demote_snap_entry(lv) for pk, lv in snap.items()}
+            self.stats["snap_demotions"] += 1
+
+    @staticmethod
+    def _demote_snap_entry(leaves: Dict[str, Any]) -> Dict[str, Any]:
+        if "ssd_vals" not in leaves:
+            return leaves
+        out = {n: l for n, l in leaves.items() if n != "ssd_vals"}
+        out["ssd_vals4"] = demote_codes(leaves["ssd_vals"])
+        return out
+
+    def _restore_state_snap(self, run: _Run, key: bytes) -> None:
+        """Adopt the donor's exact quantized SSM state for a hybrid prefix
+        hit.  A ladder-demoted snapshot is promoted back to the int8 pool
+        layout first (bounded code-space error, divergence-gated)."""
+        snap = self._state_snaps[key]
+        self._state_snaps.move_to_end(key)
+        restored: Dict[str, Any] = {}
+        promoted = False
+        for pkey, leaves in snap.items():
+            if "ssd_vals4" in leaves and "ssd_vals4" not in self.spool[pkey]:
+                leaves = {n: l for n, l in leaves.items() if n != "ssd_vals4"}
+                leaves["ssd_vals"] = promote_codes_full(snap[pkey]["ssd_vals4"])
+                promoted = True
+            restored[pkey] = leaves
+        if promoted:
+            self.stats["snap_promotions"] += 1
+        self.spool = restore_state_slot(self.spool, run.state_slot, restored)
+        self.stats["state_prefix_hits"] += 1
 
     def _schedule_decode(self) -> List[int]:
         """Ensure every decoding slot has a writable block for its next
@@ -1202,6 +1416,11 @@ class Scheduler:
         if not self._prefix_on:
             return
         full = min(run.ctx // self.scfg.block_size, len(run.chain))
+        # hybrid: a chunk that lands exactly on a published block boundary is
+        # the only moment the slot's SSM state equals "the state after those
+        # full blocks" — snapshot it so a later prompt can adopt both
+        if self._has_ssm and full > 0 and run.ctx == full * self.scfg.block_size:
+            self._store_state_snap(run.chain[full - 1], run.state_slot)
         if full <= run.published_upto:
             return
         if run.snapshot is None:

@@ -7,9 +7,11 @@ for its whole lifetime.  Paging that through the block pool would waste a
 block per request and complicate the allocator for nothing — what it needs
 is a refcount-free **slot pool**: O(1) alloc at admission, O(1) free at
 finish/preemption, no sharing, no CoW (SSM state is a running reduction over
-the *whole* prefix; two requests can never share it the way they share an
-attention KV block — which is also why the scheduler disables prefix-cache
-matching for hybrid configs).
+the *whole* prefix; two requests can never share a live slot the way they
+share an attention KV block).  What *can* be shared is a snapshot: the
+scheduler captures slot rows at published block boundaries
+(``snapshot_state_slot``) and restores them on a prefix hit, which is how
+hybrid configs participate in the prefix cache.
 
 Storage per SSM pattern position (``R`` = scan-repeat axis, ``S`` = slot
 count, slot ``S`` is a trash slot absorbing writes from inactive decode
@@ -40,8 +42,10 @@ from typing import Any, Dict, List, Optional
 import jax
 import jax.numpy as jnp
 
+from repro.core.qtensor import pack_nibbles, unpack_nibbles
 from repro.models.config import ModelConfig
 from repro.models.ssm import dequantize_ssd_state, quantize_ssd_state
+from repro.serving.codec import STORAGE_DTYPE, get_codec
 
 
 class StatePoolError(RuntimeError):
@@ -115,22 +119,27 @@ class StateAllocator:
 # Pool allocation
 # ---------------------------------------------------------------------------
 
-def init_state_pool(cfg: ModelConfig, num_slots: int) -> Dict[str, Any]:
+def init_state_pool(cfg: ModelConfig, num_slots: int,
+                    codec="int8") -> Dict[str, Any]:
     """Zero-filled state pool pytree: ``{"p{i}": leaves (R, S+1, ...)}`` for
     every *SSM* pattern position (attention positions live in the block pool).
-    Returns ``{}`` for a pure-attention config."""
+    Returns ``{}`` for a pure-attention config.  A packing codec stores the
+    SSD codes nibble-packed along N under the ``ssd_vals4`` leaf — the key
+    name is the (jit-static) codec marker the read/write paths dispatch on."""
+    cd = get_codec(codec)
     r = cfg.n_repeats
     s = num_slots + 1                               # + trash slot
     k1 = cfg.ssm_conv - 1
     conv_dim = cfg.d_inner + 2 * cfg.ssm_groups * cfg.ssm_state
     h, pd, n = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    vals_key = "ssd_vals" if cd.pack == 1 else "ssd_vals4"
     entries: Dict[str, Any] = {}
     for i, spec in enumerate(cfg.layer_pattern):
         if spec.mixer != "ssm":
             continue
         entries[f"p{i}"] = {
             "conv": jnp.zeros((r, s, k1, conv_dim), cfg.compute_dtype),
-            "ssd_vals": jnp.zeros((r, s, h, pd, n), jnp.int8),
+            vals_key: jnp.zeros((r, s, h, pd, cd.packed_dim(n)), STORAGE_DTYPE),
             "ssd_scale": jnp.ones((r, s, h), jnp.float32),
         }
     return entries
@@ -145,19 +154,51 @@ def read_state(entry: Dict[str, jax.Array], slots: jax.Array) -> Dict[str, jax.A
     """Gather + dequantize working state for ``slots`` (B,) -> {"conv":
     (B, K-1, conv_dim), "ssm": (B, H, P, N) f32}.  Trash-slot lanes read
     garbage that the caller's write sends straight back to the trash slot."""
+    if "ssd_vals4" in entry:
+        vals = unpack_nibbles(entry["ssd_vals4"][slots])
+    else:
+        vals = entry["ssd_vals"][slots]
     return {"conv": entry["conv"][slots],
-            "ssm": dequantize_ssd_state(entry["ssd_vals"][slots],
-                                        entry["ssd_scale"][slots])}
+            "ssm": dequantize_ssd_state(vals, entry["ssd_scale"][slots])}
 
 
 def write_state(entry: Dict[str, jax.Array], slots: jax.Array,
                 state: Dict[str, jax.Array]) -> Dict[str, jax.Array]:
     """Quantize + scatter working state back into ``slots`` (B,)."""
-    vals, scale = quantize_ssd_state(state["ssm"])
+    packed = "ssd_vals4" in entry
+    vals, scale = quantize_ssd_state(state["ssm"], bits=4 if packed else 8)
+    vals_key = "ssd_vals4" if packed else "ssd_vals"
+    if packed:
+        vals = pack_nibbles(vals)
     return {"conv": entry["conv"].at[slots].set(
                 state["conv"].astype(entry["conv"].dtype)),
-            "ssd_vals": entry["ssd_vals"].at[slots].set(vals),
+            vals_key: entry[vals_key].at[slots].set(vals),
             "ssd_scale": entry["ssd_scale"].at[slots].set(scale)}
+
+
+# ---------------------------------------------------------------------------
+# Slot snapshot/restore (host-driven; the scheduler's state-aware prefix
+# sharing stores one snapshot per published block-chain digest)
+# ---------------------------------------------------------------------------
+
+def snapshot_state_slot(spool, slot: int) -> Dict[str, Dict[str, jax.Array]]:
+    """Device copies of slot ``slot``'s rows across every SSM entry — the
+    exact quantized state at a chunk boundary, so restoring it reproduces
+    the donor's computation bit-for-bit."""
+    return {pkey: {name: leaf[:, slot] for name, leaf in entry.items()}
+            for pkey, entry in spool.items()}
+
+
+def restore_state_slot(spool, slot: int, snap) -> Dict[str, Any]:
+    """Write a snapshot back into slot ``slot`` (prefix hit on a hybrid
+    config: the matcher adopts the donor's state alongside its KV blocks)."""
+    out = dict(spool)
+    for pkey, leaves in snap.items():
+        new = dict(out[pkey])
+        for name, row in leaves.items():
+            new[name] = new[name].at[:, slot].set(row)
+        out[pkey] = new
+    return out
 
 
 # ---------------------------------------------------------------------------

@@ -13,7 +13,9 @@ import numpy as np
 import pytest
 
 from repro.core.methods.simquant import quantize_kv
+from repro.core.qtensor import pack_nibbles
 from repro.kernels import ref
+from repro.kernels.kv_decode_attention import paged_kv_decode_attention
 from repro.kernels.paged_attention import (mla_paged_prefix_chunk_attention,
                                            mla_paged_verify_attention,
                                            paged_kv_verify_attention,
@@ -148,6 +150,128 @@ def test_mla_paged_prefix_chunk_attention_exact(ctx_val):
     rs = np.random.RandomState(4)
     block_row = jnp.asarray(rs.randint(0, n, size=(m,)), jnp.int32)
     ctx = jnp.asarray(ctx_val, jnp.int32)
+    args = (q_lat, q_rope, c_vals, c_scale, c_zero, kr_vals, kr_scale,
+            kr_zero, c_chunk, kr_chunk, block_row, ctx)
+    out = mla_paged_prefix_chunk_attention(*args, qk_nope_dim=dn,
+                                           interpret=True)
+    outr = ref.mla_paged_prefix_chunk_attention_ref(*args, qk_nope_dim=dn)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(outr))
+
+
+# ---------------------------------------------------------------------------
+# Packed-int4 pools (cache codec): kernels infer the codec from the pool's
+# halved last dim and must stay bitwise equal to the unpacking oracles.
+# ---------------------------------------------------------------------------
+
+def _gqa_pool_int4(b, kh, d, n, t, seed=5):
+    rs = np.random.RandomState(seed)
+    k_codes = jnp.asarray(rs.randint(-8, 8, size=(n, t, kh, d)), jnp.int8)
+    v_codes = jnp.asarray(rs.randint(-8, 8, size=(n, t, kh, d)), jnp.int8)
+    k_scale = jnp.asarray(rs.uniform(0.02, 0.06, size=(b, kh, d)), jnp.float32)
+    k_zero = jnp.asarray(rs.uniform(-2, 2, size=(b, kh, d)), jnp.float32)
+    v_scale = jnp.asarray(rs.uniform(0.02, 0.06, size=(n, t, kh, 1)),
+                          jnp.float32)
+    v_zero = jnp.asarray(rs.uniform(-2, 2, size=(n, t, kh, 1)), jnp.float32)
+    return (pack_nibbles(k_codes), k_scale, k_zero,
+            pack_nibbles(v_codes), v_scale, v_zero)
+
+
+def _mla_pool_int4(b, rkv, dr, n, t, seed=6):
+    rs = np.random.RandomState(seed)
+    c_vals = pack_nibbles(jnp.asarray(rs.randint(-8, 8, size=(n, t, rkv)),
+                                      jnp.int8))
+    kr_vals = pack_nibbles(jnp.asarray(rs.randint(-8, 8, size=(n, t, dr)),
+                                       jnp.int8))
+    c_scale = jnp.asarray(rs.uniform(0.01, 0.05, size=(b, rkv)), jnp.float32)
+    c_zero = jnp.asarray(rs.uniform(-2, 2, size=(b, rkv)), jnp.float32)
+    kr_scale = jnp.asarray(rs.uniform(0.01, 0.05, size=(b, dr)), jnp.float32)
+    kr_zero = jnp.asarray(rs.uniform(-2, 2, size=(b, dr)), jnp.float32)
+    return c_vals, c_scale, c_zero, kr_vals, kr_scale, kr_zero
+
+
+@pytest.mark.parametrize("b,h,kh,d,n,t,m", [(3, 8, 4, 32, 10, 16, 4),
+                                            (2, 6, 2, 16, 5, 4, 5)])
+def test_paged_decode_attention_int4_exact(b, h, kh, d, n, t, m):
+    q = jax.random.normal(KEY, (b, h, d))
+    kv = _gqa_pool_int4(b, kh, d, n, t)
+    assert kv[0].shape[-1] == d // 2            # really packed
+    rs = np.random.RandomState(5)
+    tables = jnp.asarray(rs.randint(0, n, size=(b, m)), jnp.int32)
+    lengths = jnp.asarray(rs.randint(1, m * t + 1, size=(b,)), jnp.int32)
+    out = paged_kv_decode_attention(q, *kv, tables, lengths, interpret=True)
+    outr = ref.paged_kv_decode_attention_ref(q, *kv, tables, lengths)
+    # decode streams an online softmax (different accumulation order from the
+    # one-shot oracle), so parity is allclose like the int8 sweep — the
+    # nibble unpack itself is exact (the verify/chunk tests assert bitwise)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(outr),
+                               rtol=3e-5, atol=3e-5)
+
+
+@pytest.mark.parametrize("b,h,kh,d,n,t,m,g", [(3, 8, 4, 32, 10, 16, 4, 3),
+                                              (2, 6, 2, 16, 5, 4, 5, 2)])
+def test_paged_verify_attention_int4_exact(b, h, kh, d, n, t, m, g):
+    q = jax.random.normal(KEY, (b, g, h, d))
+    kv = _gqa_pool_int4(b, kh, d, n, t)
+    rs = np.random.RandomState(6)
+    tables, lengths = _tables_and_lengths(b, n, m, t, rs)
+    out = paged_kv_verify_attention(q, *kv, tables, lengths, interpret=True)
+    outr = ref.paged_kv_verify_attention_ref(q, *kv, tables, lengths)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(outr))
+
+
+@pytest.mark.parametrize("ctx_val", [3, 16, 40])
+def test_paged_prefix_chunk_attention_int4_exact(ctx_val):
+    h, kh, d, n, t, m, c = 8, 4, 32, 10, 16, 4, 16
+    kv = _gqa_pool_int4(1, kh, d, n, t)
+    k_vals, k_scale, k_zero, v_vals, v_scale, v_zero = kv
+    k_scale, k_zero = k_scale[0], k_zero[0]               # slot rows (KH, D)
+    q = jax.random.normal(KEY, (1, c, h, d))
+    k_chunk = jax.random.normal(jax.random.PRNGKey(21), (1, c, kh, d))
+    v_chunk = jax.random.normal(jax.random.PRNGKey(22), (1, c, kh, d))
+    rs = np.random.RandomState(7)
+    block_row = jnp.asarray(rs.randint(0, n, size=(m,)), jnp.int32)
+    ctx = jnp.asarray(min(ctx_val, m * t), jnp.int32)
+    args = (q, k_vals, k_scale, k_zero, v_vals, v_scale, v_zero,
+            k_chunk, v_chunk, block_row, ctx)
+    out = paged_prefix_chunk_attention(*args, interpret=True)
+    outr = ref.paged_prefix_chunk_attention_ref(*args)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(outr))
+
+
+def test_mla_paged_verify_attention_int4_exact():
+    b, h, rkv, dn, dr, n, t, m, g = 3, 4, 16, 16, 8, 8, 16, 3, 3
+    q_nope = jax.random.normal(KEY, (b, g, h, dn))
+    q_rope = jax.random.normal(jax.random.PRNGKey(7), (b, g, h, dr))
+    w_uk = jax.random.normal(jax.random.PRNGKey(8), (rkv, h, dn))
+    w_uv = jax.random.normal(jax.random.PRNGKey(9), (rkv, h, dn))
+    pool = _mla_pool_int4(b, rkv, dr, n, t)
+    rs = np.random.RandomState(8)
+    tables, lengths = _tables_and_lengths(b, n, m, t, rs)
+    f32 = jnp.float32
+    q_lat = jnp.stack([jnp.einsum("bhd,rhd->bhr", q_nope[:, j].astype(f32),
+                                  w_uk.astype(f32)) for j in range(g)], axis=1)
+    o_lat = mla_paged_verify_attention(q_lat, q_rope, *pool, tables, lengths,
+                                       qk_nope_dim=dn, interpret=True)
+    out = jnp.stack([jnp.einsum("bhr,rhd->bhd", o_lat[:, j],
+                                w_uv.astype(f32)) for j in range(g)], axis=1)
+    outr = ref.mla_paged_verify_attention_ref(q_nope, q_rope, w_uk, w_uv,
+                                              *pool, tables, lengths)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(outr))
+
+
+def test_mla_paged_prefix_chunk_attention_int4_exact():
+    h, rkv, dn, dr, n, t, m, c = 4, 16, 16, 8, 8, 16, 3, 12
+    pool = _mla_pool_int4(1, rkv, dr, n, t)
+    c_vals, c_scale, c_zero, kr_vals, kr_scale, kr_zero = pool
+    c_scale, c_zero = c_scale[0], c_zero[0]
+    kr_scale, kr_zero = kr_scale[0], kr_zero[0]
+    q_lat = jax.random.normal(KEY, (1, c, h, rkv))
+    q_rope = jax.random.normal(jax.random.PRNGKey(13), (1, c, h, dr))
+    c_chunk = jax.random.normal(jax.random.PRNGKey(14), (1, c, rkv))
+    kr_chunk = jax.random.normal(jax.random.PRNGKey(15), (1, c, dr))
+    rs = np.random.RandomState(9)
+    block_row = jnp.asarray(rs.randint(0, n, size=(m,)), jnp.int32)
+    ctx = jnp.asarray(16, jnp.int32)
     args = (q_lat, q_rope, c_vals, c_scale, c_zero, kr_vals, kr_scale,
             kr_zero, c_chunk, kr_chunk, block_row, ctx)
     out = mla_paged_prefix_chunk_attention(*args, qk_nope_dim=dn,

@@ -126,10 +126,11 @@ def test_allocator_lru_eviction_under_pressure():
 
 def _apply_ops(num_blocks: int, ops):
     """Drive an allocator through an op stream, mirroring scheduler usage:
-    tables = writable views (refs), published = index lifecycle.  After every
-    op the conservation invariant ``free + cached + active == num_blocks``
-    and all internal bookkeeping must hold (allocator.check()), and no block
-    may be writable (ref == 1, unpublished) from two tables at once."""
+    tables = writable views (refs), published = index lifecycle, demote/
+    promote = the bit ladder.  After every op the conservation invariant
+    ``free + cached + active + packed == num_blocks`` and all internal
+    bookkeeping must hold (allocator.check()), and no block may be writable
+    (ref == 1, unpublished) from two tables at once."""
     a = BlockAllocator(num_blocks)
     tables = []                          # list of lists: refs held per table
     next_key = 0
@@ -151,9 +152,40 @@ def _apply_ops(num_blocks: int, ops):
                           tag=next_key)
                 next_key += 1
         elif kind == "acquire" and next_key:
-            b = a.acquire(bytes([arg % max(next_key, 1) % 256, 7]))
-            if b is not None:
-                tables.append([b])
+            key = bytes([arg % max(next_key, 1) % 256, 7])
+            e = a.lookup(key)
+            if e is not None and e.bits != 8:
+                # acquire of a demoted entry must refuse loudly, never
+                # hand out a block of packed nibbles
+                with pytest.raises(BlockPoolError, match="promote"):
+                    a.acquire(key)
+            else:
+                b = a.acquire(key)
+                if b is not None:
+                    tables.append([b])
+        elif kind == "demote":
+            before = a.int4_blocks
+            pair = a.demote_oldest_pair()
+            if pair is not None:
+                key_a, key_b, src_a, src_b, dst = pair
+                assert dst == src_a and src_b != src_a
+                assert a.int4_blocks == before + 2
+                assert a.lookup(key_a).bits == 4
+                assert a.lookup(key_b).bits == 4
+        elif kind == "promote" and next_key:
+            demoted = [bytes([i % 256, 7]) for i in range(next_key)
+                       if (e := a.lookup(bytes([i % 256, 7]))) is not None
+                       and e.bits == 4]
+            if demoted:
+                key = demoted[arg % len(demoted)]
+                e = a.lookup(key)
+                got = a.alloc(1, exclude=(e.block,))
+                if got is not None:
+                    phys, half = a.promote(key, got[0])
+                    assert phys != got[0] and half in (0, 1)
+                    assert a.lookup(key).bits == 8
+                    assert a.refcount(got[0]) == 1
+                    tables.append([got[0]])  # promote() hands over the ref
         elif kind == "cow" and tables:
             # copy-on-write: a table holding a shared/published block swaps
             # it for a fresh private copy
@@ -183,17 +215,24 @@ def _apply_ops(num_blocks: int, ops):
         for b in t:
             a.decref(b)
     a.check()
-    assert a.num_free + a.num_cached == num_blocks   # nothing leaked
+    # nothing leaked: every block free, cached, or holding packed halves
+    assert a.num_free + a.num_cached + a.num_packed == num_blocks
+    # byte accounting: demoted logical blocks live two to a physical block
+    assert a.int4_blocks <= 2 * a.num_packed
+    assert a.promotions <= a.demotions    # each promote consumed a demotion
+
+
+_WALK_KINDS = ["alloc", "share", "publish", "acquire", "cow", "free",
+               "demote", "promote"]
 
 
 def test_allocator_property_seeded_walk():
     """Deterministic random-walk version of the hypothesis property (runs
     even without hypothesis installed)."""
     rng = np.random.default_rng(0)
-    kinds = ["alloc", "share", "publish", "acquire", "cow", "free"]
     for _ in range(25):
-        ops = [(kinds[int(rng.integers(len(kinds)))], int(rng.integers(1000)))
-               for _ in range(60)]
+        ops = [(_WALK_KINDS[int(rng.integers(len(_WALK_KINDS)))],
+                int(rng.integers(1000))) for _ in range(60)]
         _apply_ops(int(rng.integers(2, 12)), ops)
 
 
@@ -203,8 +242,7 @@ try:
     @settings(max_examples=60, deadline=None)
     @given(num_blocks=st.integers(2, 12),
            ops=st.lists(st.tuples(
-               st.sampled_from(["alloc", "share", "publish", "acquire",
-                                "cow", "free"]),
+               st.sampled_from(_WALK_KINDS),
                st.integers(0, 999)), max_size=80))
     def test_allocator_property_hypothesis(num_blocks, ops):
         _apply_ops(num_blocks, ops)

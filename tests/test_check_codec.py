@@ -1,0 +1,33 @@
+"""Tier-1 wrapper for ``tools/check_codec.py``: no scoped module may
+hardcode the pool storage dtype — the codec owns the bitwidth."""
+import pathlib
+import sys
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent / "tools"))
+
+import check_codec
+
+
+def test_scoped_modules_exist():
+    # the scope list must track the tree: a renamed module silently leaving
+    # the check would defeat it
+    for rel in check_codec.SCOPED:
+        assert (check_codec.REPO / rel).is_file(), rel
+
+
+def test_no_hardcoded_int8_in_scoped_modules():
+    bad = check_codec.run_check()
+    assert not bad, (
+        "codec bitwidth leaked outside serving/codec.py: "
+        + ", ".join(f"{rel}:{line}" for rel, line in bad))
+
+
+def test_detector_catches_code_but_not_docs():
+    assert check_codec.find_violations("x = jnp.int8\n") == [1]
+    assert check_codec.find_violations(
+        "y = a.astype(jnp.int8)  # bad\n") == [1]
+    # mentions in docstrings/comments are fine — they describe the default
+    assert check_codec.find_violations('"""stored jnp.int8"""\n') == []
+    assert check_codec.find_violations("# jnp.int8 layout\n") == []
+    # other int8 spellings are not the forbidden token
+    assert check_codec.find_violations("z = np.int8(3)\n") == []

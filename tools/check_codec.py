@@ -1,0 +1,81 @@
+#!/usr/bin/env python
+"""Static check: the cache codec owns the pool bitwidth — nobody else.
+
+Scans the serving/kernel modules that read or write the paged block pool and
+the SSM state pool for a literal ``jnp.int8``.  Any hit means a module has
+re-hardcoded the storage layout instead of going through
+``serving/codec.py`` (``STORAGE_DTYPE`` / ``get_codec``) or
+``core/qtensor.py`` (``storage_dtype``/``pack_nibbles``/``unpack_nibbles``)
+— exactly the frozen-INT8 assumption this refactor lifted.  Docstrings and
+comments are allowed to *say* int8 (they describe the default codec); only
+code tokens count.
+
+Run directly (``python tools/check_codec.py``) or through the tier-1 suite
+(``tests/test_check_codec.py``).  Exit 0 = clean, 1 = violations.
+"""
+from __future__ import annotations
+
+import io
+import pathlib
+import sys
+import tokenize
+from typing import List, Tuple
+
+REPO = pathlib.Path(__file__).resolve().parent.parent
+
+# Modules scoped to the check: everything that touches pool/state layouts.
+# serving/codec.py and core/qtensor.py are exempt — they *own* the bitwidth.
+SCOPED = [
+    "src/repro/serving/paged_cache.py",
+    "src/repro/serving/state_pool.py",
+    "src/repro/serving/scheduler.py",
+    "src/repro/serving/kv_cache.py",
+    "src/repro/kernels/paged_attention.py",
+    "src/repro/kernels/kv_decode_attention.py",
+    "src/repro/kernels/ref.py",
+    "src/repro/models/transformer.py",
+    "src/repro/models/ssm.py",
+]
+
+FORBIDDEN = "int8"  # matched as a NAME token following a "jnp." attribute
+
+
+def find_violations(text: str) -> List[int]:
+    """Line numbers where a code token spells ``jnp.int8``."""
+    out: List[int] = []
+    toks = list(tokenize.generate_tokens(io.StringIO(text).readline))
+    for i, tok in enumerate(toks):
+        if tok.type != tokenize.NAME or tok.string != FORBIDDEN:
+            continue
+        # look back past the "." OP for the qualifying name
+        if i >= 2 and toks[i - 1].string == "." and \
+                toks[i - 2].type == tokenize.NAME and \
+                toks[i - 2].string == "jnp":
+            out.append(tok.start[0])
+    return out
+
+
+def run_check() -> List[Tuple[str, int]]:
+    bad: List[Tuple[str, int]] = []
+    for rel in SCOPED:
+        path = REPO / rel
+        text = path.read_text()
+        for line in find_violations(text):
+            bad.append((rel, line))
+    return bad
+
+
+def main() -> int:
+    bad = run_check()
+    if not bad:
+        print(f"check_codec: {len(SCOPED)} modules clean")
+        return 0
+    for rel, line in bad:
+        print(f"{rel}:{line}: literal jnp.int8 — use serving.codec."
+              f"STORAGE_DTYPE / core.qtensor.storage_dtype instead",
+              file=sys.stderr)
+    return 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())
