@@ -23,6 +23,8 @@ from repro.core.methods.smoothquant import apply_fold_to_model
 from repro.core.qtensor import absmax_scale, quantize_affine
 from repro.models import forward_train
 
+from repro.eval.scoring import perplexity
+
 from .common import DATA_CFG, emit, eval_loss, get_trained_model
 
 
@@ -67,13 +69,13 @@ def run():
         return jax.random.normal(jax.random.PRNGKey(1), (256, d))
 
     rows = [dict(method="fp32_baseline", nll=round(base_nll, 4),
-                 ppl=round(float(np.exp(base_nll)), 3), delta_ppl_pct=0.0,
+                 ppl=round(perplexity(base_nll), 3), delta_ppl_pct=0.0,
                  model_mb=round(tree_nbytes(params) / 2**20, 2))]
 
     def add(name, qparams, nbytes):
         nll = eval_loss(qparams, cfg)
         rows.append(dict(method=name, nll=round(nll, 4),
-                         ppl=round(float(np.exp(nll)), 3),
+                         ppl=round(perplexity(nll), 3),
                          delta_ppl_pct=round(100 * (np.exp(nll - base_nll) - 1), 2),
                          model_mb=round(nbytes / 2**20, 2)))
 
@@ -139,7 +141,7 @@ def run():
     outlier["layers"] = lay
     o_nll = eval_loss(outlier, cfg)
     rows.append(dict(method="outlier_fp32", nll=round(o_nll, 4),
-                     ppl=round(float(np.exp(o_nll)), 3),
+                     ppl=round(perplexity(o_nll), 3),
                      delta_ppl_pct=round(100 * (np.exp(o_nll - base_nll) - 1), 2),
                      model_mb=round(tree_nbytes(outlier) / 2**20, 2)))
     o_taps = collect_taps(outlier, cfg)
@@ -151,7 +153,7 @@ def run():
     ]:
         nll = eval_loss(qp, cfg)
         rows.append(dict(method=name, nll=round(nll, 4),
-                         ppl=round(float(np.exp(nll)), 3),
+                         ppl=round(perplexity(nll), 3),
                          delta_ppl_pct=round(100 * (np.exp(nll - o_nll) - 1), 2),
                          model_mb=round(tree_nbytes(qp) / 2**20, 2)))
 

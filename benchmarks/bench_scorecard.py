@@ -1,0 +1,50 @@
+"""Serving-path quality scorecard: method x codec x ladder x spec sweep.
+
+Every point teacher-forces the SAME held-out tasks through the real paged
+engine (``Request(score_tokens=...)``) on the trained bench checkpoint, plus
+one dense fp reference row, and writes a JSON artifact per config under
+``experiments/scorecard/`` (the substrate ``benchmarks/run.py``'s
+``scorecard_gate`` judges).  The CSV summary lands at
+``experiments/bench/scorecard.csv``.
+"""
+from __future__ import annotations
+
+from repro.eval.scorecard import default_grid, run_scorecard
+from repro.eval.tasks import default_tasks
+from repro.serving.scheduler import SchedulerConfig
+
+from .common import DATA_CFG, emit, get_trained_model
+
+# sized for the bench model (attn_chunk=64): single-chunk prefill for the
+# short prompts, multi-chunk for the long perplexity rows, with pool head-
+# room for published prefix blocks from the shared multiple-choice prompts
+SCFG = SchedulerConfig(block_size=16, num_blocks=128, max_batch=4,
+                       max_blocks_per_req=12, prefill_chunk=64,
+                       token_budget=192)
+
+
+def run(smoke: bool = False):
+    params, cfg = get_trained_model()
+    if smoke:
+        # seq_len > prefill_chunk so the second chunk reads codec-quantized
+        # prefix KV — otherwise int4 rows would trivially equal int8
+        tasks = default_tasks(DATA_CFG, n_seqs=3, seq_len=80,
+                              prompt_len=16, n_items=2)
+    else:
+        tasks = default_tasks(DATA_CFG, n_seqs=6, seq_len=96,
+                              prompt_len=16, n_items=6)
+    # weight-budget row only on the full sweep: bitwidth_search re-quantizes
+    # the whole tree, which is the slow part
+    grid = default_grid(full=not smoke, budget_mb=3.0)
+    arts = run_scorecard(params, cfg, tasks, SCFG, grid=grid)
+    rows = [dict(point=a["point"],
+                 nll=round(a["quality"]["nll"], 4),
+                 ppl=round(a["quality"]["ppl"], 3),
+                 task_accuracy=round(a["quality"]["task_accuracy"], 3),
+                 tokens_per_s=round(a["perf"]["tokens_per_s"], 1),
+                 score_tokens=a["perf"]["score_tokens"],
+                 effective_cache_bytes=a["memory"]["effective_cache_bytes"],
+                 model_mb=round(a["memory"]["model_mb"], 2))
+            for a in arts]
+    emit(rows, "experiments/bench/scorecard.csv")
+    return rows

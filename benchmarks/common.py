@@ -22,7 +22,7 @@ import numpy as np
 from repro.checkpoint import CheckpointManager
 from repro.data import DataConfig, SyntheticLM
 from repro.launch.steps import make_train_step
-from repro.models import ModelConfig, forward_train, init_params, lm_loss
+from repro.models import ModelConfig, forward_train, init_params
 from repro.models.config import LayerSpec
 from repro.optim import AdamWConfig, init_state
 
@@ -76,15 +76,17 @@ def get_trained_model(steps: int = 300) -> Tuple[dict, ModelConfig]:
 
 
 def eval_loss(params, cfg: ModelConfig, n_batches: int = 4) -> float:
-    """Held-out mean NLL (ppl = exp(nll))."""
+    """Held-out mean NLL (ppl = exp(nll)), on the shared eval scoring core
+    (repro.eval.scoring) so benches and the serving scorecard agree on the
+    definition of NLL."""
+    from repro.eval.scoring import batch_nll
     ds = SyntheticLM(DATA_CFG)
     losses = []
     fwd = jax.jit(lambda p, t: forward_train(p, t, cfg)[0])
     for i in range(n_batches):
         batch = ds.batch_at(100_000 + i)               # unseen offsets
         logits = fwd(params, jnp.asarray(batch["tokens"]))
-        nll = lm_loss(logits, jnp.asarray(batch["labels"]), z_coef=0.0)
-        losses.append(float(nll))
+        losses.append(batch_nll(logits, batch["labels"]))
     return float(np.mean(losses))
 
 

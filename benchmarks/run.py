@@ -22,6 +22,7 @@ BENCHES = [
     ("scaling_fig8", "benchmarks.bench_scaling"),
     ("kernels", "benchmarks.bench_kernels"),
     ("serving_paged", "benchmarks.bench_serving"),
+    ("scorecard", "benchmarks.bench_scorecard"),
 ]
 
 
@@ -113,6 +114,45 @@ def sharded_parity_gate(path: str = "experiments/bench/serving_sharded.csv"):
     return None
 
 
+def scorecard_gate(out_dir: str = "experiments/scorecard"):
+    """Return an error string if the serving-path quality scorecard broke.
+
+    The scorecard's contract: quantized serving quality is *measured*, not
+    assumed.  Red when (a) the artifact set is missing, schema-invalid, or
+    thinner than the acceptance grid (>= 2 methods x {int8, int4} x ladder
+    on/off plus the dense reference), (b) the symmetric-int8 serving NLL
+    drifts from the fp32 dense reference beyond 0.05 nats — observed drift
+    on the bench checkpoint is ~3e-4, so a trip means real quality loss in
+    the W8A8 serving path, not noise — or (c) turning the bit ladder ON
+    costs more than 0.05 nats over the same config with the ladder off
+    (the demote/promote requant is supposed to be near-free for quality).
+    """
+    from repro.eval.scorecard import load_artifacts
+    arts, errors = load_artifacts(out_dir)
+    if errors:
+        return "scorecard gate: invalid artifacts: " + "; ".join(errors[:4])
+    required = {"fp32_dense"}
+    for m in ("symmetric", "zeropoint"):
+        required |= {f"{m}-int8", f"{m}-int8-ladder", f"{m}-int4"}
+    missing = sorted(required - set(arts))
+    if missing:
+        return f"scorecard gate: missing artifacts {missing} ({out_dir})"
+    fp = arts["fp32_dense"]["quality"]["nll"]
+    int8 = arts["symmetric-int8"]["quality"]["nll"]
+    if abs(int8 - fp) > 0.05:
+        return (f"scorecard gate: symmetric-int8 serving NLL {int8:.4f} "
+                f"deviates from fp32 dense {fp:.4f} by {abs(int8 - fp):.4f} "
+                f"> 0.05 nats ({out_dir})")
+    for m in ("symmetric", "zeropoint"):
+        off = arts[f"{m}-int8"]["quality"]["nll"]
+        on = arts[f"{m}-int8-ladder"]["quality"]["nll"]
+        if on - off > 0.05:
+            return (f"scorecard gate: {m} ladder-on NLL {on:.4f} regresses "
+                    f"{on - off:.4f} > 0.05 nats past ladder-off {off:.4f} "
+                    f"({out_dir})")
+    return None
+
+
 def pallas_interpret_gate():
     """Smoke-mode gate: re-run the paged kernel parity subset with
     REPRO_FORCE_PALLAS=1 (pallas kernels in interpret mode on a CPU host),
@@ -183,6 +223,15 @@ def main() -> None:
         # mesh shape whose greedy tokens diverge from the unsharded engine
         # turns the bench run red
         err = sharded_parity_gate()
+        if err:
+            failures += 1
+            print(err, file=sys.stderr)
+    if "scorecard" in ran:
+        # quality regression gate on the freshly written scorecard artifacts:
+        # int8 serving NLL must track the fp dense reference and the bit
+        # ladder must stay quality-neutral (runs under --smoke too — the
+        # smoke sweep writes the full acceptance grid)
+        err = scorecard_gate()
         if err:
             failures += 1
             print(err, file=sys.stderr)

@@ -50,7 +50,13 @@ def main():
     ap.add_argument("--draft-bits", type=int, default=0,
                     help="weight-only draft bitwidth (0 = share the target's "
                          "quantized weights — INT8 self-draft)")
+    ap.add_argument("--score", action="store_true",
+                    help="after serving, teacher-force held-out perplexity "
+                         "+ multiple-choice tasks through the same engine "
+                         "(scoring mode) and print the quality scorecard")
     args = ap.parse_args()
+    if args.dense and args.score:
+        ap.error("--score needs the paged engine (drop --dense)")
     if args.dense and args.replicas > 1:
         ap.error("--dense and --replicas are mutually exclusive (the dense "
                  "slot-ring engine has no replica frontend)")
@@ -159,6 +165,33 @@ def main():
               f"{m['spec_draft_nbytes']/2**20:.2f} MiB")
     for r in done[:3]:
         print(f"      req {r.uid}: prompt {len(r.prompt)} toks -> {r.generated[:8]}...")
+
+    if args.score:
+        # teacher-forced quality scorecard through the engine that just
+        # served: same pools, same codecs, warm prefix cache and all
+        from repro.eval.tasks import (DenseScorer, Evaluator, ServingScorer,
+                                      default_tasks)
+        print("[score] teacher-forced eval through the serving engine ...")
+        tasks = default_tasks(dcfg, n_seqs=4, seq_len=80, prompt_len=16,
+                              n_items=3)
+        served = Evaluator(tasks).evaluate(ServingScorer(eng))
+        dense = Evaluator(tasks).evaluate(DenseScorer(params, cfg))
+        for name, m in served.items():
+            ref = dense[name]
+            if "nll" in m:
+                print(f"      {name}: nll {m['nll']:.4f} "
+                      f"(fp dense {ref['nll']:.4f}, "
+                      f"delta {m['nll'] - ref['nll']:+.4f}) "
+                      f"ppl {m['ppl']:.2f} over {m['n_tokens']} tokens")
+            else:
+                print(f"      {name}: accuracy {m['accuracy']:.2f} "
+                      f"(fp dense {ref['accuracy']:.2f}, "
+                      f"chance {m['chance']:.2f}) over {m['n_items']} items")
+        sm = eng.metrics()
+        print(f"      scored {sm['score_tokens']} tokens / "
+              f"{sm['score_requests']} requests at "
+              f"{sm['score_tokens_per_s']:.0f} tok/s "
+              f"(avg latency {sm['score_latency_avg_s']*1e3:.0f} ms)")
 
 
 if __name__ == "__main__":

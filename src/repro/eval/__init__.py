@@ -1,0 +1,26 @@
+"""Serving-path evaluation: shared NLL core, tasks, and the scorecard.
+
+Layering (no cycles): ``scoring`` depends only on the models package —
+the scheduler lazily imports ``gold_logprobs`` from it; ``datasets`` /
+``tasks`` sit above; ``scorecard`` at the top pulls in the serving engines.
+"""
+from repro.eval.datasets import (ChoiceItem, MultipleChoiceDataset,
+                                 PerplexityDataset, iter_score_pairs)
+from repro.eval.scorecard import (SCHEMA_VERSION, ScorecardConfig,
+                                  default_grid, load_artifacts, run_point,
+                                  run_scorecard, validate_artifact)
+from repro.eval.scoring import (batch_nll, dense_score,
+                                dense_sequence_logprobs, gold_logprobs,
+                                mean_nll, perplexity)
+from repro.eval.tasks import (DenseScorer, Evaluator, MultipleChoiceTask,
+                              PerplexityTask, ServingScorer, default_tasks)
+
+__all__ = [
+    "SCHEMA_VERSION", "ScorecardConfig", "ChoiceItem", "DenseScorer",
+    "Evaluator", "MultipleChoiceDataset", "MultipleChoiceTask",
+    "PerplexityDataset", "PerplexityTask", "ServingScorer", "batch_nll",
+    "default_grid", "default_tasks", "dense_score",
+    "dense_sequence_logprobs", "gold_logprobs", "iter_score_pairs",
+    "load_artifacts", "mean_nll", "perplexity", "run_point",
+    "run_scorecard", "validate_artifact",
+]

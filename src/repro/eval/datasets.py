@@ -1,0 +1,123 @@
+"""Evaluation datasets: deterministic corpora the scorecard scores on.
+
+Offline container — no WikiText download — so the perplexity corpus is the
+same deterministic synthetic Markov stream the bench model *trains* on
+(held-out seed range), optionally replaced by a local text file tokenized
+at byte level.  The reproduction target (DESIGN.md §10) is method ORDERING
+and relative degradation, which survives the corpus swap.
+
+Every dataset yields ``(prompt, continuation)`` int32 pairs: the engine
+teacher-forces ``continuation`` given ``prompt`` and returns its per-token
+logprobs.  The multiple-choice task wraps one item as several candidate
+continuations of a shared prompt — prefix caching turns the shared prompt
+into one prefill plus N cheap scored tails.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterator, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.data import DataConfig, SyntheticLM
+
+Pair = Tuple[np.ndarray, np.ndarray]
+
+# held-out seed base for eval sequences: far from training batch_at() steps
+# (which use step indices < ~100k) and from benchmarks.common's held-out
+# offsets, so the scorecard never scores sequences the model memorized
+_EVAL_SEED = 7_000_000
+
+
+@dataclasses.dataclass(frozen=True)
+class PerplexityDataset:
+    """Wikitext-style stream: ``n_seqs`` held-out sequences, each split into
+    a ``prompt_len`` prompt and a scored continuation."""
+    data_cfg: DataConfig
+    n_seqs: int = 8
+    seq_len: int = 96
+    prompt_len: int = 16
+    text_path: Optional[str] = None      # local file overrides the synthetic
+                                         # corpus (byte tokens mod vocab)
+
+    def pairs(self) -> List[Pair]:
+        toks = self._tokens()
+        out = []
+        for row in toks:
+            out.append((row[:self.prompt_len].astype(np.int32),
+                        row[self.prompt_len:].astype(np.int32)))
+        return out
+
+    def _tokens(self) -> np.ndarray:
+        if self.text_path is not None:
+            return self._from_text()
+        ds = SyntheticLM(self.data_cfg)
+        # sample_tokens returns seq+1 tokens; drop the last so every row is
+        # exactly seq_len
+        return ds.sample_tokens(self.n_seqs, self.seq_len,
+                                _EVAL_SEED)[:, :-1]
+
+    def _from_text(self) -> np.ndarray:
+        with open(self.text_path, "rb") as f:
+            raw = np.frombuffer(f.read(), np.uint8)
+        v = self.data_cfg.vocab_size
+        need = self.n_seqs * self.seq_len
+        if raw.size < need:
+            reps = -(-need // max(raw.size, 1))
+            raw = np.tile(raw, reps)
+        return (raw[:need].astype(np.int64) % v).reshape(self.n_seqs,
+                                                         self.seq_len)
+
+
+@dataclasses.dataclass(frozen=True)
+class ChoiceItem:
+    prompt: np.ndarray                   # shared context, int32
+    choices: Tuple[np.ndarray, ...]      # candidate continuations
+    answer: int                          # index of the true continuation
+
+
+@dataclasses.dataclass(frozen=True)
+class MultipleChoiceDataset:
+    """Tiny-MMLU-shaped task over the synthetic Markov process: the true
+    choice is the continuation the generating chain actually emitted; the
+    distractors are continuations lifted from *other* contexts (plausible
+    token stats, wrong conditional).  A model trained on the chain assigns
+    the true tail a higher logprob, so accuracy is a real quality signal —
+    and one that degrades, rather than vanishes, under quantization."""
+    data_cfg: DataConfig
+    n_items: int = 8
+    n_choices: int = 4
+    prompt_len: int = 24
+    choice_len: int = 8
+
+    def items(self) -> List[ChoiceItem]:
+        ds = SyntheticLM(self.data_cfg)
+        span = self.prompt_len + self.choice_len
+        # one extra row per item donates its tail as distractor material
+        rows = ds.sample_tokens(self.n_items * self.n_choices, span,
+                                _EVAL_SEED + 1)[:, :-1].astype(np.int32)
+        rng = np.random.default_rng(self.data_cfg.seed + 13)
+        out = []
+        for i in range(self.n_items):
+            mine = rows[i * self.n_choices]
+            prompt = mine[:self.prompt_len]
+            true = mine[self.prompt_len:span]
+            wrong = [rows[i * self.n_choices + j][self.prompt_len:span]
+                     for j in range(1, self.n_choices)]
+            answer = int(rng.integers(self.n_choices))
+            choices = wrong[:answer] + [true] + wrong[answer:]
+            out.append(ChoiceItem(prompt=prompt,
+                                  choices=tuple(choices), answer=answer))
+        return out
+
+
+def iter_score_pairs(ds) -> Iterator[Pair]:
+    """Uniform iteration: a dataset is anything with ``pairs()`` (scored
+    sequentially) or ``items()`` (each choice scored against the shared
+    prompt)."""
+    if hasattr(ds, "pairs"):
+        yield from ds.pairs()
+        return
+    for item in ds.items():
+        for ch in item.choices:
+            yield item.prompt, ch

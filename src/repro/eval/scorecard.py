@@ -1,0 +1,219 @@
+"""Scorecard runner: the quality/perf frontier, one JSON artifact per config.
+
+Sweeps quantization method × cache codec {int8, int4} × pressure bit ladder
+on/off × spec-decode on/off × weight-bit budget, scoring every config on the
+SAME held-out tasks through the SAME serving path users are served from
+(teacher-forced ``Request(score_tokens=...)``), plus one dense fp reference
+row.  Each config writes ``experiments/scorecard/<point>.json`` recording
+NLL/perplexity, choice accuracy, scored tokens/s and effective cache bytes
+— diffable across PRs, and the substrate the ``benchmarks/run.py``
+``scorecard_gate`` judges.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import math
+import os
+import time
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+from repro.eval.tasks import DenseScorer, Evaluator, ServingScorer
+
+SCHEMA_VERSION = 1
+DEFAULT_DIR = "experiments/scorecard"
+
+# artifact schema: top-level sections and the keys the gate depends on
+_REQUIRED = {
+    "quality": ("nll", "ppl", "task_accuracy"),
+    "perf": ("tokens_per_s", "score_tokens", "wall_s"),
+    "memory": ("effective_cache_bytes", "cache_nbytes", "model_mb"),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class ScorecardConfig:
+    """One scorecard point.  ``method='fp32_dense'`` is the reference row:
+    unquantized weights through the dense forward (no serving engine, no KV
+    quantization) — everything else serves through the paged engine."""
+    method: str = "symmetric"
+    codec: str = "int8"
+    ladder: bool = False
+    weight_budget_mb: float = 0.0
+    spec_gamma: int = 0
+
+    @property
+    def dense(self) -> bool:
+        return self.method == "fp32_dense"
+
+    @property
+    def point(self) -> str:
+        if self.dense:
+            return "fp32_dense"
+        parts = [self.method, self.codec]
+        if self.ladder:
+            parts.append("ladder")
+        if self.spec_gamma:
+            parts.append(f"spec{self.spec_gamma}")
+        if self.weight_budget_mb:
+            parts.append(f"wb{self.weight_budget_mb:g}mb")
+        return "-".join(parts)
+
+
+def default_grid(methods: Sequence[str] = ("symmetric", "zeropoint"),
+                 full: bool = False,
+                 budget_mb: float = 6.0) -> List[ScorecardConfig]:
+    """The acceptance grid: >= 2 methods x {int8, int4} x ladder on/off
+    (the ladder demotes int8 blocks, so its 'on' axis only exists for
+    codec='int8'), plus the dense fp reference and a spec-decode-on row."""
+    pts = [ScorecardConfig(method="fp32_dense")]
+    for m in methods:
+        pts += [ScorecardConfig(method=m, codec="int8"),
+                ScorecardConfig(method=m, codec="int8", ladder=True),
+                ScorecardConfig(method=m, codec="int4")]
+    pts.append(ScorecardConfig(method=methods[0], spec_gamma=4))
+    if full:
+        pts.append(ScorecardConfig(method=methods[0],
+                                   weight_budget_mb=budget_mb))
+    return pts
+
+
+def _quantized(params, method: str, cache: Dict[str, Any]):
+    """Method-registry weight quantization, memoized per method (several
+    grid points share one quantized tree)."""
+    if method == "fp":
+        return params
+    if method not in cache:
+        from repro.core import QuantPolicy, quantize_tree
+        cache[method] = quantize_tree(
+            params, QuantPolicy(method=method, min_size=4096))
+    return cache[method]
+
+
+def _build_engine(qparams, cfg, sc: ScorecardConfig, scfg_base):
+    from repro.serving.engine import PagedServeEngine
+    spec = None
+    if sc.spec_gamma:
+        from repro.serving.spec_decode import SpecConfig
+        spec = SpecConfig(gamma=sc.spec_gamma, draft_bits=0)
+    scfg = dataclasses.replace(
+        scfg_base, codec=sc.codec, ladder=sc.ladder,
+        weight_budget_mb=sc.weight_budget_mb,
+        weight_bits_method=(sc.method if sc.method != "fp" else "symmetric"),
+        spec=spec)
+    return PagedServeEngine(qparams, cfg, scfg)
+
+
+def run_point(params, cfg, sc: ScorecardConfig, tasks, scfg_base, *,
+              qcache: Optional[Dict[str, Any]] = None) -> Dict[str, Any]:
+    """Score one config; returns the artifact dict (not yet written)."""
+    from repro.core import tree_nbytes
+    evaluator = Evaluator(tasks)
+    t0 = time.perf_counter()
+    if sc.dense:
+        scorer = DenseScorer(params, cfg)
+        results = evaluator.evaluate(scorer)
+        wall = time.perf_counter() - t0
+        n_tok = sum(r.get("n_tokens", 0) for r in results.values())
+        perf = {"tokens_per_s": n_tok / max(wall, 1e-9),
+                "score_tokens": n_tok, "score_requests": 0,
+                "score_latency_avg_s": 0.0, "wall_s": wall}
+        memory = {"effective_cache_bytes": 0, "cache_nbytes": 0,
+                  "weight_bits_avg": 0.0,
+                  "model_mb": tree_nbytes(params) / 2 ** 20}
+    else:
+        qparams = _quantized(params, sc.method,
+                             qcache if qcache is not None else {})
+        engine = _build_engine(qparams, cfg, sc, scfg_base)
+        results = evaluator.evaluate(ServingScorer(engine))
+        wall = time.perf_counter() - t0
+        m = engine.metrics()
+        perf = {"tokens_per_s": m["score_tokens_per_s"],
+                "score_tokens": m["score_tokens"],
+                "score_requests": m["score_requests"],
+                "score_latency_avg_s": m["score_latency_avg_s"],
+                "wall_s": wall}
+        memory = {"effective_cache_bytes": m["effective_cache_bytes"],
+                  "cache_nbytes": m["cache_nbytes"],
+                  "weight_bits_avg": m["weight_bits_avg"],
+                  "model_mb": tree_nbytes(qparams) / 2 ** 20}
+    ppl_task = next(r for r in results.values() if "nll" in r)
+    acc_task = next(r for r in results.values() if "accuracy" in r)
+    return {
+        "schema_version": SCHEMA_VERSION,
+        "point": sc.point,
+        "config": dataclasses.asdict(sc),
+        "quality": {"nll": ppl_task["nll"], "ppl": ppl_task["ppl"],
+                    "task_accuracy": acc_task["accuracy"],
+                    "tasks": results},
+        "perf": perf,
+        "memory": memory,
+    }
+
+
+def run_scorecard(params, cfg, tasks, scfg_base, *,
+                  grid: Optional[Sequence[ScorecardConfig]] = None,
+                  out_dir: str = DEFAULT_DIR,
+                  log=print) -> List[Dict[str, Any]]:
+    """Run every grid point and write one artifact per point under
+    ``out_dir``; returns the artifact list in grid order."""
+    grid = list(grid) if grid is not None else default_grid()
+    os.makedirs(out_dir, exist_ok=True)
+    qcache: Dict[str, Any] = {}
+    arts = []
+    for sc in grid:
+        art = run_point(params, cfg, sc, tasks, scfg_base, qcache=qcache)
+        path = os.path.join(out_dir, f"{sc.point}.json")
+        with open(path, "w") as f:
+            json.dump(art, f, indent=1)
+        log(f"  [scorecard] {sc.point}: nll {art['quality']['nll']:.4f} "
+            f"acc {art['quality']['task_accuracy']:.2f} "
+            f"({art['perf']['tokens_per_s']:.0f} scored tok/s) -> {path}")
+        arts.append(art)
+    return arts
+
+
+def validate_artifact(art: Any) -> Optional[str]:
+    """Schema check for one loaded artifact; returns an error string or
+    None.  The gate runs this on every file in experiments/scorecard/."""
+    if not isinstance(art, dict):
+        return "artifact is not a JSON object"
+    if art.get("schema_version") != SCHEMA_VERSION:
+        return (f"schema_version {art.get('schema_version')!r} != "
+                f"{SCHEMA_VERSION}")
+    if not isinstance(art.get("point"), str) or not art["point"]:
+        return "missing point name"
+    for section, keys in _REQUIRED.items():
+        block = art.get(section)
+        if not isinstance(block, dict):
+            return f"missing section {section!r}"
+        for k in keys:
+            v = block.get(k)
+            if not isinstance(v, (int, float)) or not math.isfinite(v):
+                return f"{section}.{k} missing or non-finite ({v!r})"
+    return None
+
+
+def load_artifacts(out_dir: str = DEFAULT_DIR) -> Tuple[Dict[str, Any],
+                                                        List[str]]:
+    """Load + validate every artifact; returns ({point: artifact}, errors)."""
+    arts: Dict[str, Any] = {}
+    errors: List[str] = []
+    if not os.path.isdir(out_dir):
+        return arts, [f"scorecard dir {out_dir} does not exist"]
+    for name in sorted(os.listdir(out_dir)):
+        if not name.endswith(".json"):
+            continue
+        path = os.path.join(out_dir, name)
+        try:
+            with open(path) as f:
+                art = json.load(f)
+        except (OSError, ValueError) as e:
+            errors.append(f"{path}: unreadable ({e!r})")
+            continue
+        err = validate_artifact(art)
+        if err:
+            errors.append(f"{path}: {err}")
+            continue
+        arts[art["point"]] = art
+    return arts, errors

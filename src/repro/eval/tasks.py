@@ -1,0 +1,134 @@
+"""Task / Evaluator layer: quality metrics over a pluggable scorer.
+
+Three small contracts (docs/EVAL.md):
+
+  * **Dataset** — owns the data: ``pairs()`` (perplexity streams) or
+    ``items()`` (multiple choice), see ``eval/datasets.py``.
+  * **Scorer** — owns the model path: ``score_many([(prompt, cont), ...])``
+    returns per-pair continuation logprob arrays.  ``ServingScorer`` pushes
+    every pair through a paged/replicated engine's teacher-forced scoring
+    mode (the REAL runtime: INT8/INT4 pool writes, prefix hits, codec
+    dequant, frozen K scales); ``DenseScorer`` is the fp forward reference.
+  * **Task** — owns the metric: ``run(scorer)`` -> a flat dict of floats.
+
+A task never touches an engine directly and a scorer never knows what
+metric it feeds, so any task runs on any config the scorecard sweeps.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Sequence, Tuple
+
+import numpy as np
+
+from repro.eval.datasets import (MultipleChoiceDataset, Pair,
+                                 PerplexityDataset)
+from repro.eval.scoring import dense_score, mean_nll, perplexity
+
+
+class ServingScorer:
+    """Teacher-forced scoring through a serving engine (paged or
+    replicated): one ``Request(score_tokens=...)`` per pair, batched by the
+    engine's own continuous-batching loop."""
+
+    def __init__(self, engine, max_steps: int = 50_000):
+        self.engine = engine
+        self.max_steps = max_steps
+        self._uid = 0
+
+    def score_many(self, pairs: Sequence[Pair]) -> List[np.ndarray]:
+        from repro.serving.engine import Request
+        reqs = []
+        for prompt, cont in pairs:
+            self._uid += 1
+            req = Request(uid=("score", self._uid),
+                          prompt=np.asarray(prompt, np.int32),
+                          score_tokens=np.asarray(cont, np.int32))
+            self.engine.add_request(req)
+            reqs.append(req)
+        self.engine.run(self.max_steps)
+        out = []
+        for req in reqs:
+            if req.score_logprobs is None:
+                raise RuntimeError(
+                    f"request {req.uid} was not scored within "
+                    f"{self.max_steps} engine steps")
+            out.append(np.asarray(req.score_logprobs, np.float64))
+        return out
+
+
+class DenseScorer:
+    """Reference scorer: one dense ``forward_train`` pass per pair (no KV
+    quantization anywhere) — the fp baseline every scorecard row is
+    compared against."""
+
+    def __init__(self, params, cfg):
+        self.params = params
+        self.cfg = cfg
+
+    def score_many(self, pairs: Sequence[Pair]) -> List[np.ndarray]:
+        return [dense_score(self.params, self.cfg, p, c) for p, c in pairs]
+
+
+@dataclasses.dataclass(frozen=True)
+class PerplexityTask:
+    """Mean NLL / perplexity over a held-out continuation stream."""
+    dataset: PerplexityDataset
+    name: str = "synthetic_ppl"
+
+    def run(self, scorer) -> Dict[str, float]:
+        pairs = self.dataset.pairs()
+        lps = scorer.score_many(pairs)
+        flat = np.concatenate(lps) if lps else np.zeros((0,))
+        nll = mean_nll(flat)
+        return {"nll": nll, "ppl": perplexity(nll),
+                "n_tokens": int(flat.size), "n_seqs": len(pairs)}
+
+
+@dataclasses.dataclass(frozen=True)
+class MultipleChoiceTask:
+    """Choice accuracy: every candidate continuation is scored against the
+    shared prompt and the highest mean token logprob wins (length-normalized
+    so a short distractor cannot win on token count alone)."""
+    dataset: MultipleChoiceDataset
+    name: str = "synthetic_choice"
+
+    def run(self, scorer) -> Dict[str, float]:
+        items = self.dataset.items()
+        pairs = [(it.prompt, ch) for it in items for ch in it.choices]
+        lps = scorer.score_many(pairs)
+        correct, k = 0, 0
+        for it in items:
+            scores = [float(np.mean(lps[k + j]))
+                      for j in range(len(it.choices))]
+            k += len(it.choices)
+            if int(np.argmax(scores)) == it.answer:
+                correct += 1
+        n = max(len(items), 1)
+        return {"accuracy": correct / n, "n_items": len(items),
+                "chance": 1.0 / max(len(items[0].choices), 1) if items
+                else 0.0}
+
+
+class Evaluator:
+    """Run a task list against one scorer; returns {task name: metrics}."""
+
+    def __init__(self, tasks: Sequence[Any]):
+        self.tasks = list(tasks)
+
+    def evaluate(self, scorer) -> Dict[str, Dict[str, float]]:
+        return {t.name: t.run(scorer) for t in self.tasks}
+
+
+def default_tasks(data_cfg, *, n_seqs: int = 6, seq_len: int = 80,
+                  prompt_len: int = 16, n_items: int = 6,
+                  text_path=None) -> List[Any]:
+    """The scorecard's standard task pair, sized by the caller (smoke runs
+    shrink n_seqs/n_items, full runs grow them)."""
+    return [
+        PerplexityTask(PerplexityDataset(
+            data_cfg, n_seqs=n_seqs, seq_len=seq_len, prompt_len=prompt_len,
+            text_path=text_path)),
+        MultipleChoiceTask(MultipleChoiceDataset(
+            data_cfg, n_items=n_items, prompt_len=prompt_len)),
+    ]

@@ -479,7 +479,8 @@ def _block_prefill_chunk(p_blk, h, pool_blk, spool_blk, cfg: ModelConfig, *,
 
 def forward_prefill_chunk(params, tokens, pool, cfg: ModelConfig, *,
                           slot, block_row, ctx, chunk_len, block_size: int,
-                          is_first: bool, state_pool=None, state_slot=0):
+                          is_first: bool, state_pool=None, state_slot=0,
+                          chunk_logits: bool = False):
     """One prefill chunk of a single request against the block pool.
 
     tokens: (1, C) right-padded (or (1, K, C) MusicGen); positions are
@@ -487,6 +488,14 @@ def forward_prefill_chunk(params, tokens, pool, cfg: ModelConfig, *,
     ``state_slot`` carry SSM layer state across chunks for hybrid patterns
     (``{}`` / ignored for pure-attention configs).  Returns
     (last-valid-token logits (1, V), new pool, new state pool).
+
+    ``chunk_logits`` (static) returns the *full* per-position logits
+    ``(1, C, V)`` instead of the last row — the serving-path scoring mode
+    (teacher-forced NLL through the paged engine) needs every position's
+    distribution, not just the sampling row.  Rows past ``chunk_len`` are
+    pad garbage the caller must slice off; the valid rows are bitwise
+    identical to the default path's last-row logits (same ``h``, same
+    head).
     """
     spool = {} if state_pool is None else state_pool
     h, _ = embed_tokens(params, tokens, cfg)
@@ -508,6 +517,8 @@ def forward_prefill_chunk(params, tokens, pool, cfg: ModelConfig, *,
     h, (new_pool, new_spool) = jax.lax.scan(body, h,
                                             (params["layers"], pool, spool))
     h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+    if chunk_logits:
+        return logits_head(params, h, cfg), new_pool, new_spool
     last = jax.lax.dynamic_slice_in_dim(h, chunk_len - 1, 1, axis=1)
     logits = logits_head(params, last, cfg)[:, 0]
     return logits, new_pool, new_spool

@@ -81,8 +81,18 @@ class Request:
     priority: int = 0                    # higher admitted first; preemption
                                          # evicts lowest priority (paged only)
     on_token: Optional[Callable] = None  # streaming callback: (req, token)
+    score_tokens: Optional[np.ndarray] = None
+                                         # teacher-forced scoring mode (paged
+                                         # engines only): prefill prompt ++
+                                         # score_tokens through the real
+                                         # serving path and return each score
+                                         # token's logprob instead of decoding
     # filled by the engine:
     generated: Optional[List[int]] = None
+    score_logprobs: Optional[List[float]] = None
+                                         # log P(score_tokens[i] | prefix),
+                                         # one float per score token
+    score_s: float = 0.0                 # add_request -> fully-scored latency
     prefill_s: float = 0.0
     ttft_s: float = 0.0                  # first token latency from add_request
     t_add: float = 0.0
@@ -167,6 +177,11 @@ class ServeEngine:
 
     # -- public API -----------------------------------------------------------
     def add_request(self, req: Request):
+        if getattr(req, "score_tokens", None) is not None:
+            raise NotImplementedError(
+                "teacher-forced scoring (Request.score_tokens) runs through "
+                "the paged serving path; use PagedServeEngine or "
+                "ReplicatedServeEngine")
         s = int(np.asarray(req.prompt).shape[-1])
         # the cache must hold the prompt plus every appended decode token
         # (the final sampled token is never appended): s + max_new - 1 slots.
@@ -300,6 +315,12 @@ class PagedServeEngine:
     step with greedy output token-for-token identical to plain decode.
     ``metrics()['spec_accept_rate']`` / ``['spec_tokens_per_step']`` report
     the win; ``draft_nbytes()`` the memory bill.
+
+    A :class:`Request` with ``score_tokens`` set runs in **scoring mode**:
+    the continuation is teacher-forced through chunked paged prefill and the
+    request finishes with ``score_logprobs`` (one ``log P(token | prefix)``
+    per score token) instead of decoding — the evaluation subsystem
+    (``repro.eval``) measures quantization quality on exactly this path.
     """
 
     def __init__(self, params, cfg: ModelConfig, scfg=None, *, mesh=None,

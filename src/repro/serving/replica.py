@@ -325,6 +325,12 @@ class ReplicatedServeEngine:
         accepted = sum(r.stats["spec_accepted"] for r in self.replicas)
         emitted = sum(r.stats["spec_emitted"] for r in self.replicas)
         lane_rounds = sum(r.stats["spec_lane_rounds"] for r in self.replicas)
+        # teacher-forced scoring aggregates follow the same rule: counters
+        # and latencies are summed, the per-request mean is a ratio of the
+        # sums — a replica that scored nothing must not drag the average
+        score_req = sum(r.stats["score_requests"] for r in self.replicas)
+        score_tok = sum(r.stats["score_tokens"] for r in self.replicas)
+        score_lat = sum(m["score_latency_s"] for m in per)
         return {
             "replicas": self.rcfg.n_replicas,
             "requests_finished": len(done),
@@ -351,6 +357,11 @@ class ReplicatedServeEngine:
             "effective_cache_bytes": sum(m["effective_cache_bytes"]
                                          for m in per),
             "state_prefix_hits": sum(m["state_prefix_hits"] for m in per),
+            "score_requests": score_req,
+            "score_tokens": score_tok,
+            "score_latency_s": score_lat,
+            "score_latency_avg_s": score_lat / max(score_req, 1),
+            "score_tokens_per_s": score_tok / wall,
             "weight_bits_min": per[0]["weight_bits_min"],
             "weight_bits_max": per[0]["weight_bits_max"],
             "weight_bits_avg": per[0]["weight_bits_avg"],

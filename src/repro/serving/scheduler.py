@@ -220,13 +220,25 @@ class _Run:
     __slots__ = ("req", "slot", "ctx", "target", "pending", "resume_pending",
                  "state", "order", "priority", "t_add", "chain",
                  "published_upto", "scale_tag", "snapshot", "state_slot",
-                 "step_enqueued", "step_added")
+                 "step_enqueued", "step_added", "score_from", "score_lps")
 
     def __init__(self, req, order: int):
         self.req = req
         self.slot = -1
         self.ctx = 0                       # tokens currently in the cache
         self.target = np.asarray(req.prompt)   # tokens to prefill
+        st = getattr(req, "score_tokens", None)
+        if st is not None:
+            # scoring mode: teacher-force prompt ++ score_tokens through
+            # prefill; every chunk's full logits score the target tokens it
+            # predicts and the request finishes without sampling anything
+            self.target = np.concatenate(
+                [self.target, np.asarray(st, self.target.dtype)], axis=-1)
+            self.score_from = int(np.asarray(req.prompt).shape[-1])
+            self.score_lps: Optional[Dict[int, float]] = {}
+        else:
+            self.score_from = -1           # not scoring
+            self.score_lps = None
         self.pending = None                # sampled token awaiting decode
         self.resume_pending = None         # pending token across a preemption
         self.state = "prefill"
@@ -246,12 +258,15 @@ class _Run:
 def _step_impl(params, pool, spool, dec_tokens, dec_bt, dec_lens, dec_sslots,
                pf_tokens, pf_slot, pf_row, pf_ctx, pf_len, pf_sslot, *,
                cfg: ModelConfig, block_size: int,
-               do_prefill: bool, do_decode: bool, pf_first: bool):
+               do_prefill: bool, do_decode: bool, pf_first: bool,
+               pf_score: bool = False):
     """One engine iteration: prefill chunk + decode batch, fused in one jit.
 
     The prefill request and the decode slots are disjoint, so ordering inside
     the step is arbitrary; both write the (donated) KV block pool and — for
-    hybrid patterns — the (donated) SSM state slot pool.
+    hybrid patterns — the (donated) SSM state slot pool.  ``pf_score``
+    (static, scoring mode) keeps every chunk position's logits instead of
+    just the last row, so the consumer can read teacher-forced logprobs.
     """
     pf_logits: Any = ()
     dec_logits: Any = ()
@@ -259,7 +274,8 @@ def _step_impl(params, pool, spool, dec_tokens, dec_bt, dec_lens, dec_sslots,
         pf_logits, pool, spool = forward_prefill_chunk(
             params, pf_tokens, pool, cfg, slot=pf_slot, block_row=pf_row,
             ctx=pf_ctx, chunk_len=pf_len, block_size=block_size,
-            is_first=pf_first, state_pool=spool, state_slot=pf_sslot)
+            is_first=pf_first, state_pool=spool, state_slot=pf_sslot,
+            chunk_logits=pf_score)
     if do_decode:
         dec_logits, pool, spool = forward_decode_paged(
             params, dec_tokens, pool, dec_bt, dec_lens, cfg,
@@ -270,7 +286,8 @@ def _step_impl(params, pool, spool, dec_tokens, dec_bt, dec_lens, dec_sslots,
 def _spec_step_impl(params, pool, spool, dec_tokens, dec_bt, dec_lens,
                     dec_vlens, pf_tokens, pf_slot, pf_row, pf_ctx, pf_len,
                     pf_sslot, *, cfg: ModelConfig, block_size: int,
-                    do_prefill: bool, do_decode: bool, pf_first: bool):
+                    do_prefill: bool, do_decode: bool, pf_first: bool,
+                    pf_score: bool = False):
     """Speculative-decoding variant of the fused step: the decode half is a
     batched multi-token verify (``forward_verify_paged``) over the drafts in
     ``dec_tokens`` columns 1.., with column 0 each lane's pending token."""
@@ -280,7 +297,8 @@ def _spec_step_impl(params, pool, spool, dec_tokens, dec_bt, dec_lens,
         pf_logits, pool, spool = forward_prefill_chunk(
             params, pf_tokens, pool, cfg, slot=pf_slot, block_row=pf_row,
             ctx=pf_ctx, chunk_len=pf_len, block_size=block_size,
-            is_first=pf_first, state_pool=spool, state_slot=pf_sslot)
+            is_first=pf_first, state_pool=spool, state_slot=pf_sslot,
+            chunk_logits=pf_score)
     if do_decode:
         ver_logits, pool = forward_verify_paged(
             params, dec_tokens, pool, dec_bt, dec_lens, dec_vlens, cfg,
@@ -313,10 +331,10 @@ def _mesh_traced(impl, mesh, rules):
     if mesh is None:
         return impl
 
-    def traced(*args, do_prefill, do_decode, pf_first):
+    def traced(*args, do_prefill, do_decode, pf_first, pf_score=False):
         with shd.axis_rules(mesh, rules):
             return impl(*args, do_prefill=do_prefill, do_decode=do_decode,
-                        pf_first=pf_first)
+                        pf_first=pf_first, pf_score=pf_score)
     return traced
 
 
@@ -330,7 +348,8 @@ def _step_fn_for(cfg: ModelConfig, block_size: int, mesh=None, rules=None,
     if fn is None:
         base = partial(_step_impl, cfg=cfg, block_size=block_size)
         fn = jax.jit(_mesh_traced(base, mesh, rules),
-                     static_argnames=("do_prefill", "do_decode", "pf_first"),
+                     static_argnames=("do_prefill", "do_decode", "pf_first",
+                                      "pf_score"),
                      donate_argnums=(1, 2))
         _STEP_FN_CACHE[key] = fn
     return fn
@@ -343,7 +362,8 @@ def _spec_fn_for(cfg: ModelConfig, block_size: int, mesh=None, rules=None,
     if fn is None:
         base = partial(_spec_step_impl, cfg=cfg, block_size=block_size)
         fn = jax.jit(_mesh_traced(base, mesh, rules),
-                     static_argnames=("do_prefill", "do_decode", "pf_first"),
+                     static_argnames=("do_prefill", "do_decode", "pf_first",
+                                      "pf_score"),
                      donate_argnums=(1, 2))
         _STEP_FN_CACHE[key] = fn
     return fn
@@ -463,7 +483,9 @@ class Scheduler:
                       "spec_rounds": 0, "spec_lane_rounds": 0,
                       "spec_proposed": 0, "spec_accepted": 0,
                       "spec_emitted": 0, "snap_demotions": 0,
-                      "snap_promotions": 0, "state_prefix_hits": 0}
+                      "snap_promotions": 0, "state_prefix_hits": 0,
+                      "score_requests": 0, "score_tokens": 0}
+        self._score_lat_sum = 0.0       # summed per-request scoring latency
         self._util_sum = 0.0
         self._util_peak = 0.0
         self._cached_sum = 0.0
@@ -476,11 +498,28 @@ class Scheduler:
 
     # -- public API -----------------------------------------------------------
     def add_request(self, req) -> None:
-        s = int(np.asarray(req.prompt).shape[-1])
-        # the final sampled token is never appended to the cache, so the
-        # request occupies at most s + max_new - 1 slots (same contract as
-        # the dense engine)
-        need = s + req.max_new_tokens - 1
+        scoring = getattr(req, "score_tokens", None) is not None
+        if scoring:
+            if self.cfg.n_codebooks:
+                raise ValueError(
+                    f"request {req.uid}: teacher-forced scoring is not "
+                    f"supported for multi-codebook (MusicGen) models")
+            if int(np.asarray(req.score_tokens).shape[-1]) < 1:
+                raise ValueError(
+                    f"request {req.uid}: score_tokens is empty — nothing "
+                    f"to score")
+            if int(np.asarray(req.prompt).shape[-1]) < 1:
+                raise ValueError(
+                    f"request {req.uid}: scoring needs a non-empty prompt "
+                    f"(the first score token's logprob is conditioned on "
+                    f"at least one context token)")
+        run = _Run(req, self._order)
+        s = int(run.target.shape[-1])
+        # the final sampled token is never appended to the cache, so a
+        # generating request occupies at most s + max_new - 1 slots (same
+        # contract as the dense engine); a scoring request prefills its
+        # whole target and decodes nothing
+        need = s if scoring else s + req.max_new_tokens - 1
         cap = min(self.pcfg.tokens_per_req,
                   self.scfg.num_blocks * self.scfg.block_size)
         if need > cap:
@@ -492,7 +531,6 @@ class Scheduler:
                 f"block_size)); shorten the prompt or grow the pool")
         if req.generated is None:
             req.generated = []
-        run = _Run(req, self._order)
         run.step_enqueued = self.stats["steps"]
         run.step_added = self.stats["steps"]
         if hasattr(req, "t_add"):
@@ -545,13 +583,17 @@ class Scheduler:
         self._cache_peak = max(self._cache_peak,
                                self.alloc.num_cached + self.alloc.int4_blocks)
 
+        # scoring chunks keep every position's logits (static flag: the
+        # chunk-logits head is a different — larger — jit specialization)
+        pf_score = (pf is not None
+                    and self.slots[pf[0]].score_from >= 0)
         if dec_slots and vlens:
             drafts = self._propose_drafts(dec_slots, vlens)
             args = self._build_spec_args(dec_slots, vlens, drafts, pf)
             pf_logits, ver_logits, self.pool, self.spool = self._spec_fn(
                 self.params, self.pool, self.spool, *args["device"],
                 do_prefill=pf is not None, do_decode=True,
-                pf_first=(pf is None or pf[1] == 0))
+                pf_first=(pf is None or pf[1] == 0), pf_score=pf_score)
             return {"dec_slots": dec_slots, "vlens": vlens, "drafts": drafts,
                     "pf": pf, "pf_logits": pf_logits,
                     "ver_logits": ver_logits}
@@ -559,7 +601,7 @@ class Scheduler:
         pf_logits, dec_logits, self.pool, self.spool = self._step_fn(
             self.params, self.pool, self.spool, *args["device"],
             do_prefill=pf is not None, do_decode=bool(dec_slots),
-            pf_first=(pf is None or pf[1] == 0))
+            pf_first=(pf is None or pf[1] == 0), pf_score=pf_score)
         return {"dec_slots": dec_slots, "vlens": None, "drafts": None,
                 "pf": pf, "pf_logits": pf_logits, "dec_logits": dec_logits}
 
@@ -683,6 +725,16 @@ class Scheduler:
             "effective_cache_blocks_peak": self._logical_peak,
             "prefix_cache_blocks_peak": self._cache_peak,
             "state_prefix_hits": self.stats["state_prefix_hits"],
+            # teacher-forced scoring (eval subsystem): requests/tokens scored
+            # through the serving path, summed and mean per-request latency,
+            # and scored-token throughput (scoring emits no decode tokens, so
+            # tokens_per_s above stays a generation metric)
+            "score_requests": self.stats["score_requests"],
+            "score_tokens": self.stats["score_tokens"],
+            "score_latency_s": self._score_lat_sum,
+            "score_latency_avg_s": (self._score_lat_sum /
+                                    max(self.stats["score_requests"], 1)),
+            "score_tokens_per_s": self.stats["score_tokens"] / wall,
             # per-layer weight bitwidths from the build-time budget search
             # (zeros when weight_budget_mb == 0)
             "weight_bits_min": (min(self.weight_bits.values())
@@ -763,6 +815,16 @@ class Scheduler:
             self.slots[slot] = run
             self._match_prefix(slot, run)
 
+    def _match_cap(self, run: _Run) -> int:
+        """Most prefix tokens a cache match may cover.  Generating requests
+        stop one short of the target (the final chunk's logits seed the
+        first sampled token); scoring requests stop one short of
+        ``score_from`` — every score token's predecessor row must actually
+        be *computed* by a chunk, or its logprob would never materialize."""
+        if run.score_from >= 0:
+            return run.score_from - 1
+        return int(run.target.shape[-1]) - 1
+
     def _match_prefix(self, slot: int, run: _Run) -> None:
         """Map the longest indexed chain of ``run.target``'s full blocks into
         the block table and start ``ctx`` past them.  The match is capped one
@@ -779,7 +841,7 @@ class Scheduler:
             return
         bs = self.scfg.block_size
         run.chain = _prefix_keys(run.target, bs)
-        limit = min(len(run.chain), (int(run.target.shape[-1]) - 1) // bs,
+        limit = min(len(run.chain), self._match_cap(run) // bs,
                     self.scfg.max_blocks_per_req)
         matched: List[int] = []
         tag, meta = None, None
@@ -843,8 +905,9 @@ class Scheduler:
         j = run.ctx // bs                      # first unmatched block index
         if j >= self.scfg.max_blocks_per_req:
             return 0
-        # cap one token short of the target so the final chunk always runs
-        avail = min(int(run.target.shape[-1]) - 1 - j * bs, bs)
+        # cap one token short of the target (or of score_from, in scoring
+        # mode) so the chunks that must produce logits always run
+        avail = min(self._match_cap(run) - j * bs, bs)
         if avail <= 0:
             return 0
         parent = run.chain[j - 1] if j else b""
@@ -1394,9 +1457,14 @@ class Scheduler:
         run.ctx += c
         self.stats["prefill_tokens"] += c
         self.stats["prefill_chunks"] += 1
+        if run.score_from >= 0:
+            self._score_chunk(run, ctx, c, pf_logits)
         self._publish_full_blocks(s, run)
         if run.ctx < run.target.shape[-1]:
             return                             # more chunks to go
+        if run.score_from >= 0:
+            self._finish_score(s, run)
+            return
         run.state = "decode"
         if run.resume_pending is not None:     # recompute after preemption:
             run.pending = run.resume_pending   # re-feed the in-flight token
@@ -1408,6 +1476,40 @@ class Scheduler:
         self._emit(run, tok, first=True)
         if self._stopped(run, tok):
             self._finish(s)
+
+    def _score_chunk(self, run: _Run, ctx: int, c: int, pf_logits) -> None:
+        """Teacher-forced scoring of one consumed chunk.
+
+        The chunk covered absolute positions ``[ctx, ctx + c)``; its logits
+        row ``r`` sits at position ``ctx + r`` and predicts the target token
+        at ``ctx + r + 1``.  Every score-range token whose predecessor row
+        lives in this chunk gets its logprob recorded — keyed by absolute
+        position, so a preemption's re-prefill simply overwrites the same
+        entries (restored donor scales make the recompute deterministic)."""
+        s_len = int(run.target.shape[-1])
+        t_lo = max(ctx + 1, run.score_from)
+        t_hi = min(ctx + c, s_len - 1)         # inclusive
+        if t_hi < t_lo:
+            return
+        rows = np.asarray(pf_logits)[0, t_lo - 1 - ctx:t_hi - ctx]
+        golds = np.asarray(run.target[..., t_lo:t_hi + 1])
+        from repro.eval.scoring import gold_logprobs
+        lps = gold_logprobs(rows, golds)
+        for i, t in enumerate(range(t_lo, t_hi + 1)):
+            run.score_lps[t] = float(lps[i])
+
+    def _finish_score(self, s: int, run: _Run) -> None:
+        """Retire a fully-prefilled scoring request: assemble the per-token
+        logprob list (one entry per score token, in order) and finish the
+        slot without sampling."""
+        s_len = int(run.target.shape[-1])
+        run.req.score_logprobs = [run.score_lps[t]
+                                  for t in range(run.score_from, s_len)]
+        run.req.score_s = time.perf_counter() - run.t_add
+        self.stats["score_requests"] += 1
+        self.stats["score_tokens"] += s_len - run.score_from
+        self._score_lat_sum += run.req.score_s
+        self._finish(s)
 
     def _publish_full_blocks(self, s: int, run: _Run) -> None:
         """Index every newly-completed full block of the prefill target.
