@@ -191,7 +191,10 @@ def run(smoke: bool = False):
     emit(ladder_rows, "experiments/bench/serving_ladder.csv")
     shard_rows = _sharded_sweep(smoke)
     emit(shard_rows, "experiments/bench/serving_sharded.csv")
-    return rows + rep_rows + hyb_rows + spec_rows + ladder_rows + shard_rows
+    obs_rows = _obs_sweep(params, smoke)
+    emit(obs_rows, "experiments/bench/serving_obs.csv")
+    return (rows + rep_rows + hyb_rows + spec_rows + ladder_rows + shard_rows
+            + obs_rows)
 
 
 def _replica_row(point, eng, wall):
@@ -511,6 +514,92 @@ def _spec_sweep(smoke):
             "wall_s": round(wall, 2),
         })
     return rows
+
+
+TRACE_PATH = "experiments/bench/serving_trace.json"
+# span/event kinds the exported trace must contain (run.py's obs gate):
+# one of each proves the tracer is threaded through every scheduler path
+TRACE_REQUIRED_KINDS = ("prefill_chunk", "decode_step", "preempt",
+                        "spec_round", "demote")
+
+
+def _obs_sweep(params, smoke):
+    """Tracing overhead pair + Chrome-trace export
+    (``experiments/bench/serving_obs.csv`` + ``serving_trace.json``).
+
+    The same ladder-pressure traffic runs tracing-off and tracing-on;
+    ``overhead_ratio`` (on/off tokens/s) is what ``run.py``'s obs gate
+    bounds — the ring buffer must stay within 10% of free.  The tracing-on
+    run's tracer then also records a spec-decode drive and a
+    preemption-forcing burst, so one exported trace exhibits every span
+    kind the gate requires (prefill chunks, decode steps, a spec round, a
+    preemption, a ladder demotion)."""
+    from repro.obs import Tracer, validate_chrome_trace
+    from repro.serving.spec_decode import SpecConfig
+    n = 18 if smoke else max(N_REQUESTS, 18)
+    max_new = 4 if smoke else 8
+    # same pool-pressure shape as _ladder_sweep: demotions guaranteed
+    base = dataclasses.replace(SCFG, num_blocks=12, max_batch=2,
+                               max_blocks_per_req=8, prefill_chunk=16,
+                               token_budget=64, ladder=True,
+                               ladder_watermark=0.15)
+
+    def traffic():
+        return _shared_prefix_requests(np.random.default_rng(31), n, max_new,
+                                       prefix_len=48, groups=6)
+
+    def one(tracer):
+        eng = PagedServeEngine(params, SERVE_CFG, base, tracer=tracer)
+        wall = _drive(eng, traffic(), 1.0)
+        return eng, wall, eng.metrics()["tokens_per_s"]
+
+    one(None)                            # warm-up: compiles off the clock
+    tr = Tracer()
+    for attempt in range(2):
+        _, wall_off, tps_off = one(None)
+        tr.clear()
+        eng_on, wall_on, tps_on = one(tr)
+        ratio = tps_on / max(tps_off, 1e-9)
+        if ratio >= 0.92 or attempt:     # one retry absorbs host-noise dips
+            break
+
+    # spec round: a short speculative drive on the same tracer
+    spec_scfg = dataclasses.replace(SCFG, prefill_chunk=64, token_budget=96,
+                                    num_blocks=48, max_batch=1,
+                                    spec=SpecConfig(gamma=2, draft_bits=0))
+    spec_eng = PagedServeEngine(params, SERVE_CFG, spec_scfg, tracer=tr)
+    _drive(spec_eng, _shared_prefix_requests(np.random.default_rng(23), 3,
+                                             8), 4.0)
+    # preemption burst: 3 requests, each needing ceil((56+16-1)/16) = 5
+    # blocks, against an 8-block pool at max_batch 2 — eviction guaranteed
+    tiny = dataclasses.replace(SCFG, num_blocks=8, max_batch=2,
+                               max_blocks_per_req=8, prefill_chunk=16,
+                               token_budget=64)
+    burst_eng = PagedServeEngine(params, SERVE_CFG, tiny, tracer=tr)
+    rng = np.random.default_rng(41)
+    burst = [Request(uid=100 + i,
+                     prompt=rng.integers(0, 512, size=56).astype(np.int32),
+                     max_new_tokens=16) for i in range(3)]
+    _drive(burst_eng, burst, 4.0)
+
+    obj = tr.export_chrome_trace(TRACE_PATH)
+    errs = validate_chrome_trace(obj)
+    kinds = tr.kinds()
+    missing = [k for k in TRACE_REQUIRED_KINDS if not kinds.get(k)]
+    if errs or missing:
+        raise RuntimeError(f"obs sweep: trace schema errors {errs[:3]}, "
+                           f"missing span kinds {missing}")
+    mk = lambda point, tps, wall, on: {
+        "point": point,
+        "tokens_per_s": round(tps, 2),
+        "overhead_ratio": round(ratio, 3) if on else 1.0,
+        "trace_spans": len(tr) if on else 0,
+        "trace_dropped": tr.dropped if on else 0,
+        "trace_valid": int(not errs) if on else 0,
+        "wall_s": round(wall, 2),
+    }
+    return [mk("obs_off", tps_off, wall_off, False),
+            mk("obs_on", tps_on, wall_on, True)]
 
 
 if __name__ == "__main__":

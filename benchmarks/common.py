@@ -116,15 +116,20 @@ def calibration_data(params, cfg: ModelConfig, n_tokens: int = 2048):
 
 
 def timeit(fn: Callable, *args, warmup: int = 2, iters: int = 5) -> float:
-    """Median wall time (s) with block_until_ready."""
+    """Median wall time (s) with block_until_ready.
+
+    Timed through the obs tracer's span machinery (one span per iteration)
+    so every benchmark reads the same monotonic clock as the serving stack,
+    and a bench can hand its tracer to `export_chrome_trace` for a
+    per-iteration visual."""
+    from repro.obs import Tracer
     for _ in range(warmup):
         jax.block_until_ready(fn(*args))
-    times = []
+    tr = Tracer(capacity=max(iters, 1))
     for _ in range(iters):
-        t0 = time.perf_counter()
-        jax.block_until_ready(fn(*args))
-        times.append(time.perf_counter() - t0)
-    return float(np.median(times))
+        with tr.span("bench_iter"):
+            jax.block_until_ready(fn(*args))
+    return float(np.median([e.dur for e in tr.events]))
 
 
 def emit(rows: Iterable[dict], path: str):

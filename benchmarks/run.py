@@ -153,6 +153,50 @@ def scorecard_gate(out_dir: str = "experiments/scorecard"):
     return None
 
 
+def obs_overhead_gate(path: str = "experiments/bench/serving_obs.csv",
+                      trace_path: str = "experiments/bench/serving_trace.json"):
+    """Return an error string if tracing stopped being ~free or the exported
+    trace broke.
+
+    Observability's contract is that it never becomes the perturbation it
+    measures: the tracing-on serving run must stay within 10% tokens/s of
+    the tracing-off run (the ring buffer is one branch + a deque append),
+    and the exported Chrome trace must schema-validate and contain every
+    span kind the instrumentation promises (prefill chunk, decode step,
+    preemption, spec round, ladder demotion) — a missing kind means some
+    scheduler path silently lost its spans."""
+    import json
+    from benchmarks.bench_serving import TRACE_REQUIRED_KINDS
+    from repro.obs import validate_chrome_trace
+    try:
+        with open(path) as f:
+            rows = {r["point"]: r for r in csv.DictReader(f)}
+        ratio = float(rows["obs_on"]["overhead_ratio"])
+        dropped = int(rows["obs_on"]["trace_dropped"])
+    except (OSError, KeyError, ValueError) as e:
+        return f"obs gate: cannot read {path} ({e!r})"
+    if ratio < 0.9:
+        return (f"obs gate: tracing-on tokens/s is {ratio} of tracing-off — "
+                f"overhead exceeds the 10% budget ({path})")
+    try:
+        with open(trace_path) as f:
+            obj = json.load(f)
+    except (OSError, ValueError) as e:
+        return f"obs gate: cannot load {trace_path} ({e!r})"
+    errs = validate_chrome_trace(obj)
+    if errs:
+        return f"obs gate: trace schema errors: {errs[:4]} ({trace_path})"
+    kinds = {e.get("name") for e in obj["traceEvents"]}
+    missing = [k for k in TRACE_REQUIRED_KINDS if k not in kinds]
+    if missing:
+        return (f"obs gate: exported trace is missing span kinds {missing} "
+                f"({trace_path})")
+    if dropped and dropped > len(obj["traceEvents"]):
+        return (f"obs gate: ring dropped {dropped} spans — more than it "
+                f"kept; raise Tracer capacity for the sweep ({path})")
+    return None
+
+
 def pallas_interpret_gate():
     """Smoke-mode gate: re-run the paged kernel parity subset with
     REPRO_FORCE_PALLAS=1 (pallas kernels in interpret mode on a CPU host),
@@ -223,6 +267,12 @@ def main() -> None:
         # mesh shape whose greedy tokens diverge from the unsharded engine
         # turns the bench run red
         err = sharded_parity_gate()
+        if err:
+            failures += 1
+            print(err, file=sys.stderr)
+        # tracing must stay ~free and the exported Chrome trace must be
+        # schema-valid with every promised span kind present
+        err = obs_overhead_gate()
         if err:
             failures += 1
             print(err, file=sys.stderr)

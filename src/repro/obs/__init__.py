@@ -1,0 +1,12 @@
+"""Serving observability: tracer spans, mergeable latency histograms,
+Chrome-trace export and allocator snapshots.  See docs/OBSERVABILITY.md."""
+from repro.obs.metrics import (PERCENTILES, SERVING_HISTS, Histogram,
+                               MetricsRegistry)
+from repro.obs.trace import (LIFECYCLE_EVENTS, NULL_TRACER, SCHED_SPANS,
+                             Span, Tracer, clock, validate_chrome_trace)
+
+__all__ = [
+    "Histogram", "MetricsRegistry", "PERCENTILES", "SERVING_HISTS",
+    "Span", "Tracer", "NULL_TRACER", "SCHED_SPANS", "LIFECYCLE_EVENTS",
+    "clock", "validate_chrome_trace",
+]

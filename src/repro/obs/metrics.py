@@ -1,0 +1,198 @@
+"""Mergeable log-bucketed latency histograms for serving percentiles.
+
+Flat counters answer "how many"; SLA questions ("what is p99 TTFT under the
+ladder?") need distributions.  The histograms here are:
+
+  * **log-bucketed** — geometric bucket edges ``lo * g^i`` with
+    ``g = 10^(1/bins_per_decade)``, so relative resolution is constant
+    across six decades of latency (default: 10 microseconds .. 1000 s at
+    12 bins/decade -> ~21% bucket width, percentile estimates within one
+    bucket of the exact sample percentile).
+  * **mergeable** — two histograms with the same bucket layout add
+    bucket-wise, so :class:`~repro.serving.replica.ReplicatedServeEngine`
+    computes true fleet percentiles by *merging* per-replica histograms.
+    Averaging per-replica averages (or percentiles) weights an idle replica
+    equally with a loaded one; a merge weights every request once, same
+    ratio-of-sums discipline as the replica counter aggregation.
+  * **cheap** — ``record`` is one ``math.log`` + list increment; safe on
+    the per-token hot path, enabled unconditionally (the tracer's ring
+    buffer is the opt-in part of the observability stack, not this).
+
+:class:`MetricsRegistry` is a named bag of histograms with the same merge
+discipline, and ``summary()`` flattens to ``{name}_p50_s`` / ``_p90_s`` /
+``_p99_s`` metric keys.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+
+# the serving registry's standard histogram names: schedulers observe these
+# and metrics() emits their percentile keys even before any sample lands
+SERVING_HISTS = ("ttft", "tpot", "queue_wait", "step_wall", "score_latency")
+PERCENTILES: Tuple[Tuple[str, float], ...] = (("p50", 0.50), ("p90", 0.90),
+                                              ("p99", 0.99))
+
+
+class Histogram:
+    """Log-bucketed histogram over ``[lo, hi)`` seconds.
+
+    Bucket 0 is the underflow bin (< lo), bucket ``nbins + 1`` the overflow
+    bin (>= hi); exact ``min``/``max``/``sum``/``count`` ride along so the
+    tails and the mean stay sample-exact even though interior percentiles
+    are bucket-resolution estimates.
+    """
+
+    __slots__ = ("lo", "hi", "bins_per_decade", "nbins", "counts",
+                 "count", "total", "vmin", "vmax", "_log_lo", "_inv_log_g")
+
+    def __init__(self, lo: float = 1e-5, hi: float = 1e3,
+                 bins_per_decade: int = 12):
+        if not (0 < lo < hi):
+            raise ValueError(f"need 0 < lo < hi, got lo={lo} hi={hi}")
+        self.lo = float(lo)
+        self.hi = float(hi)
+        self.bins_per_decade = int(bins_per_decade)
+        decades = math.log10(self.hi / self.lo)
+        self.nbins = max(1, int(math.ceil(decades * self.bins_per_decade)))
+        self.counts: List[int] = [0] * (self.nbins + 2)
+        self.count = 0
+        self.total = 0.0
+        self.vmin = math.inf
+        self.vmax = -math.inf
+        self._log_lo = math.log(self.lo)
+        self._inv_log_g = self.bins_per_decade / math.log(10.0)
+
+    # -- bucket geometry ------------------------------------------------------
+    def layout(self) -> Tuple[float, float, int]:
+        return (self.lo, self.hi, self.bins_per_decade)
+
+    def _edge(self, i: int) -> float:
+        """Lower edge of interior bucket ``i`` (1-based interior index)."""
+        return self.lo * 10.0 ** ((i - 1) / self.bins_per_decade)
+
+    def _bucket(self, v: float) -> int:
+        if v < self.lo:
+            return 0
+        if v >= self.hi:
+            return self.nbins + 1
+        i = 1 + int((math.log(v) - self._log_lo) * self._inv_log_g)
+        return min(max(i, 1), self.nbins)
+
+    # -- recording / merging --------------------------------------------------
+    def record(self, v: float) -> None:
+        v = float(v)
+        self.counts[self._bucket(v)] += 1
+        self.count += 1
+        self.total += v
+        if v < self.vmin:
+            self.vmin = v
+        if v > self.vmax:
+            self.vmax = v
+
+    def merge(self, other: "Histogram") -> None:
+        """Accumulate ``other`` into self (bucket-wise; layouts must match)."""
+        if self.layout() != other.layout():
+            raise ValueError(
+                f"cannot merge histograms with different bucket layouts: "
+                f"{self.layout()} vs {other.layout()}")
+        for i, c in enumerate(other.counts):
+            self.counts[i] += c
+        self.count += other.count
+        self.total += other.total
+        self.vmin = min(self.vmin, other.vmin)
+        self.vmax = max(self.vmax, other.vmax)
+
+    @classmethod
+    def merged(cls, hists: Iterable["Histogram"]) -> "Histogram":
+        """New histogram holding the bucket-wise sum of ``hists``."""
+        hists = list(hists)
+        if not hists:
+            return cls()
+        out = cls(*hists[0].layout())
+        for h in hists:
+            out.merge(h)
+        return out
+
+    # -- estimates ------------------------------------------------------------
+    @property
+    def mean(self) -> float:
+        return self.total / self.count if self.count else 0.0
+
+    def percentile(self, q: float) -> float:
+        """Estimated ``q``-quantile (``q`` in [0, 1]): walk the cumulative
+        bucket counts to the target rank and return the hit bucket's
+        geometric midpoint, clamped to the exact observed [min, max]."""
+        if self.count == 0:
+            return 0.0
+        q = min(max(q, 0.0), 1.0)
+        target = q * (self.count - 1)
+        seen = 0
+        for i, c in enumerate(self.counts):
+            if c == 0:
+                continue
+            seen += c
+            if seen > target:
+                if i == 0:
+                    est = self.vmin            # underflow: only bound known
+                elif i == self.nbins + 1:
+                    est = self.vmax            # overflow
+                else:
+                    est = math.sqrt(self._edge(i) * self._edge(i + 1))
+                return min(max(est, self.vmin), self.vmax)
+        return self.vmax
+
+    def summary(self) -> Dict[str, float]:
+        return {
+            "count": float(self.count),
+            "mean": self.mean,
+            "max": self.vmax if self.count else 0.0,
+            **{name: self.percentile(q) for name, q in PERCENTILES},
+        }
+
+
+class MetricsRegistry:
+    """Named histogram bag with the same merge discipline."""
+
+    def __init__(self, lo: float = 1e-5, hi: float = 1e3,
+                 bins_per_decade: int = 12):
+        self._layout = (lo, hi, bins_per_decade)
+        self.hists: Dict[str, Histogram] = {}
+
+    def hist(self, name: str) -> Histogram:
+        h = self.hists.get(name)
+        if h is None:
+            h = self.hists[name] = Histogram(*self._layout)
+        return h
+
+    def observe(self, name: str, v: float) -> None:
+        self.hist(name).record(v)
+
+    def merge(self, other: "MetricsRegistry") -> None:
+        for name, h in other.hists.items():
+            self.hist(name).merge(h)
+
+    @classmethod
+    def merged(cls, regs: Iterable["MetricsRegistry"]) -> "MetricsRegistry":
+        regs = list(regs)
+        out = cls(*regs[0]._layout) if regs else cls()
+        for r in regs:
+            out.merge(r)
+        return out
+
+    def summary(self, names: Optional[Sequence[str]] = None,
+                suffix: str = "_s") -> Dict[str, float]:
+        """Flat percentile keys: ``{name}_{p50,p90,p99}{suffix}`` plus
+        ``{name}_count``.  ``names`` pins the emitted set so metric keys
+        exist — as zeros — before the first sample (CSV columns must not
+        depend on whether traffic arrived).  Pre-existing ``*_avg_s`` /
+        ``*_max_s`` engine keys keep their legacy (finished-request)
+        definitions; only percentile keys come from the histograms."""
+        out: Dict[str, float] = {}
+        for name in (names if names is not None else sorted(self.hists)):
+            h = self.hists.get(name)
+            for p, q in PERCENTILES:
+                out[f"{name}_{p}{suffix}"] = (h.percentile(q)
+                                              if h is not None else 0.0)
+            out[f"{name}_count"] = float(h.count) if h is not None else 0.0
+        return out

@@ -22,7 +22,6 @@ weight-only) — the model's qdot dispatch handles both.
 from __future__ import annotations
 
 import dataclasses
-import time
 from functools import partial
 from typing import Any, Callable, Dict, List, Optional
 
@@ -31,6 +30,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.online import EmaScaleState
+from repro.obs import clock
 from repro.models import ModelConfig, forward_decode, forward_prefill
 from repro.models.transformer import embed_tokens  # noqa: F401 (re-export convenience)
 
@@ -201,7 +201,7 @@ class ServeEngine:
                     f"alone exceeds the cache capacity smax={self.ecfg.smax}")
             req.prompt = np.asarray(req.prompt)[..., -keep:]
         req.generated = []
-        req.t_add = time.perf_counter()
+        req.t_add = clock()
         self.queue.append(req)
 
     def _admit(self):
@@ -209,7 +209,7 @@ class ServeEngine:
         while free and self.queue:
             slot = free.pop(0)
             req = self.queue.pop(0)
-            t0 = time.perf_counter()
+            t0 = clock()
             logits, one_cache = self._prefill(req.prompt)
             if self._cache is None:
                 self._cache = self._init_batch_cache(one_cache)
@@ -220,8 +220,9 @@ class ServeEngine:
             self._cache = self._insert_fn(self._cache, one_cache, slot)
             tok = self._sample(logits, req.temperature)
             self._tokens = self._tokens.at[slot].set(tok[0])
-            req.prefill_s = time.perf_counter() - t0
-            req.ttft_s = time.perf_counter() - req.t_add
+            now = clock()
+            req.prefill_s = now - t0
+            req.ttft_s = now - req.t_add
             first = np.asarray(tok[0]).tolist()
             req.generated.append(first)
             self.stats["first_tokens"] += 1
@@ -324,17 +325,22 @@ class PagedServeEngine:
     """
 
     def __init__(self, params, cfg: ModelConfig, scfg=None, *, mesh=None,
-                 rules=None):
+                 rules=None, tracer=None):
         """``mesh``: optional ``jax.sharding.Mesh`` for tensor-parallel
         (``model`` axis) and expert-parallel (``data`` axis) serving inside
         this single engine — params, KV pool and the fused step are committed
         to the mesh (see ``Scheduler``); greedy output stays token-for-token
-        identical to the unsharded engine."""
+        identical to the unsharded engine.
+
+        ``tracer``: optional :class:`repro.obs.Tracer`; spans and lifecycle
+        events land in its ring buffer and :meth:`export_chrome_trace`
+        writes them out.  None = tracing off (one-branch overhead)."""
         from repro.serving.scheduler import (Scheduler, SchedulerConfig,
                                              ensure_paged_supported)
         ensure_paged_supported(cfg)
+        self.tracer = tracer
         self.scheduler = Scheduler(params, cfg, scfg or SchedulerConfig(),
-                                   mesh=mesh, rules=rules)
+                                   mesh=mesh, rules=rules, tracer=tracer)
 
     @property
     def finished(self) -> List[Request]:
@@ -374,3 +380,15 @@ class PagedServeEngine:
         when ``SchedulerConfig.spec`` is unset)."""
         d = self.scheduler.draft
         return d.nbytes() if d is not None else 0
+
+    def export_chrome_trace(self, path: str) -> Dict[str, Any]:
+        """Write this engine's trace as Chrome-trace JSON (requires a
+        ``tracer`` at construction)."""
+        if self.tracer is None:
+            raise ValueError("engine was built without a tracer; pass "
+                             "tracer=Tracer() to PagedServeEngine")
+        return self.tracer.export_chrome_trace(path)
+
+    def debug_snapshot(self) -> Dict[str, Any]:
+        """JSON-serializable allocator/scheduler postmortem dump."""
+        return self.scheduler.debug_snapshot()

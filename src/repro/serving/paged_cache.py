@@ -503,6 +503,50 @@ class BlockAllocator:
             elif self._key_of[e.block] != key:
                 raise BlockPoolError(f"index entry {key!r} not back-linked")
 
+    def debug_snapshot(self) -> Dict[str, Any]:
+        """JSON-serializable postmortem view of the pool: per-block
+        state/refcount/key, free-list depth, LRU orders, and the prefix
+        index as parent-linked chains.  Digest keys render as hex; read-only
+        (allocator state is untouched)."""
+        names = {self.FREE: "FREE", self.ACTIVE: "ACTIVE",
+                 self.CACHED: "CACHED", self.PACKED: "PACKED"}
+        blocks = []
+        for b in range(self.num_blocks):
+            key = self._key_of[b]
+            blocks.append({
+                "block": b, "state": names[self._state[b]],
+                "ref": self._ref[b],
+                "key": key.hex() if key is not None else None,
+            })
+        index = []
+        for key, e in self._index.items():
+            index.append({
+                "key": key.hex(), "block": e.block,
+                "parent": e.parent.hex() if e.parent else None,
+                "tag": e.tag, "bits": e.bits, "half": e.half,
+                "has_tokens": e.tokens is not None,
+            })
+        return {
+            "num_blocks": self.num_blocks,
+            "num_free": self.num_free,
+            "num_active": sum(1 for s in self._state if s == self.ACTIVE),
+            "num_cached": self.num_cached,
+            "num_packed": self.num_packed,
+            "int4_blocks": self.int4_blocks,
+            "utilization": self.utilization,
+            "cache_evictions": self.cache_evictions,
+            "demotions": self.demotions,
+            "promotions": self.promotions,
+            "free_list": list(self._free),
+            "cached_lru": [b for b in self._cached],        # oldest first
+            "packed_lru": [b for b in self._packed_lru],
+            "packed_halves": {str(b): [k.hex() if k is not None else None
+                                       for k in halves]
+                              for b, halves in self._packed.items()},
+            "blocks": blocks,
+            "index": index,
+        }
+
 
 # ---------------------------------------------------------------------------
 # Scatter/gather helpers (pure, jit-traceable)

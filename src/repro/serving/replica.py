@@ -42,12 +42,12 @@ a *shard* of the global block budget, behind the familiar single-engine
 from __future__ import annotations
 
 import dataclasses
-import time
 from typing import Any, Dict, List, Optional
 
 import numpy as np
 from jax.sharding import Mesh
 
+from repro.obs import SERVING_HISTS, MetricsRegistry, clock
 from repro.serving.scheduler import (Scheduler, SchedulerConfig,
                                      _prefix_keys, ensure_paged_supported)
 
@@ -98,7 +98,11 @@ class ReplicatedServeEngine:
     """
 
     def __init__(self, params, cfg, scfg: Optional[SchedulerConfig] = None,
-                 rcfg: Optional[ReplicaConfig] = None, mesh=None):
+                 rcfg: Optional[ReplicaConfig] = None, mesh=None,
+                 tracer=None):
+        """``tracer``: optional shared :class:`repro.obs.Tracer`; replica
+        ``i`` records on trace track ``i``, so the Chrome-trace export shows
+        one process per replica."""
         scfg = scfg or SchedulerConfig()
         rcfg = rcfg or ReplicaConfig()
         if rcfg.policy not in ROUTING_POLICIES:
@@ -143,7 +147,8 @@ class ReplicatedServeEngine:
             rep = Scheduler(params, cfg,
                             dataclasses.replace(scfg, num_blocks=nb,
                                                 num_state_slots=ss),
-                            draft_built=draft_built, mesh=sub)
+                            draft_built=draft_built, mesh=sub,
+                            tracer=tracer, trace_track=i)
             if rep.draft is not None and draft_built is None:
                 draft_built = (rep.draft.dparams, rep.draft.dcfg)
             self.replicas.append(rep)
@@ -151,6 +156,7 @@ class ReplicatedServeEngine:
         self._rr = 0                         # round-robin cursor
         self._steps = 0
         self.scale_syncs = 0
+        self.tracer = tracer
         self._t_start: Optional[float] = None
         self._t_last = 0.0
 
@@ -218,7 +224,7 @@ class ReplicatedServeEngine:
         through this host loop), then sync EMA scale state on the configured
         cadence."""
         if self._t_start is None:
-            self._t_start = time.perf_counter()
+            self._t_start = clock()
         launched = [(r, r.step_launch())
                     for r in self.replicas if r.has_work]
         progressed = False
@@ -226,7 +232,7 @@ class ReplicatedServeEngine:
             progressed = r.step_consume(ctx) or progressed
         self._steps += 1
         if progressed:
-            self._t_last = time.perf_counter()
+            self._t_last = clock()
         if self.rcfg.sync_every and self._steps % self.rcfg.sync_every == 0:
             self.sync_scales()
         return progressed
@@ -310,7 +316,12 @@ class ReplicatedServeEngine:
         metrics (the bench reports tokens/s and prefix-hit-rate per replica
         from it)."""
         per = [r.metrics() for r in self.replicas]
-        wall = max(self._t_last - (self._t_start or 0.0), 1e-9)
+        # same zero guard as Scheduler.metrics(): before any step ran there
+        # is no wall, and `_t_last - 0.0` would fake an epoch-sized one
+        if self._t_start is None:
+            wall = 0.0
+        else:
+            wall = max(self._t_last - self._t_start, 1e-9)
         gen = sum(r.stats["decode_tokens"] + r.stats["first_tokens"]
                   for r in self.replicas)
         done = [req for r in self.replicas for req in r.finished]
@@ -331,10 +342,16 @@ class ReplicatedServeEngine:
         score_req = sum(r.stats["score_requests"] for r in self.replicas)
         score_tok = sum(r.stats["score_tokens"] for r in self.replicas)
         score_lat = sum(m["score_latency_s"] for m in per)
-        return {
+        # latency percentiles come from *merged* per-replica histograms —
+        # every request weighs once.  Averaging per-replica percentiles (or
+        # averages) would weight an idle replica's two requests equally with
+        # a loaded replica's two hundred.
+        merged = MetricsRegistry.merged([r.mreg for r in self.replicas])
+        out = {
             "replicas": self.rcfg.n_replicas,
             "requests_finished": len(done),
-            "tokens_per_s": gen / wall,
+            "tokens_per_s": gen / wall if wall else 0.0,
+            "wall_s": wall,
             "ttft_avg_s": (float(np.mean([r.ttft_s for r in done]))
                            if done else 0.0),
             "ttft_max_s": (float(np.max([r.ttft_s for r in done]))
@@ -361,10 +378,24 @@ class ReplicatedServeEngine:
             "score_tokens": score_tok,
             "score_latency_s": score_lat,
             "score_latency_avg_s": score_lat / max(score_req, 1),
-            "score_tokens_per_s": score_tok / wall,
+            "score_tokens_per_s": score_tok / wall if wall else 0.0,
             "weight_bits_min": per[0]["weight_bits_min"],
             "weight_bits_max": per[0]["weight_bits_max"],
             "weight_bits_avg": per[0]["weight_bits_avg"],
             "scale_syncs": self.scale_syncs,
             "per_replica": per,
         }
+        out.update(merged.summary(SERVING_HISTS))
+        return out
+
+    def export_chrome_trace(self, path: str) -> Dict[str, Any]:
+        """Write the fleet's trace as Chrome-trace JSON (requires a shared
+        ``tracer`` at construction; each replica is its own process row)."""
+        if self.tracer is None:
+            raise ValueError("fleet was built without a tracer; pass "
+                             "tracer=Tracer() to ReplicatedServeEngine")
+        return self.tracer.export_chrome_trace(path)
+
+    def debug_snapshot(self) -> Dict[str, Any]:
+        """Per-replica scheduler/allocator postmortem dumps."""
+        return {"replicas": [r.debug_snapshot() for r in self.replicas]}

@@ -76,7 +76,6 @@ from __future__ import annotations
 
 import dataclasses
 import hashlib
-import time
 from collections import OrderedDict, deque
 from functools import partial
 from typing import Any, Deque, Dict, List, Optional
@@ -86,6 +85,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.online import EmaScaleState
+from repro.obs import NULL_TRACER, SERVING_HISTS, MetricsRegistry, clock
 from repro.distributed import sharding as shd
 from repro.models.config import ModelConfig
 from repro.models.transformer import (forward_decode_paged,
@@ -218,7 +218,7 @@ class _Run:
     """One admitted request's scheduling state."""
 
     __slots__ = ("req", "slot", "ctx", "target", "pending", "resume_pending",
-                 "state", "order", "priority", "t_add", "chain",
+                 "state", "order", "priority", "t_add", "t_last_tok", "chain",
                  "published_upto", "scale_tag", "snapshot", "state_slot",
                  "step_enqueued", "step_added", "score_from", "score_lps")
 
@@ -244,7 +244,8 @@ class _Run:
         self.state = "prefill"
         self.order = order                 # arrival sequence (FCFS tiebreak)
         self.priority = int(getattr(req, "priority", 0))
-        self.t_add = time.perf_counter()   # for TTFT accounting
+        self.t_add = clock()               # for TTFT / queue-wait accounting
+        self.t_last_tok = None             # last emit time (TPOT histogram)
         self.chain: List[bytes] = []       # prefix keys over target's blocks
         self.published_upto = 0            # blocks of target already indexed
         self.scale_tag: Optional[int] = None   # scale-freeze epoch id
@@ -380,11 +381,19 @@ class Scheduler:
     """Paged continuous-batching scheduler (host-side control plane)."""
 
     def __init__(self, params, cfg: ModelConfig, scfg: SchedulerConfig, *,
-                 draft_built=None, mesh=None, rules=None):
+                 draft_built=None, mesh=None, rules=None, tracer=None,
+                 trace_track: int = 0):
         """``draft_built``: optional pre-built draft ``(params, cfg)`` pair
         handed to the proposer so replica fleets quantize the draft once
         (see ``ReplicatedServeEngine``); ignored when ``scfg.spec`` is
         unset.
+
+        ``tracer``: optional :class:`repro.obs.Tracer` recording scheduler
+        phase spans and request lifecycle events (None = the no-op
+        singleton: the hot path pays one branch).  ``trace_track`` is this
+        scheduler's track id in the trace — the replica index when driven by
+        ``ReplicatedServeEngine``, so each replica exports as its own
+        Chrome-trace process.
 
         ``mesh``/``rules``: optional ``jax.sharding.Mesh`` (+ logical-axis
         rule overrides) for tensor/expert-parallel serving *inside* this
@@ -459,6 +468,11 @@ class Scheduler:
         self._step_fn = _step_fn_for(cfg, scfg.block_size, mesh, rules,
                                      codec=scfg.codec)
         self._cow_fn = _shared_cow_fn()
+        # observability: tracer (no-op singleton unless injected) + the
+        # always-on latency histograms metrics() summarizes
+        self.trace = tracer if tracer is not None else NULL_TRACER
+        self.track = int(trace_track)
+        self.mreg = MetricsRegistry()
         # speculative decoding: the draft proposer holds one dense-cache lane
         # per decode slot; the verify step replaces the one-token decode
         self.spec = scfg.spec
@@ -468,7 +482,8 @@ class Scheduler:
                       scfg.num_blocks * scfg.block_size)
             self.draft = DraftProposer(params, cfg, self.spec,
                                        max_batch=scfg.max_batch, capacity=cap,
-                                       built=draft_built)
+                                       built=draft_built, tracer=self.trace,
+                                       trace_track=self.track)
             self._spec_fn = _spec_fn_for(cfg, scfg.block_size, mesh, rules,
                                          codec=scfg.codec)
         else:
@@ -537,6 +552,8 @@ class Scheduler:
             req.t_add = run.t_add
         self._order += 1
         self.waiting.append(run)
+        self.trace.event("enqueue", track=self.track, uid=req.uid,
+                         prompt=s, max_new=req.max_new_tokens)
 
     def step(self) -> bool:
         """One iteration: admit -> schedule decode (or a speculative verify
@@ -553,8 +570,9 @@ class Scheduler:
         own ``data``-axis device slice) genuinely compute concurrently
         instead of serializing through the host control loop.  Returns None
         when there is no work this step."""
+        t0 = clock()
         if self._t_start is None:
-            self._t_start = time.perf_counter()
+            self._t_start = t0
         if self.scfg.ladder:
             self._maybe_demote()        # before admission: freed blocks and
                                         # promote headroom help the matcher
@@ -587,28 +605,45 @@ class Scheduler:
         # chunk-logits head is a different — larger — jit specialization)
         pf_score = (pf is not None
                     and self.slots[pf[0]].score_from >= 0)
+        tr = self.trace
         if dec_slots and vlens:
             drafts = self._propose_drafts(dec_slots, vlens)
             args = self._build_spec_args(dec_slots, vlens, drafts, pf)
-            pf_logits, ver_logits, self.pool, self.spool = self._spec_fn(
-                self.params, self.pool, self.spool, *args["device"],
-                do_prefill=pf is not None, do_decode=True,
-                pf_first=(pf is None or pf[1] == 0), pf_score=pf_score)
+            t1 = clock()
+            if tr.enabled:
+                tr.add_span("schedule", t0, t1 - t0, track=self.track,
+                            decode=len(dec_slots), spec=True)
+            with tr.annotate("paged_spec_step"):
+                pf_logits, ver_logits, self.pool, self.spool = self._spec_fn(
+                    self.params, self.pool, self.spool, *args["device"],
+                    do_prefill=pf is not None, do_decode=True,
+                    pf_first=(pf is None or pf[1] == 0), pf_score=pf_score)
+            if tr.enabled:
+                tr.add_span("device_step", t1, clock() - t1, track=self.track)
             return {"dec_slots": dec_slots, "vlens": vlens, "drafts": drafts,
                     "pf": pf, "pf_logits": pf_logits,
-                    "ver_logits": ver_logits}
+                    "ver_logits": ver_logits, "t0": t0, "t1": t1}
         args = self._build_args(dec_slots, pf)
-        pf_logits, dec_logits, self.pool, self.spool = self._step_fn(
-            self.params, self.pool, self.spool, *args["device"],
-            do_prefill=pf is not None, do_decode=bool(dec_slots),
-            pf_first=(pf is None or pf[1] == 0), pf_score=pf_score)
+        t1 = clock()
+        if tr.enabled:
+            tr.add_span("schedule", t0, t1 - t0, track=self.track,
+                        decode=len(dec_slots), prefill=pf is not None)
+        with tr.annotate("paged_step"):
+            pf_logits, dec_logits, self.pool, self.spool = self._step_fn(
+                self.params, self.pool, self.spool, *args["device"],
+                do_prefill=pf is not None, do_decode=bool(dec_slots),
+                pf_first=(pf is None or pf[1] == 0), pf_score=pf_score)
+        if tr.enabled:
+            tr.add_span("device_step", t1, clock() - t1, track=self.track)
         return {"dec_slots": dec_slots, "vlens": None, "drafts": None,
-                "pf": pf, "pf_logits": pf_logits, "dec_logits": dec_logits}
+                "pf": pf, "pf_logits": pf_logits, "dec_logits": dec_logits,
+                "t0": t0, "t1": t1}
 
     def step_consume(self, launched: Optional[Dict[str, Any]]) -> bool:
         """Block on a ``step_launch`` context's logits and sample/retire."""
         if launched is None:
             return False
+        t2 = clock()
         dec_slots, pf = launched["dec_slots"], launched["pf"]
         if launched["vlens"] is not None:
             self._consume_spec(dec_slots, launched["vlens"],
@@ -617,7 +652,24 @@ class Scheduler:
             self._consume_decode(dec_slots, launched["dec_logits"])
         if pf is not None:
             self._consume_prefill(pf, launched["pf_logits"])
-        self._t_last = time.perf_counter()
+        t3 = clock()
+        tr = self.trace
+        if tr.enabled:
+            t1 = launched["t1"]
+            tr.add_span("consume", t2, t3 - t2, track=self.track)
+            if launched["vlens"] is not None:
+                tr.add_span("spec_round", t1, t3 - t1, track=self.track,
+                            lanes=len(launched["vlens"]))
+            elif dec_slots:
+                tr.add_span("decode_step", t1, t3 - t1, track=self.track,
+                            batch=len(dec_slots))
+            if pf is not None:
+                run = self.slots[pf[0]]
+                tr.add_span("prefill_chunk", t1, t3 - t1, track=self.track,
+                            lane=pf[0], ctx=pf[1], tokens=pf[2],
+                            uid=run.req.uid if run is not None else -1)
+        self.mreg.observe("step_wall", t3 - launched["t0"])
+        self._t_last = t3
         return True
 
     def run(self, max_steps: int = 10_000):
@@ -678,19 +730,26 @@ class Scheduler:
 
     def metrics(self) -> Dict[str, float]:
         done = [r for r in self.finished]
-        wall = max(self._t_last - (self._t_start or 0.0), 1e-9)
+        # wall clock covers first launch -> last consume; before any step
+        # ran there is no wall at all — report explicit zeros instead of a
+        # near-epoch `_t_last - 0.0` difference masquerading as throughput
+        if self._t_start is None:
+            wall = 0.0
+        else:
+            wall = max(self._t_last - self._t_start, 1e-9)
         # prefill-sampled first tokens are counted as they are emitted, so
         # in-flight requests contribute theirs too (counting finished
         # requests instead dropped them and dipped mid-flight throughput)
         gen = self.stats["decode_tokens"] + self.stats["first_tokens"]
         steps = max(self.stats["steps"], 1)
-        return {
+        out = {
             "requests_finished": len(done),
             "ttft_avg_s": (float(np.mean([r.ttft_s for r in done]))
                            if done else 0.0),
             "ttft_max_s": (float(np.max([r.ttft_s for r in done]))
                            if done else 0.0),
-            "tokens_per_s": gen / wall,
+            "tokens_per_s": gen / wall if wall else 0.0,
+            "wall_s": wall,
             "cache_util_avg": self._util_sum / steps,
             "cache_util_peak": self._util_peak,
             "cache_nbytes": paged_cache_nbytes(self.pool),
@@ -734,7 +793,8 @@ class Scheduler:
             "score_latency_s": self._score_lat_sum,
             "score_latency_avg_s": (self._score_lat_sum /
                                     max(self.stats["score_requests"], 1)),
-            "score_tokens_per_s": self.stats["score_tokens"] / wall,
+            "score_tokens_per_s": (self.stats["score_tokens"] / wall
+                                   if wall else 0.0),
             # per-layer weight bitwidths from the build-time budget search
             # (zeros when weight_budget_mb == 0)
             "weight_bits_min": (min(self.weight_bits.values())
@@ -771,6 +831,43 @@ class Scheduler:
                                 if self.state_alloc else 0.0),
             "state_pool_nbytes": state_pool_nbytes(self.spool),
         }
+        # latency percentiles from the always-on histograms: TTFT / TPOT /
+        # queue wait / step wall / scoring latency p50/p90/p99 (+ counts).
+        # The legacy ttft_avg_s / ttft_max_s keys above keep their
+        # finished-request definitions; these add the distribution view
+        out.update(self.mreg.summary(SERVING_HISTS))
+        return out
+
+    def debug_snapshot(self) -> Dict[str, Any]:
+        """JSON-serializable postmortem dump of the scheduler's resident
+        state: the block allocator (per-block state/refcount/key, free-list
+        depth, prefix-index chains), the per-slot runs and block tables,
+        and the SSM state pool.  Read-only; see docs/OBSERVABILITY.md."""
+        slots = []
+        for s, run in enumerate(self.slots):
+            if run is None:
+                slots.append(None)
+                continue
+            row = self.block_tables[s]
+            slots.append({
+                "slot": s, "uid": run.req.uid, "state": run.state,
+                "ctx": int(run.ctx), "priority": int(run.priority),
+                "published_upto": int(run.published_upto),
+                "generated": len(run.req.generated or ()),
+                "blocks": [int(b) for b in row if b != self.trash],
+            })
+        snap = {
+            "alloc": self.alloc.debug_snapshot(),
+            "slots": slots,
+            "waiting": [{"uid": r.req.uid,
+                         "prompt": int(r.target.shape[-1]),
+                         "priority": int(r.priority)} for r in self.waiting],
+            "stats": dict(self.stats),
+        }
+        if self.state_alloc is not None:
+            snap["state_pool"] = self.state_alloc.debug_snapshot()
+            snap["state_snaps"] = [k.hex() for k in self._state_snaps]
+        return snap
 
     # -- admission / scheduling ----------------------------------------------
     def _eff_priority(self, run: _Run) -> int:
@@ -813,6 +910,9 @@ class Scheduler:
             run.slot = slot
             self.block_tables[slot, :] = self.trash
             self.slots[slot] = run
+            self.mreg.observe("queue_wait", clock() - run.t_add)
+            self.trace.event("admit", track=self.track, lane=slot,
+                             uid=run.req.uid)
             self._match_prefix(slot, run)
 
     def _match_cap(self, run: _Run) -> int:
@@ -888,6 +988,9 @@ class Scheduler:
             return
         self.stats["prefix_hits"] += 1
         self.stats["prefix_hit_tokens"] += run.ctx
+        self.trace.event("partial_hit" if part else "prefix_hit",
+                         track=self.track, lane=slot, uid=run.req.uid,
+                         tokens=int(run.ctx))
 
     def _match_partial(self, slot: int, run: _Run, tag) -> int:
         """Sub-block prefix reuse after the full-block chain match.
@@ -965,6 +1068,9 @@ class Scheduler:
             _key_a, _key_b, src_a, src_b, dst = pair
             self.pool = demote_pair_blocks(self.pool, jnp.int32(src_a),
                                            jnp.int32(src_b), jnp.int32(dst))
+            self.trace.event("demote", track=self.track,
+                             src_a=int(src_a), src_b=int(src_b),
+                             dst=int(dst))
         if self._has_ssm:
             self._demote_old_snaps()
 
@@ -981,6 +1087,8 @@ class Scheduler:
         src, half = self.alloc.promote(key, got[0])
         self.pool = promote_block(self.pool, jnp.int32(src), jnp.int32(half),
                                   jnp.int32(got[0]))
+        self.trace.event("promote", track=self.track, src=int(src),
+                         dst=int(got[0]))
         return got[0]
 
     def _store_state_snap(self, key: bytes, slot: int) -> None:
@@ -1296,6 +1404,8 @@ class Scheduler:
         self.alloc.decref(blk)
         self.block_tables[s, bi] = got[0]
         self.stats["cow_copies"] += 1
+        self.trace.event("cow_copy", track=self.track, lane=s,
+                         src=int(blk), dst=int(got[0]))
         return True
 
     def _preempt(self, s: int) -> None:
@@ -1327,6 +1437,8 @@ class Scheduler:
         run.step_enqueued = self.stats["steps"]
         self.waiting.appendleft(run)
         self.stats["preemptions"] += 1
+        self.trace.event("preempt", track=self.track, lane=s,
+                         uid=run.req.uid)
 
     def _free_row(self, s: int) -> None:
         row = self.block_tables[s]
@@ -1422,9 +1534,19 @@ class Scheduler:
     def _emit(self, run: _Run, tok, first: bool) -> None:
         req = run.req
         req.generated.append(tok)
+        now = clock()
         if first:
-            req.ttft_s = time.perf_counter() - run.t_add
+            req.ttft_s = now - run.t_add
             self.stats["first_tokens"] += 1
+            self.mreg.observe("ttft", req.ttft_s)
+            self.trace.event("first_token", track=self.track, lane=run.slot,
+                             uid=req.uid)
+        elif run.t_last_tok is not None:
+            # TPOT: inter-token gap per request (a preempted request's gap
+            # spans its whole recompute — by design, that IS the stall the
+            # caller observed)
+            self.mreg.observe("tpot", now - run.t_last_tok)
+        run.t_last_tok = now
         if req.on_token is not None:
             req.on_token(req, tok)
 
@@ -1469,6 +1591,8 @@ class Scheduler:
         if run.resume_pending is not None:     # recompute after preemption:
             run.pending = run.resume_pending   # re-feed the in-flight token
             run.resume_pending = None
+            self.trace.event("resume", track=self.track, lane=s,
+                             uid=run.req.uid)
             return
         temps = np.asarray([run.req.temperature], np.float32)
         tok = np.asarray(self._sample(pf_logits, temps))[0].tolist()
@@ -1505,10 +1629,11 @@ class Scheduler:
         s_len = int(run.target.shape[-1])
         run.req.score_logprobs = [run.score_lps[t]
                                   for t in range(run.score_from, s_len)]
-        run.req.score_s = time.perf_counter() - run.t_add
+        run.req.score_s = clock() - run.t_add
         self.stats["score_requests"] += 1
         self.stats["score_tokens"] += s_len - run.score_from
         self._score_lat_sum += run.req.score_s
+        self.mreg.observe("score_latency", run.req.score_s)
         self._finish(s)
 
     def _publish_full_blocks(self, s: int, run: _Run) -> None:
@@ -1545,6 +1670,9 @@ class Scheduler:
     def _finish(self, s: int) -> None:
         run = self.slots[s]
         run.req.done = True
+        self.trace.event("finish", track=self.track, lane=s,
+                         uid=run.req.uid,
+                         generated=len(run.req.generated or ()))
         self.finished.append(run.req)
         self._free_row(s)
         self._free_state_slot(run)

@@ -255,13 +255,19 @@ class DraftProposer:
     """
 
     def __init__(self, params, cfg: ModelConfig, spec: SpecConfig, *,
-                 max_batch: int, capacity: int, built=None):
+                 max_batch: int, capacity: int, built=None, tracer=None,
+                 trace_track: int = 0):
         """``built`` optionally injects another proposer's ``(dparams,
         dcfg)`` pair so N schedulers over the same checkpoint (replica
         fleets) share one draft weight tree instead of re-quantizing it per
         replica; lanes stay private per proposer and the injected tree is
-        charged to its owner, not here."""
+        charged to its owner, not here.  ``tracer``/``trace_track``: the
+        owning scheduler's tracer — lane rebuilds are the spec path's
+        biggest host cost, so they get lifecycle events."""
         ensure_spec_supported(cfg)
+        from repro.obs import NULL_TRACER
+        self.trace = tracer if tracer is not None else NULL_TRACER
+        self.track = int(trace_track)
         self.spec = spec
         self.gamma = spec.gamma
         self.dparams, self.dcfg = built if built is not None \
@@ -326,6 +332,7 @@ class DraftProposer:
         self.lens[slot] = s
         self.valid[slot] = True
         self.prefills += 1
+        self.trace.event("draft_prefill", track=self.track, lane=slot, ctx=s)
 
     def ensure_from_pool(self, slot: int, pool, block_row, ctx: int) -> bool:
         """Bootstrap lane ``slot`` to context ``ctx`` by dequantizing the
@@ -346,6 +353,8 @@ class DraftProposer:
         self.lens[slot] = int(ctx)
         self.valid[slot] = True
         self.bootstraps += 1
+        self.trace.event("draft_bootstrap", track=self.track, lane=slot,
+                         ctx=int(ctx))
         return True
 
     def invalidate(self, slot: int) -> None:

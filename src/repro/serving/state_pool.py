@@ -114,6 +114,17 @@ class StateAllocator:
             if self._active[s]:
                 raise StatePoolError(f"free-list slot {s} marked active")
 
+    def debug_snapshot(self) -> Dict[str, Any]:
+        """JSON-serializable view of the slot pool (read-only)."""
+        return {
+            "num_slots": self.num_slots,
+            "num_free": self.num_free,
+            "num_active": self.num_active,
+            "utilization": self.utilization,
+            "free_list": list(self._free),
+            "active_slots": [s for s, a in enumerate(self._active) if a],
+        }
+
 
 # ---------------------------------------------------------------------------
 # Pool allocation

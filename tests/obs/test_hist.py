@@ -1,0 +1,160 @@
+"""Mergeable log-bucketed histograms: percentile bounds vs sorted reference,
+merge associativity, and the layout contract."""
+import math
+
+import numpy as np
+import pytest
+
+from repro.obs import Histogram, MetricsRegistry, SERVING_HISTS
+
+
+def _samples(rng, n, lo=1e-4, hi=50.0):
+    """Log-uniform latencies spanning several decades."""
+    return np.exp(rng.uniform(np.log(lo), np.log(hi), size=n))
+
+
+def test_empty_histogram_is_all_zero():
+    h = Histogram()
+    assert h.count == 0
+    assert h.mean == 0.0
+    assert h.percentile(0.5) == 0.0
+    s = h.summary()
+    assert s["count"] == 0.0 and s["max"] == 0.0 and s["p99"] == 0.0
+
+
+def test_min_max_mean_are_sample_exact():
+    rng = np.random.default_rng(0)
+    xs = _samples(rng, 500)
+    h = Histogram()
+    for x in xs:
+        h.record(x)
+    assert h.vmin == xs.min() and h.vmax == xs.max()
+    assert h.count == 500
+    np.testing.assert_allclose(h.mean, xs.mean(), rtol=1e-12)
+
+
+@pytest.mark.parametrize("seed", [1, 2, 3])
+@pytest.mark.parametrize("q", [0.5, 0.9, 0.99])
+def test_percentile_within_one_bucket_of_sorted_reference(seed, q):
+    """The estimate must land within one geometric bucket (factor g^2) of
+    the exact sample percentile, and always inside [min, max]."""
+    rng = np.random.default_rng(seed)
+    xs = _samples(rng, 2000)
+    h = Histogram()
+    for x in xs:
+        h.record(x)
+    est = h.percentile(q)
+    exact = float(np.percentile(xs, q * 100))
+    g = 10.0 ** (1.0 / h.bins_per_decade)
+    assert exact / g**2 <= est <= exact * g**2, (est, exact)
+    assert h.vmin <= est <= h.vmax
+
+
+def test_out_of_range_samples_clamp_to_exact_tails():
+    h = Histogram(lo=1e-3, hi=1.0)
+    for v in (1e-6, 5e-7, 3.0):          # two underflow, one overflow
+        h.record(v)
+    assert h.count == 3
+    assert h.percentile(0.0) == pytest.approx(5e-7)
+    assert h.percentile(1.0) == pytest.approx(3.0)
+
+
+def test_merge_equals_pooled_recording():
+    """Merging shards is exactly recording the pooled stream (counts,
+    totals, tails and every percentile)."""
+    rng = np.random.default_rng(7)
+    shards = [_samples(rng, n) for n in (400, 60, 1000)]
+    hs = []
+    for xs in shards:
+        h = Histogram()
+        for x in xs:
+            h.record(x)
+        hs.append(h)
+    merged = Histogram.merged(hs)
+    pooled = Histogram()
+    for x in np.concatenate(shards):
+        pooled.record(x)
+    assert merged.counts == pooled.counts
+    assert merged.count == pooled.count
+    assert merged.vmin == pooled.vmin and merged.vmax == pooled.vmax
+    for q in (0.5, 0.9, 0.99):
+        assert merged.percentile(q) == pooled.percentile(q)
+
+
+def test_merge_is_associative_and_commutative():
+    rng = np.random.default_rng(11)
+    hs = []
+    for n in (50, 200, 500):
+        h = Histogram()
+        for x in _samples(rng, n):
+            h.record(x)
+        hs.append(h)
+    a, b, c = hs
+    left = Histogram.merged([Histogram.merged([a, b]), c])
+    right = Histogram.merged([a, Histogram.merged([b, c])])
+    rev = Histogram.merged([c, b, a])
+    assert left.counts == right.counts == rev.counts
+    assert left.count == right.count == rev.count
+
+
+def test_merge_rejects_layout_mismatch():
+    a = Histogram(lo=1e-5, hi=1e3)
+    b = Histogram(lo=1e-4, hi=1e3)
+    with pytest.raises(ValueError, match="layout"):
+        a.merge(b)
+
+
+def test_merge_weights_every_sample_once_not_every_replica():
+    """The motivating failure: an idle replica must not drag the fleet p50.
+    Replica A served 9 slow requests (1 s), replica B one fast (1 ms) —
+    the true pooled p50 is 1 s; a mean of per-replica p50s would say ~0.5 s."""
+    a, b = Histogram(), Histogram()
+    for _ in range(9):
+        a.record(1.0)
+    b.record(1e-3)
+    merged = Histogram.merged([a, b])
+    assert merged.percentile(0.5) == pytest.approx(1.0, rel=0.25)
+    naive = (a.percentile(0.5) + b.percentile(0.5)) / 2
+    assert naive < 0.6                    # the naive mean is badly wrong
+
+
+def test_registry_summary_keys_are_stable_and_zero_before_traffic():
+    reg = MetricsRegistry()
+    s = reg.summary(SERVING_HISTS)
+    for name in SERVING_HISTS:
+        assert s[f"{name}_p50_s"] == 0.0
+        assert s[f"{name}_p90_s"] == 0.0
+        assert s[f"{name}_p99_s"] == 0.0
+        assert s[f"{name}_count"] == 0.0
+    reg.observe("ttft", 0.25)
+    s = reg.summary(SERVING_HISTS)
+    assert s["ttft_count"] == 1.0
+    assert s["ttft_p50_s"] == pytest.approx(0.25, rel=0.25)
+
+
+def test_registry_merged_matches_histogram_merge():
+    regs = []
+    rng = np.random.default_rng(3)
+    for _ in range(3):
+        r = MetricsRegistry()
+        for x in _samples(rng, 100):
+            r.observe("ttft", x)
+        regs.append(r)
+    merged = MetricsRegistry.merged(regs)
+    assert merged.hist("ttft").count == 300
+    pooled = Histogram.merged([r.hist("ttft") for r in regs])
+    assert merged.hist("ttft").counts == pooled.counts
+
+
+def test_bucket_edges_are_geometric():
+    h = Histogram(lo=1e-3, hi=1e3, bins_per_decade=10)
+    g = 10.0 ** 0.1
+    for i in range(1, h.nbins):
+        assert h._edge(i + 1) / h._edge(i) == pytest.approx(g)
+    # every interior sample lands in the bucket whose edges bracket it
+    rng = np.random.default_rng(5)
+    for v in np.exp(rng.uniform(math.log(1e-3), math.log(1e3), size=200)):
+        i = h._bucket(v)
+        assert 1 <= i <= h.nbins
+        assert h._edge(i) <= v * (1 + 1e-9)
+        assert v <= h._edge(i + 1) * (1 + 1e-9)

@@ -1,0 +1,34 @@
+"""Tier-1 wrapper for ``tools/check_obs.py``: no serving hot-path module may
+call ``time.perf_counter`` directly — ``repro.obs.clock()`` is the one
+timing authority the tracer, histograms and wall accounting share."""
+import pathlib
+import sys
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent / "tools"))
+
+import check_obs
+
+
+def test_scoped_modules_exist():
+    # the scope list must track the tree: a renamed module silently leaving
+    # the check would defeat it
+    for rel in check_obs.SCOPED:
+        assert (check_obs.REPO / rel).is_file(), rel
+
+
+def test_no_direct_perf_counter_in_scoped_modules():
+    bad = check_obs.run_check()
+    assert not bad, (
+        "serving module times outside repro.obs.clock(): "
+        + ", ".join(f"{rel}:{line}" for rel, line in bad))
+
+
+def test_detector_catches_code_but_not_docs():
+    assert check_obs.find_violations("t = time.perf_counter()\n") == [1]
+    assert check_obs.find_violations(
+        "from time import perf_counter\n") == [1]
+    # mentions in docstrings/comments are fine — they document the clock
+    assert check_obs.find_violations('"""uses time.perf_counter"""\n') == []
+    assert check_obs.find_violations("# perf_counter is banned here\n") == []
+    # other timing calls are not the forbidden token
+    assert check_obs.find_violations("t = time.monotonic()\n") == []

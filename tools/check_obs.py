@@ -1,0 +1,74 @@
+#!/usr/bin/env python
+"""Static check: the obs tracer owns the serving clock — nobody else.
+
+Scans the serving hot-path modules for a literal ``perf_counter`` code
+token.  Any hit means a module re-grew its own timing instead of reading
+``repro.obs.clock()`` — forking the time base the tracer spans, the latency
+histograms and the engines' wall accounting all share (the drift this
+refactor removed).  Docstrings and comments may *mention* perf_counter
+(they document the clock); only code tokens count.  ``src/repro/obs/``
+itself is exempt — it IS the clock.
+
+Run directly (``python tools/check_obs.py``) or through the tier-1 suite
+(``tests/test_check_obs.py``).  Exit 0 = clean, 1 = violations.
+"""
+from __future__ import annotations
+
+import io
+import pathlib
+import sys
+import tokenize
+from typing import List, Tuple
+
+REPO = pathlib.Path(__file__).resolve().parent.parent
+
+# Modules scoped to the check: the serving control plane — everything that
+# times requests or steps.  Benchmarks drive wall-clock measurement from the
+# outside and stay out of scope; repro/obs owns the clock and is exempt.
+SCOPED = [
+    "src/repro/serving/scheduler.py",
+    "src/repro/serving/replica.py",
+    "src/repro/serving/engine.py",
+    "src/repro/serving/spec_decode.py",
+    "src/repro/serving/paged_cache.py",
+    "src/repro/serving/state_pool.py",
+    "src/repro/serving/codec.py",
+    "src/repro/serving/kv_cache.py",
+]
+
+FORBIDDEN = "perf_counter"  # any NAME token (time.perf_counter or bare)
+
+
+def find_violations(text: str) -> List[int]:
+    """Line numbers where a code token spells ``perf_counter``."""
+    out: List[int] = []
+    for tok in tokenize.generate_tokens(io.StringIO(text).readline):
+        if tok.type == tokenize.NAME and tok.string == FORBIDDEN:
+            out.append(tok.start[0])
+    return out
+
+
+def run_check() -> List[Tuple[str, int]]:
+    bad: List[Tuple[str, int]] = []
+    for rel in SCOPED:
+        path = REPO / rel
+        text = path.read_text()
+        for line in find_violations(text):
+            bad.append((rel, line))
+    return bad
+
+
+def main() -> int:
+    bad = run_check()
+    if not bad:
+        print(f"check_obs: {len(SCOPED)} modules clean")
+        return 0
+    for rel, line in bad:
+        print(f"{rel}:{line}: direct perf_counter call — time through "
+              f"repro.obs.clock() so the tracer/histograms/wall accounting "
+              f"share one clock", file=sys.stderr)
+    return 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())
